@@ -1,0 +1,89 @@
+"""Shared harness for the paper-figure benchmarks (Figs 1-4, §IV).
+
+Experimental setup per the paper: MLP 784-64-10 (D=50890), U=10 workers,
+3000 training samples i.i.d.-split, receive SNR 10 dB, Rayleigh CN(0,1)
+channels, strongest attack (Thm 1), learning rate set via the scaled
+alpha_hat = (Omega/omega) * alpha.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import PAPER_MLP
+from repro.core import (
+    AttackConfig,
+    AttackType,
+    ChannelConfig,
+    FLOAConfig,
+    Policy,
+    PowerConfig,
+    first_n_mask,
+    noise_std_for_snr,
+)
+from repro.core import theory
+from repro.data import FederatedSampler, make_dataset, worker_split
+from repro.fl import FLTrainer
+from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+jax.config.update("jax_threefry_partitionable", True)
+
+
+@dataclasses.dataclass
+class Experiment:
+    name: str
+    policy: Policy
+    n_attackers: int = 0
+    alpha_hat: float = 0.1
+    attack: AttackType = AttackType.STRONGEST
+    attacker_sigma: Optional[float] = None  # None = same as honest (1.0)
+    rounds: int = 150
+    seed: int = 42
+
+
+def run_experiment(exp: Experiment, eval_every: int = 10) -> List:
+    mc = PAPER_MLP.full()
+    u, d = mc.num_workers, mc.dim
+    sigma = [exp.attacker_sigma if (exp.attacker_sigma is not None and
+                                    i < exp.n_attackers) else mc.sigma
+             for i in range(u)]
+    tp = theory.TheoryParams(num_workers=u, num_attackers=exp.n_attackers,
+                             dim=d, sigma=tuple(sigma), p_max=mc.p_max)
+    pol = "ef" if exp.policy == Policy.EF else exp.policy.value
+    alpha = theory.alpha_from_alpha_hat(tp, pol, exp.alpha_hat)
+
+    zstd = (0.0 if exp.policy == Policy.EF
+            else noise_std_for_snr(mc.p_max, d, mc.snr_db))
+    floa = FLOAConfig(
+        channel=ChannelConfig(num_workers=u, sigma=tuple(sigma),
+                              noise_std=zstd),
+        power=PowerConfig(num_workers=u, dim=d, p_max=mc.p_max,
+                          policy=exp.policy),
+        attack=AttackConfig(
+            attack=exp.attack if exp.n_attackers else AttackType.NONE,
+            byzantine_mask=first_n_mask(u, exp.n_attackers)),
+    )
+
+    x, y = make_dataset(mc.train_samples, seed=0)
+    xt, yt = make_dataset(mc.test_samples, seed=99)
+    shards = worker_split(x, y, u)
+    params = init_mlp(jax.random.PRNGKey(0))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+
+    tr = FLTrainer(
+        loss_fn=mlp_loss, floa=floa, alpha=alpha,
+        eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt_j, yt_j)},
+    )
+    sampler = FederatedSampler(shards, batch_per_worker=mc.batch_per_worker,
+                               seed=1)
+    _, logs = tr.run(params, sampler, exp.rounds, jax.random.PRNGKey(exp.seed),
+                     eval_every=eval_every)
+    return logs
+
+
+def print_csv(tag: str, exp: Experiment, logs: List) -> None:
+    for lg in logs:
+        print(f"{tag},{exp.name},{lg.step},{lg.loss:.5f},{lg.accuracy:.4f}")

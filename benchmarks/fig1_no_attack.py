@@ -1,0 +1,22 @@
+"""Fig. 1 — no Byzantine attacks: CI ≈ error-free (EF), BEV ~2% behind.
+
+Paper claims (§IV-A): CI matches EF; BEV converges slightly slower/worse
+(Remark 6: omega_BEV^2 <= Omega_BEV when N=0).
+CSV: fig,experiment,round,loss,accuracy
+"""
+from benchmarks.common import Experiment, Policy, print_csv, run_experiment
+
+
+def main(rounds: int = 150) -> dict:
+    out = {}
+    for name, pol in [("EF", Policy.EF), ("CI", Policy.CI), ("BEV", Policy.BEV)]:
+        exp = Experiment(name=name, policy=pol, n_attackers=0, alpha_hat=0.1,
+                         rounds=rounds)
+        logs = run_experiment(exp)
+        print_csv("fig1", exp, logs)
+        out[name] = logs
+    return out
+
+
+if __name__ == "__main__":
+    main()

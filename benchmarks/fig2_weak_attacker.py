@@ -1,0 +1,27 @@
+"""Fig. 2 — single WEAK attacker (lowest channel gain), alpha_hat ∈ {0.1,1,2}.
+
+Paper claims (§IV-B): both converge at alpha_hat<=1 (BEV faster at 1, since
+Omega_BEV > Omega_CI dominates at large lr); at alpha_hat=2 CI fails but BEV
+still converges; at 0.1 CI is slightly better.
+CSV: fig,experiment,round,loss,accuracy
+"""
+from benchmarks.common import Experiment, Policy, print_csv, run_experiment
+
+WEAK_SIGMA = 0.3  # attacker channel scale << honest sigma=1.0
+
+
+def main(rounds: int = 150) -> dict:
+    out = {}
+    for ah in (0.1, 1.0, 2.0):
+        for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]:
+            exp = Experiment(name=f"{name}@ah{ah}", policy=pol, n_attackers=1,
+                             alpha_hat=ah, attacker_sigma=WEAK_SIGMA,
+                             rounds=rounds)
+            logs = run_experiment(exp)
+            print_csv("fig2", exp, logs)
+            out[exp.name] = logs
+    return out
+
+
+if __name__ == "__main__":
+    main()

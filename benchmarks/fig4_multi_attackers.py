@@ -1,0 +1,24 @@
+"""Fig. 4 — N ∈ {1,2,3,4} random attackers (iso channels).
+
+Paper claims (§IV-D): with N < 4 both converge (slower as N grows); at N=4
+(> U/(1+sqrt(pi U)) = 1.51 for U=10) CI diverges while BEV (threshold U/2=5)
+still converges in the right direction, slower.
+CSV: fig,experiment,round,loss,accuracy
+"""
+from benchmarks.common import Experiment, Policy, print_csv, run_experiment
+
+
+def main(rounds: int = 150) -> dict:
+    out = {}
+    for n in (1, 2, 3, 4):
+        for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]:
+            exp = Experiment(name=f"{name}@N{n}", policy=pol, n_attackers=n,
+                             alpha_hat=0.1, rounds=rounds)
+            logs = run_experiment(exp)
+            print_csv("fig4", exp, logs)
+            out[exp.name] = logs
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: interpret-mode correctness + oracle wall-time.
+
+On this CPU host the Pallas kernels run in interpret mode, so wall-clock
+measures the ORACLE (jnp) path; the printed `derived` column is the max
+abs error of the kernel vs its oracle (the correctness contract that must
+hold before any TPU deployment).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    u, d = 16, 1 << 20
+    ks = jax.random.split(key, 4)
+    coeffs = jax.random.normal(ks[0], (u,))
+    grads = jax.random.normal(ks[1], (u, d), jnp.float32)
+    noise = jax.random.normal(ks[2], (d,))
+    bias, eps = jnp.float32(0.1), jnp.float32(0.7)
+    t = _timeit(ops.floa_aggregate_ref, coeffs, grads, noise, bias, eps)
+    got = ops.floa_aggregate(coeffs, grads, noise, bias, eps)
+    want = ops.floa_aggregate_ref(coeffs, grads, noise, bias, eps)
+    rows.append(("floa_aggregate_u16_d1M", t,
+                 float(jnp.max(jnp.abs(got - want)))))
+
+    t = _timeit(ops.grad_stats_ref, grads)
+    got, want = ops.grad_stats(grads), ops.grad_stats_ref(grads)
+    err = float(jnp.max(jnp.abs(got - want) / (jnp.abs(want) + 1.0)))  # relative
+    rows.append(("grad_stats_u16_d1M", t, err))
+
+    b, h, kv, hd, s = 4, 16, 8, 128, 8192
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    pos = jnp.int32(s - 1)
+    t = _timeit(ops.decode_attention_ref, q, k, v, pos)
+    err = float(jnp.max(jnp.abs(
+        ops.decode_attention(q, k, v, pos) - ops.decode_attention_ref(q, k, v, pos))))
+    rows.append(("decode_attention_b4_s8k", t, err))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""§Perf hillclimb harness: measure named (arch x shape x variant) combos with
+the same probe-extrapolated roofline methodology as the dry-run, so
+before/after deltas are apples-to-apples.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations deepseek_moe
+  PYTHONPATH=src python -m benchmarks.perf_iterations qwen_kv
+  PYTHONPATH=src python -m benchmarks.perf_iterations llava_prefill
+
+Each experiment prints CSV: experiment,variant,compute_s,memory_s,
+collective_s,dominant,temp_gb and appends a JSON record under
+results/perf/ for EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import dataclasses
+import json
+import sys
+
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import hlo_analysis as HA
+from repro.launch.dryrun import probe_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+
+
+def measure(cfg, shape_name, label, experiment):
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh()
+    art = make_step(cfg, mesh, shape_name, shape)
+    with mesh:
+        compiled = jax.jit(art.fn, in_shardings=art.in_shardings).lower(
+            *art.args).compile()
+    mem = compiled.memory_analysis()
+    flops, nbytes, coll = probe_costs(cfg, mesh, shape_name, shape)
+    terms = HA.roofline_terms(flops, nbytes, coll["total"])
+    temp_gb = (mem.temp_size_in_bytes or 0) / 1e9
+    rec = dict(experiment=experiment, variant=label, shape=shape_name,
+               arch=cfg.name, roofline=terms, dominant=HA.dominant(terms),
+               flops_per_device=flops, bytes_per_device=nbytes,
+               collectives=coll, temp_gb=temp_gb)
+    os.makedirs("results/perf", exist_ok=True)
+    with open(f"results/perf/{experiment}__{label}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"{experiment},{label},{terms['compute_s']:.4g},"
+          f"{terms['memory_s']:.4g},{terms['collective_s']:.4g},"
+          f"{HA.dominant(terms)},{temp_gb:.1f}", flush=True)
+    return rec
+
+
+def _reuse_dryrun_baseline(arch, shape_name, experiment, label):
+    """The sweep already measured the baseline with identical methodology."""
+    p = f"results/dryrun/{arch}__{shape_name}__single.json"
+    if not os.path.exists(p):
+        return False
+    with open(p) as f:
+        d = json.load(f)
+    t = d["roofline"]
+    rec = dict(experiment=experiment, variant=label, shape=shape_name,
+               arch=arch, roofline=t, dominant=d["dominant"],
+               flops_per_device=d["flops_per_device"],
+               bytes_per_device=d["bytes_per_device"],
+               collectives=d["collectives"],
+               temp_gb=(d["memory"]["temp_size"] or 0) / 1e9)
+    os.makedirs("results/perf", exist_ok=True)
+    with open(f"results/perf/{experiment}__{label}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"{experiment},{label},{t['compute_s']:.4g},{t['memory_s']:.4g},"
+          f"{t['collective_s']:.4g},{d['dominant']},{rec['temp_gb']:.1f}",
+          flush=True)
+    return True
+
+
+def deepseek_moe() -> None:
+    """Hillclimb 1 (compute term): dense-masked MoE -> capacity-gather."""
+    base = get_config("deepseek-v2-236b")
+    if not _reuse_dryrun_baseline("deepseek-v2-236b", "train_4k",
+                                  "deepseek_moe", "baseline_scan_dense"):
+        measure(base, "train_4k", "baseline_scan_dense", "deepseek_moe")
+    opt = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, impl="capacity_gather"))
+    measure(opt, "train_4k", "opt_capacity_gather", "deepseek_moe")
+
+
+def qwen_kv() -> None:
+    """Hillclimb (memory term): int8 KV cache for decode_32k."""
+    base = get_config("qwen3-4b")
+    measure(base, "decode_32k", "baseline_bf16_cache", "qwen_kv")
+    opt = dataclasses.replace(base, kv_cache_dtype="int8")
+    measure(opt, "decode_32k", "opt_int8_cache", "qwen_kv")
+
+
+def llava_prefill() -> None:
+    """Hillclimb (collective term): activation-sharding layout for prefill."""
+    base = get_config("llava-next-mistral-7b")
+    measure(base, "prefill_32k", "baseline_seqshard", "llava_prefill")
+    # variant wired via env consumed by launch.sharding (see make_constrain)
+    os.environ["REPRO_PREFILL_CONSTRAIN"] = "batch_only"
+    try:
+        measure(base, "prefill_32k", "opt_batch_only_residuals",
+                "llava_prefill")
+    finally:
+        os.environ.pop("REPRO_PREFILL_CONSTRAIN", None)
+
+
+EXPERIMENTS = dict(deepseek_moe=deepseek_moe, qwen_kv=qwen_kv,
+                   llava_prefill=llava_prefill)
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(EXPERIMENTS)
+    print("experiment,variant,compute_s,memory_s,collective_s,dominant,temp_gb")
+    for n in names:
+        EXPERIMENTS[n]()
+
+
+if __name__ == "__main__":
+    main()

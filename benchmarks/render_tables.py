@@ -1,0 +1,107 @@
+"""Render EXPERIMENTS.md tables from results/dryrun + results/perf JSONs.
+
+  PYTHONPATH=src python -m benchmarks.render_tables            # prints md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        out[(d.get("arch"), d.get("shape"), d.get("mesh"))] = d
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}"
+    return f"{x:.2e}"
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful | HBM GB/dev | move-the-bottleneck |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("moe", "train"): "capacity-gather dispatch cuts the E/top_k masked overcompute (see §Perf B1)",
+        ("memory_s", "decode"): "int8 KV cache halves the cache stream (§Perf B2)",
+        ("collective_s", "train"): "head-divisible sharding / fewer seq all-gathers (§Perf B3)",
+        ("collective_s", "prefill"): "batch-only residual layout removes per-layer seq gathers (§Perf B3)",
+        ("memory_s", "train"): "bytes-accessed is XLA's pre-fusion bound; fusion + remat tuning",
+        ("memory_s", "prefill"): "fused attention keeps scores out of HBM",
+        ("collective_s", "decode"): "sequence-sharded cache + partial-softmax combine",
+    }
+    for (arch, shape, mesh), d in sorted(recs.items()):
+        if mesh != "single":
+            continue
+        if d.get("status") == "skip":
+            lines.append(f"| {arch} | {shape} | - | - | - | skip | - | - | "
+                         f"{d.get('reason','')} |")
+            continue
+        if d.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | - | - | - | {d.get('status')} "
+                         f"| - | - | |")
+            continue
+        t = d["roofline"]
+        mem = d.get("memory") or {}
+        hbm = sum(v for v in (mem.get("argument_size"), mem.get("temp_size"),
+                              mem.get("output_size")) if v) / 1e9
+        ur = d.get("useful_ratio")
+        kind = "train" if shape.startswith("train") else (
+            "prefill" if shape.startswith("prefill") else "decode")
+        moe = d.get("n_active", 1) < d.get("n_params", 1)
+        hint = hints.get(("moe", kind)) if (moe and kind == "train") else None
+        hint = hint or hints.get((d["dominant"], kind), "")
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{d['dominant'].replace('_s','')} | "
+            f"{ur if ur is None else round(ur,3)} | {hbm:.1f} | {hint} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | single-pod | multi-pod | compile s/m | bytes/dev (arg+temp) |",
+        "|---|---|---|---|---|---|",
+    ]
+    archs = sorted({a for a, _, _ in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for a in archs:
+        for s in shapes:
+            d1 = recs.get((a, s, "single"))
+            d2 = recs.get((a, s, "multi"))
+            if d1 is None and d2 is None:
+                continue
+            st1 = d1.get("status") if d1 else "-"
+            st2 = d2.get("status") if d2 else "-"
+            cs = f"{d1.get('compile_s','-') if d1 else '-'}/" \
+                 f"{d2.get('compile_s','-') if d2 else '-'}"
+            mem = (d1 or d2).get("memory") or {}
+            gb = sum(v for v in (mem.get("argument_size"),
+                                 mem.get("temp_size")) if v) / 1e9
+            lines.append(f"| {a} | {s} | {st1} | {st2} | {cs} | {gb:.1f} GB |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = load("results/dryrun")
+    print("### Dry-run status (80 combos)\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline (single-pod, per step)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""§Roofline report: three-term roofline per (arch x shape) from dry-run JSON.
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and prints the
+table EXPERIMENTS.md §Roofline embeds: compute/memory/collective seconds per
+step, dominant term, MODEL_FLOPS, useful-compute ratio.
+CSV: arch,shape,mesh,compute_s,memory_s,collective_s,dominant,model_flops,
+     useful_ratio,hbm_gb_per_device
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(dirpath: str = "results/dryrun") -> None:
+    recs = load(dirpath)
+    if not recs:
+        print(f"# no dry-run records in {dirpath}; run "
+              f"`python -m repro.launch.dryrun --all` first")
+        return
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "model_flops,useful_ratio,hbm_gb_per_device,status")
+    for r in recs:
+        if r.get("status") != "ok":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},,,,,,,,{r['status']}")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory") or {}
+        hbm = sum(v for v in (mem.get("argument_size"), mem.get("temp_size"),
+                              mem.get("output_size")) if v) / 1e9
+        ur = r.get("useful_ratio")
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{t['compute_s']:.4g},{t['memory_s']:.4g},"
+              f"{t['collective_s']:.4g},{r['dominant']},"
+              f"{r['model_flops']:.4g},{ur if ur is None else round(ur, 3)},"
+              f"{hbm:.2f},ok")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

@@ -1,0 +1,61 @@
+"""Quickstart: the paper in 60 seconds.
+
+Trains the paper's MLP (784-64-10, D=50890) over a simulated wireless MAC
+with U=10 workers under three setups — error-free, CI, and BEV — then repeats
+with 3 Byzantine workers mounting the strongest attack (Thm 1).  Reproduces
+the paper's headline: CI ≈ EF when benign but collapses under attack; BEV
+pays ~2% benign accuracy for robustness.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.configs.registry import PAPER_MLP
+from repro.core import (
+    AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
+    first_n_mask, noise_std_for_snr,
+)
+from repro.core import theory
+from repro.data import FederatedSampler, make_dataset, worker_split
+from repro.fl import FLTrainer
+from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+
+def run(policy: Policy, n_attackers: int, rounds: int = 120) -> float:
+    mc = PAPER_MLP.full()
+    u, d = mc.num_workers, mc.dim
+    tp = theory.TheoryParams(num_workers=u, num_attackers=n_attackers, dim=d)
+    pol = "ef" if policy == Policy.EF else policy.value
+    alpha = theory.alpha_from_alpha_hat(tp, pol, alpha_hat=0.1)
+    floa = FLOAConfig(
+        channel=ChannelConfig(
+            num_workers=u, sigma=mc.sigma,
+            noise_std=0.0 if policy == Policy.EF
+            else noise_std_for_snr(mc.p_max, d, mc.snr_db)),
+        power=PowerConfig(num_workers=u, dim=d, p_max=mc.p_max, policy=policy),
+        attack=AttackConfig(
+            attack=AttackType.STRONGEST if n_attackers else AttackType.NONE,
+            byzantine_mask=first_n_mask(u, n_attackers)),
+    )
+    x, y = make_dataset(mc.train_samples, seed=0)
+    xt, yt = make_dataset(mc.test_samples, seed=99)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+    trainer = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha,
+                        eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt, yt)})
+    sampler = FederatedSampler(worker_split(x, y, u), mc.batch_per_worker)
+    _, logs = trainer.run(init_mlp(jax.random.PRNGKey(0)), sampler, rounds,
+                          jax.random.PRNGKey(1), eval_every=rounds - 1)
+    return logs[-1].accuracy
+
+
+if __name__ == "__main__":
+    print("== benign (no attackers) ==")
+    for pol in (Policy.EF, Policy.CI, Policy.BEV):
+        print(f"  {pol.value.upper():4s} test accuracy: {run(pol, 0):.3f}")
+    print("== 3 Byzantine workers, strongest attack (Thm 1) ==")
+    for pol in (Policy.CI, Policy.BEV):
+        print(f"  {pol.value.upper():4s} test accuracy: {run(pol, 3):.3f}")
+    print("-> BEV trades a sliver of benign accuracy for Byzantine robustness.")

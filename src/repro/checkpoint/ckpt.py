@@ -1,0 +1,105 @@
+"""Checkpointing: flat-npz format with pytree structure + sharding metadata.
+
+save(path, step, params, opt_state, extra) writes
+  <path>/ckpt_<step>.npz        flattened arrays keyed by pytree path
+  <path>/ckpt_<step>.meta.json  treedef repr, shapes/dtypes, partition specs
+restore() rebuilds the pytree; on a mesh the launcher device_puts each leaf
+with its recorded NamedSharding.  Atomic via tmp-file rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, Any]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(path: str, step: int, params, opt_state=None, extra: Optional[dict] = None,
+         specs=None) -> str:
+    os.makedirs(path, exist_ok=True)
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    flat = _flatten_with_paths(tree)
+
+    def to_np(v):
+        a = np.asarray(v)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = np.asarray(jax.numpy.asarray(v, jax.numpy.float32))
+        return a
+
+    arrays = {k: to_np(v) for k, v in flat.items()}
+    meta = {
+        "step": int(step),
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    if specs is not None:
+        meta["specs"] = {
+            k: [str(a) for a in (tuple(v) if v else ())]
+            for k, v in _flatten_with_paths({"params": specs}).items()
+        }
+    base = os.path.join(path, f"ckpt_{step}")
+    tmp = base + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, base + ".npz")
+    with open(base + ".meta.json.tmp", "w") as f:
+        json.dump(meta, f)
+    os.replace(base + ".meta.json.tmp", base + ".meta.json")
+    return base + ".npz"
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(f[len("ckpt_") : -len(".npz")])
+        for f in os.listdir(path)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, params_template, opt_template=None
+            ) -> Tuple[Any, Any, dict]:
+    base = os.path.join(path, f"ckpt_{step}")
+    with np.load(base + ".npz") as z:
+        flat = {k: z[k] for k in z.files}
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+    tmpl = {"params": params_template}
+    if opt_template is not None:
+        tmpl["opt_state"] = opt_template
+    # dtype-faithful restore: cast back to the template's dtype (bf16 etc.
+    # were stored widened to f32 — see save())
+    tree = _unflatten_like(tmpl, flat)
+    tree = jax.tree_util.tree_map(
+        lambda t, v: jax.numpy.asarray(v).astype(t.dtype), tmpl, tree
+    )
+    params = tree["params"]
+    opt_state = tree.get("opt_state") if opt_template is not None else None
+    return params, opt_state, meta

@@ -1,0 +1,8 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    ARCH_MODULES,
+    INPUT_SHAPES,
+    get_config,
+    get_smoke,
+    shape_applicable,
+)

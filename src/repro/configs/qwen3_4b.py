@@ -1,0 +1,39 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family] — dense GQA with qk-norm, head_dim 128.
+
+Full attention natively; long_500k uses the explicit 8192 SWA variant.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ARCH_ID = "qwen3-4b"
+
+
+def full(model_parallel: int = 16) -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        n_layers=36,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=9728,
+        vocab_size=151936,
+        qk_norm=True,
+        long_context_window=8192,
+        rope_theta=1e6,
+        dtype=jnp.bfloat16,
+        model_parallel=model_parallel,
+        citation="hf:Qwen/Qwen3-8B — qk_norm, GQA kv=8",
+    )
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        full(model_parallel=1),
+        n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=512, vocab_size=512, dtype=jnp.float32, remat=False,
+    )

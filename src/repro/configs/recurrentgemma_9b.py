@@ -1,0 +1,44 @@
+"""RecurrentGemma-9B [arXiv:2402.19427] — Griffin hybrid: RG-LRU + local attn.
+
+38 layers in a 2:1 (recurrent, recurrent, local-attention) pattern
+(12 scanned repeats + 2 RG-LRU tail blocks), MQA kv=1, local window 2048.
+long_500k runs natively (constant recurrent state + 2048-window cache).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ARCH_ID = "recurrentgemma-9b"
+
+
+def full(model_parallel: int = 16) -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256000,
+        block_pattern=("rglru", "rglru", "local_attn"),
+        local_window=2048,
+        rglru_width=4096,
+        rope_theta=1e4,
+        dtype=jnp.bfloat16,
+        model_parallel=model_parallel,
+        citation="arXiv:2402.19427 (Griffin/RecurrentGemma) — RG-LRU + "
+                 "local attn 1:2, MQA kv=1",
+    )
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        full(model_parallel=1),
+        n_layers=5, d_model=128, n_heads=4, n_kv_heads=1, head_dim=32,
+        d_ff=256, vocab_size=512, local_window=32, rglru_width=128,
+        dtype=jnp.float32, remat=False,
+    )

@@ -1,0 +1,61 @@
+"""Architecture registry: --arch <id> -> config module.
+
+Every assigned architecture (10, spanning 6 families) plus the paper's own
+MLP.  Each module exposes full(model_parallel) and smoke().
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import (
+    deepseek_v2_236b,
+    granite_8b,
+    llama4_maverick_400b_a17b,
+    llava_next_mistral_7b,
+    mamba2_1_3b,
+    moonshot_v1_16b_a3b,
+    paper_mlp,
+    qwen3_4b,
+    recurrentgemma_9b,
+    seamless_m4t_large_v2,
+    starcoder2_3b,
+)
+
+ARCH_MODULES: Dict[str, object] = {
+    m.ARCH_ID: m
+    for m in [
+        starcoder2_3b,
+        llava_next_mistral_7b,
+        moonshot_v1_16b_a3b,
+        mamba2_1_3b,
+        deepseek_v2_236b,
+        qwen3_4b,
+        recurrentgemma_9b,
+        granite_8b,
+        llama4_maverick_400b_a17b,
+        seamless_m4t_large_v2,
+    ]
+}
+
+ARCH_IDS = list(ARCH_MODULES)
+PAPER_MLP = paper_mlp
+
+# The assigned input shapes (system spec).
+INPUT_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def get_config(arch: str, model_parallel: int = 16):
+    return ARCH_MODULES[arch].full(model_parallel=model_parallel)
+
+
+def get_smoke(arch: str):
+    return ARCH_MODULES[arch].smoke()
+
+
+def shape_applicable(cfg, shape_name: str) -> bool:
+    return shape_name not in cfg.skip_shapes

@@ -1,0 +1,38 @@
+"""StarCoder2-3B [arXiv:2402.19173] — dense GQA code LM with native 4096
+sliding-window attention and RoPE.  24 heads do not divide the 16-way model
+axis, so attention weights shard on the d_model contraction dim (DESIGN.md §4).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ARCH_ID = "starcoder2-3b"
+
+
+def full(model_parallel: int = 16) -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        n_layers=30,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=12288,
+        vocab_size=49152,
+        window=4096,                      # native SWA -> long_500k runs as-is
+        rope_theta=1e5,
+        dtype=jnp.bfloat16,
+        model_parallel=model_parallel,
+        citation="arXiv:2402.19173 (StarCoder2), GQA kv=2, SWA 4096, RoPE",
+    )
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        full(model_parallel=1),
+        n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=512, vocab_size=512, window=64, dtype=jnp.float32, remat=False,
+    )

@@ -1,0 +1,18 @@
+"""Core FLOA library: the paper's contribution as composable JAX modules."""
+from repro.core.aggregation import (
+    FLOAConfig,
+    aggregate,
+    floa_grad,
+    mean_aggregate,
+    per_worker_grads,
+)
+from repro.core.attacks import AttackConfig, AttackType, first_n_mask
+from repro.core.channel import ChannelConfig, noise_std_for_snr, sample_channel_gains
+from repro.core.power_control import Policy, PowerConfig
+
+__all__ = [
+    "FLOAConfig", "aggregate", "floa_grad", "mean_aggregate", "per_worker_grads",
+    "AttackConfig", "AttackType", "first_n_mask",
+    "ChannelConfig", "noise_std_for_snr", "sample_channel_gains",
+    "Policy", "PowerConfig",
+]

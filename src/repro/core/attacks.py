@@ -1,0 +1,133 @@
+"""Byzantine attack models (paper §III-B, Thm 1).
+
+The strongest attack (Thm 1): attacker n computes its own honest gradient
+g_{n,t} on its local data, then transmits
+
+    ghat_{n,t} = -g_{n,t}                                   (eq. 17)
+    phat_{n,t} = sqrt( p_n^max / (D (gbar_t^2 + eps_t^2)) ) (eq. 18)
+
+i.e. the sign-flipped *unstandardized* gradient at the maximum power allowed by
+the power accounting E[||phat ghat||^2] = phat^2 D (eps_t^2 + gbar_t^2) <= p^max
+(eq. 32).  Crucially the attackers report *truthful* scalar stats during the
+standardization round (to stay undetected), so gbar_t / eps_t are clean.
+
+Plugging into the received signal (eq. 7), worker n's total contribution to the
+de-standardized aggregate is
+
+    - eps_t * phat_n |h_n| * g_{n,t}    (sign-flipped payload)
+    + p_n |h_n| * gbar_t * 1            (PS's de-standardization bias: the PS
+                                         *assumes* worker n used protocol power
+                                         p_n and standardized transmission)
+
+Ablation attacks (beyond the paper's worst case, for experiments):
+  GAUSSIAN: transmit white noise at max power (unstructured jamming).
+  SIGN_FLIP_PROTOCOL_POWER: -g at the *protocol* (standardized) power — a naive
+    attacker that follows the power accounting of honest workers.
+  NONE: behave honestly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelConfig
+from repro.core.power_control import PowerConfig, transmit_amplitudes
+
+Array = jax.Array
+
+
+class AttackType(str, enum.Enum):
+    NONE = "none"
+    STRONGEST = "strongest"  # Thm 1: sign flip at max accounting power
+    SIGN_FLIP_PROTOCOL_POWER = "sign_flip_protocol_power"
+    GAUSSIAN = "gaussian"
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    """byzantine_mask: tuple of U bools, True = worker is Byzantine."""
+
+    attack: AttackType = AttackType.NONE
+    byzantine_mask: Tuple[bool, ...] = ()
+
+    @property
+    def num_attackers(self) -> int:
+        return int(sum(self.byzantine_mask))
+
+    def mask(self) -> Array:
+        return jnp.asarray(self.byzantine_mask, dtype=bool)
+
+
+def first_n_mask(num_workers: int, n: int) -> Tuple[bool, ...]:
+    return tuple(i < n for i in range(num_workers))
+
+
+def strongest_attack_amplitude(
+    p_max: Array, dim: int, gbar: Array, eps2: Array
+) -> Array:
+    """phat_n of eq. (18).  p_max [U] (or scalar), gbar/eps2 round scalars."""
+    return jnp.sqrt(p_max / (float(dim) * (gbar**2 + eps2)))
+
+
+def signed_coefficients(
+    h_abs: Array,
+    power: PowerConfig,
+    channel: ChannelConfig,
+    attack: AttackConfig,
+    gbar: Array,
+    eps2: Array,
+) -> Tuple[Array, Array]:
+    """Per-worker signed payload coefficients + de-standardization bias weight.
+
+    Returns (s, bias_w):
+      s[i]      multiplies worker i's raw gradient g_i in the aggregate:
+                  honest:  p_i |h_i|                    (eq. 7, first term)
+                  strongest attacker: -eps_t phat_n |h_n|  (eq. 7, second term,
+                                                          with ghat = -g)
+      bias_w    scalar sum_{n in attackers} p_n |h_n| multiplying gbar_t * 1
+                (eq. 7, third term; honest workers' gbar terms cancel exactly
+                in the de-standardization, attackers' do not because they did
+                not actually standardize).
+    For GAUSSIAN attackers s[n] = 0 (their payload carries no gradient); the
+    caller injects their jamming noise separately via `gaussian_jam_std`.
+    """
+    eps = jnp.sqrt(eps2)
+    honest_s = transmit_amplitudes(h_abs, power, channel) * h_abs
+    mask = attack.mask()
+    if attack.attack == AttackType.NONE or attack.num_attackers == 0:
+        return honest_s, jnp.zeros(())
+
+    if attack.attack == AttackType.STRONGEST:
+        phat = strongest_attack_amplitude(power.p_maxes(), power.dim, gbar, eps2)
+        attacker_s = -eps * phat * h_abs
+    elif attack.attack == AttackType.SIGN_FLIP_PROTOCOL_POWER:
+        attacker_s = -honest_s
+    elif attack.attack == AttackType.GAUSSIAN:
+        attacker_s = jnp.zeros_like(honest_s)
+    else:
+        raise ValueError(f"unknown attack {attack.attack}")
+
+    s = jnp.where(mask, attacker_s, honest_s)
+    # The PS de-standardizes assuming every worker used protocol power p_i.
+    bias_w = jnp.sum(jnp.where(mask, honest_s, 0.0))
+    if attack.attack == AttackType.SIGN_FLIP_PROTOCOL_POWER:
+        # These attackers DO standardize (just flip sign), so their gbar term
+        # cancels the PS bias exactly as for honest workers.
+        bias_w = jnp.zeros(())
+    return s, bias_w
+
+
+def gaussian_jam_std(
+    h_abs: Array, power: PowerConfig, attack: AttackConfig, eps2: Array
+) -> Array:
+    """Std of the extra white noise injected by GAUSSIAN attackers, post
+    de-standardization (scaled by eps_t like any received symbol)."""
+    if attack.attack != AttackType.GAUSSIAN or attack.num_attackers == 0:
+        return jnp.zeros(())
+    mask = attack.mask()
+    amp = jnp.sqrt(power.p_maxes() / float(power.dim)) * h_abs  # max power jam
+    return jnp.sqrt(eps2 * jnp.sum(jnp.where(mask, amp, 0.0) ** 2))

@@ -1,0 +1,77 @@
+"""Wireless channel model for FLOA (paper §II-B).
+
+Block Rayleigh fading: the channel gain of worker i at round t is
+|h_{i,t}| ~ Rayleigh(scale=sigma_i), i.e. h ~ CN(0, 2 sigma_i^2) with
+E[|h|]   = sigma_i * sqrt(pi/2)          (used in Thm 2/3, eqs. 21/25)
+E[|h|^2] = 2 sigma_i^2                   (so |h|^2 ~ Exp(mean 2 sigma_i^2),
+                                          lambda_i = 1/(2 sigma_i^2), paper §II-B.1)
+
+Channels are resampled independently every round (block fading) and are known
+perfectly at workers and PS (perfect CSI; the phase is pre-compensated at the
+workers so only |h| matters — exactly the paper's model).
+
+AWGN: z_t ~ N(0, z^2 I_D) added to the received superposition.  The paper sets
+the receive SNR via p_max/(D z^2) = 10 dB; `noise_std_for_snr` inverts that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Static description of the multiple-access channel.
+
+    sigma: per-worker Rayleigh scale sigma_i (scalar broadcast or [U] vector).
+    noise_std: AWGN std z (per received symbol).
+    """
+
+    num_workers: int
+    sigma: Union[float, tuple] = 1.0
+    noise_std: float = 0.0
+
+    def sigmas(self) -> Array:
+        s = jnp.asarray(self.sigma, dtype=jnp.float32)
+        return jnp.broadcast_to(s, (self.num_workers,))
+
+
+def sample_channel_gains(key: Array, cfg: ChannelConfig) -> Array:
+    """Draw |h_{i,t}| for all U workers for one round.  Shape [U].
+
+    |h| = sigma * sqrt(2 * E) with E ~ Exp(1)  (so |h|^2 ~ Exp(mean 2 sigma^2)).
+    """
+    e = jax.random.exponential(key, (cfg.num_workers,), dtype=jnp.float32)
+    return cfg.sigmas() * jnp.sqrt(2.0 * e)
+
+
+def expected_abs_gain(cfg: ChannelConfig) -> Array:
+    """E[|h_i|] = sigma_i sqrt(pi/2), vector [U]."""
+    return cfg.sigmas() * jnp.sqrt(jnp.pi / 2.0)
+
+
+def expected_sq_gain(cfg: ChannelConfig) -> Array:
+    """E[|h_i|^2] = 2 sigma_i^2, vector [U]."""
+    return 2.0 * cfg.sigmas() ** 2
+
+
+def expected_min_sq_gain(cfg: ChannelConfig) -> Array:
+    """E[min_i |h_i|^2] = 1 / sum_i lambda_i with lambda_i = 1/(2 sigma_i^2).
+
+    This is the `lambda` used by the CI scaling factor b0^2 = P0_max * lambda
+    (paper eq. 9-10): the minimum of independent exponentials is exponential
+    with rate = sum of rates.
+    """
+    lam = 1.0 / (2.0 * cfg.sigmas() ** 2)
+    return 1.0 / jnp.sum(lam)
+
+
+def noise_std_for_snr(p_max: float, dim: int, snr_db: float) -> float:
+    """Solve p_max / (D z^2) = SNR for z (paper §IV: SNR = 10 dB)."""
+    snr = 10.0 ** (snr_db / 10.0)
+    return float((p_max / (dim * snr)) ** 0.5)

@@ -1,0 +1,101 @@
+"""Digital-FL Byzantine-robust aggregation baselines (paper §I related work).
+
+The paper's motivation: screening defenses (median/Krum/...) need *individual*
+local gradients, which analog aggregation hides — so they cannot be applied to
+FLOA.  We implement them anyway for the *digital* comparison mode (per-worker
+gradients explicitly gathered), so experiments can quantify the robustness /
+communication-cost trade-off the paper argues about:
+
+  coordinate-wise median           [Yin et al. 2018]
+  coordinate-wise trimmed mean     [Yin et al. 2018]
+  Krum / Multi-Krum                [Blanchard et al. 2017]
+  geometric median (Weiszfeld)     [Minsker 2015 / RFA]
+
+All operate on stacked per-worker gradient pytrees [U, ...] and are jit-safe.
+NOTE: in digital mode the [U, ...] stack must be gathered (an all-gather over
+"data" instead of FLOA's all-reduce) — exactly the communication overhead the
+paper's analog scheme avoids; the roofline benchmarks expose the difference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _flatten_u(grads_u):
+    """[U, ...] pytree -> ([U, D] matrix, unravel fn)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads_u)
+    u = leaves[0].shape[0]
+    flat = jnp.concatenate([x.reshape(u, -1).astype(jnp.float32) for x in leaves], axis=1)
+
+    def unravel(vec):
+        out, off = [], 0
+        for x in leaves:
+            n = int(x.size) // u
+            out.append(vec[off : off + n].reshape(x.shape[1:]).astype(x.dtype))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unravel
+
+
+def coordinate_median(grads_u):
+    flat, unravel = _flatten_u(grads_u)
+    return unravel(jnp.median(flat, axis=0))
+
+
+def trimmed_mean(grads_u, trim: int = 1):
+    """Remove the `trim` largest and smallest per coordinate, then mean."""
+    flat, unravel = _flatten_u(grads_u)
+    u = flat.shape[0]
+    assert 2 * trim < u, "trim too large"
+    srt = jnp.sort(flat, axis=0)
+    return unravel(jnp.mean(srt[trim : u - trim], axis=0))
+
+
+def krum(grads_u, num_byzantine: int, multi: int = 1):
+    """(Multi-)Krum: score_i = sum of the U-f-2 smallest sq-distances to others;
+    average the `multi` lowest-scoring workers' gradients."""
+    flat, unravel = _flatten_u(grads_u)
+    u = flat.shape[0]
+    closest = max(u - num_byzantine - 2, 1)
+    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)  # [U,U]
+    d2 = d2 + jnp.eye(u) * jnp.inf  # exclude self
+    nearest = jnp.sort(d2, axis=1)[:, :closest]
+    scores = jnp.sum(nearest, axis=1)
+    sel = jnp.argsort(scores)[:multi]
+    return unravel(jnp.mean(flat[sel], axis=0))
+
+
+def geometric_median(grads_u, iters: int = 8, eps: float = 1e-8):
+    """Weiszfeld iterations for the geometric median."""
+    flat, unravel = _flatten_u(grads_u)
+
+    def body(z, _):
+        w = 1.0 / jnp.maximum(jnp.linalg.norm(flat - z, axis=1), eps)  # [U]
+        z = jnp.sum(w[:, None] * flat, axis=0) / jnp.sum(w)
+        return z, None
+
+    z0 = jnp.mean(flat, axis=0)
+    z, _ = jax.lax.scan(body, z0, None, length=iters)
+    return unravel(z)
+
+
+DEFENSES: Dict[str, Callable] = {
+    "median": coordinate_median,
+    "trimmed_mean": trimmed_mean,
+    "krum": krum,
+    "geometric_median": geometric_median,
+    "mean": lambda g: jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), g),
+}
+
+
+def digital_aggregate(grads_u, defense: str = "mean", **kw):
+    """Gather-based digital aggregation with a named defense."""
+    fn = DEFENSES[defense]
+    return fn(grads_u, **kw) if kw else fn(grads_u)

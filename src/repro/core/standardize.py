@@ -1,0 +1,70 @@
+"""Gradient standardization for analog transmission (paper §II-B, eq. 3 & 7).
+
+Before each round every worker estimates the scalar mean/variance of its own
+gradient (over the D entries), the PS averages them into global stats
+(gbar_t, eps_t^2), broadcasts them back, and workers transmit
+
+    gtilde_i = (g_i - gbar_t * 1) / eps_t .                  (eq. 3)
+
+The PS de-standardizes the received superposition y_t as
+
+    gagg = eps_t * y_t + (sum_i p_i |h_i|) * gbar_t * 1 .    (eq. 7)
+
+For honest workers the two gbar terms cancel per worker, leaving
+sum_m p_m|h_m| g_m; attackers' terms do not cancel (see attacks.py).
+
+All helpers operate on gradient *pytrees* so they compose with arbitrary model
+parameter structures; stats are computed with f32 accumulators and lower to a
+handful of scalar all-reduces on a sharded mesh (the paper assumes this side
+channel is noise-free — two symbols per round).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar entries D across all leaves (static)."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def per_worker_scalar_stats(grads_u) -> Tuple[Array, Array]:
+    """(gbar_i, eps2_i) per worker from stacked per-worker gradients.
+
+    grads_u: pytree whose leaves have a leading U axis ([U, ...]).
+    Returns gbar [U] and eps2 [U] — the per-worker mean and (biased) variance
+    of the D gradient entries, exactly the stats workers report in §II-B.
+    """
+    leaves = jax.tree_util.tree_leaves(grads_u)
+    u = leaves[0].shape[0]
+    d = sum(int(x.size) // u for x in leaves)
+    s1 = sum(jnp.sum(x.astype(jnp.float32).reshape(u, -1), axis=1) for x in leaves)
+    s2 = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)).reshape(u, -1), axis=1)
+        for x in leaves
+    )
+    gbar = s1 / d
+    eps2 = jnp.maximum(s2 / d - gbar**2, 1e-20)
+    return gbar, eps2
+
+
+def global_stats(gbar_i: Array, eps2_i: Array) -> Tuple[Array, Array]:
+    """PS-side averaging: gbar_t = mean_i gbar_i, eps_t^2 = mean_i eps2_i."""
+    return jnp.mean(gbar_i), jnp.mean(eps2_i)
+
+
+def standardize(tree, gbar: Array, eps2: Array):
+    """eq. (3): (g - gbar 1) / eps, elementwise over the pytree."""
+    inv = jax.lax.rsqrt(eps2)
+    return jax.tree_util.tree_map(lambda g: (g - gbar) * inv, tree)
+
+
+def destandardize(tree, coeff_sum: Array, gbar: Array, eps2: Array):
+    """eq. (7): eps * y + coeff_sum * gbar * 1, elementwise over the pytree."""
+    eps = jnp.sqrt(eps2)
+    return jax.tree_util.tree_map(lambda y: eps * y + coeff_sum * gbar, tree)

@@ -1,0 +1,3 @@
+from repro.fl.trainer import FLTrainer, RoundLog
+
+__all__ = ["FLTrainer", "RoundLog"]

@@ -1,0 +1,101 @@
+"""GQA decode-attention kernel (flash-decoding): one query token, long KV.
+
+The serve-shape hot spot (decode_32k / long_500k): attention of a single new
+token against an S-long KV cache is pure memory streaming (read K+V once,
+~4 flops/byte), so the kernel's job is to keep the stream dense and the
+softmax online so no [S]-sized score tensor ever hits HBM.
+
+Tiling: grid (B, S/TILE_S).  Per batch row the KV stream is swept in TILE_S
+(=512) slabs; running (m, l, acc) online-softmax state lives in VMEM scratch
+and persists across the S-sweep (TPU grid is sequential-minor, so the state
+is private to each batch row).  VMEM per step: 2 * TILE_S * KV * dh bf16
+(e.g. 512*8*128*2*2 = 2 MiB for KV=8, dh=128) + O(H*dh) state.
+
+The mask `kpos <= pos` makes the same kernel serve both dense caches and the
+ring-buffer windows (callers pass per-slot positions via `kpos`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+TILE_S = 512
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    si = pl.program_id(1)
+    n_s = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[:] = jnp.full_like(m_ref, -1e30)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                    # [H, dh]
+    k = k_ref[0]                                    # [TS, KV, dh]
+    v = v_ref[0]
+    h, dh = q.shape
+    ts, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(kvh, g, dh)
+
+    s = jnp.einsum("kgd,skd->kgs", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / (dh ** 0.5))
+    kpos = si * ts + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ts), 2)
+    s = jnp.where(kpos <= pos_ref[0, 0], s, -1e30)
+
+    m_prev, l_prev, acc_prev = m_ref[:], l_ref[:], acc_ref[:]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    scale = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])               # [KV,G,TS]
+    l_new = l_prev * scale + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * scale[..., None] + jnp.einsum(
+        "kgs,skd->kgd", p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[:], l_ref[:], acc_ref[:] = m_new, l_new, acc_new
+
+    @pl.when(si == n_s - 1)
+    def _emit():
+        out = acc_ref[:] / jnp.maximum(l_ref[:], 1e-30)[..., None]
+        o_ref[0] = out.reshape(h, dh).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_s"))
+def decode_attention(q: Array, k: Array, v: Array, pos: Array,
+                     interpret: bool = False, tile_s: int = TILE_S) -> Array:
+    """q [B,H,dh]; k/v [B,S,KV,dh]; pos scalar int32 -> [B,H,dh]."""
+    b, h, dh = q.shape
+    s_len, kvh = k.shape[1], k.shape[2]
+    if s_len % tile_s:
+        pad = tile_s - s_len % tile_s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_len = k.shape[1]
+    g = h // kvh
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b, s_len // tile_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, si: (0, 0)),
+            pl.BlockSpec((1, h, dh), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, tile_s, kvh, dh), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, tile_s, kvh, dh), lambda bi, si: (bi, si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda bi, si: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, g), jnp.float32),
+            pltpu.VMEM((kvh, g), jnp.float32),
+            pltpu.VMEM((kvh, g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v)

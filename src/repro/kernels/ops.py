@@ -1,0 +1,42 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU hosts (this container) `interpret=True` executes the kernel bodies in
+Python for correctness validation; on TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.floa_aggregate import floa_aggregate as _floa_aggregate
+from repro.kernels.grad_stats import grad_stats as _grad_stats
+
+Array = jax.Array
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def floa_aggregate(coeffs, grads, noise, bias, eps, interpret=None) -> Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    return _floa_aggregate(coeffs, grads, noise, jnp.asarray(bias),
+                           jnp.asarray(eps), interpret=interpret)
+
+
+def grad_stats(grads, interpret=None) -> Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    return _grad_stats(grads, interpret=interpret)
+
+
+def decode_attention(q, k, v, pos, interpret=None) -> Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    return _decode_attention(q, k, v, pos, interpret=interpret)
+
+
+# oracles re-exported for tests/benchmarks
+floa_aggregate_ref = ref.floa_aggregate_ref
+grad_stats_ref = ref.grad_stats_ref
+decode_attention_ref = ref.decode_attention_ref

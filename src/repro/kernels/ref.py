@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def floa_aggregate_ref(coeffs: Array, grads: Array, noise: Array,
+                       bias: Array, eps: Array) -> Array:
+    """out[d] = sum_u coeffs[u] grads[u,d] + bias + eps * noise[d].
+
+    coeffs [U] f32, grads [U, D], noise [D], bias/eps scalars.  f32 accumulate.
+    """
+    acc = jnp.einsum("u,ud->d", coeffs.astype(jnp.float32),
+                     grads.astype(jnp.float32))
+    return (acc + bias + eps * noise.astype(jnp.float32)).astype(grads.dtype)
+
+
+def grad_stats_ref(grads: Array) -> Array:
+    """Per-worker [U, 2] f32: (sum_d g, sum_d g^2) — the eq. (3) stats."""
+    g = grads.astype(jnp.float32)
+    return jnp.stack([jnp.sum(g, axis=1), jnp.sum(g * g, axis=1)], axis=1)
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, pos: Array) -> Array:
+    """GQA decode: one query token vs a KV cache.
+
+    q [B,H,dh]; k/v [B,S,KV,dh]; pos scalar int (positions > pos are masked).
+    Returns [B,H,dh].  Softmax in f32.
+    """
+    b, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dh)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    valid = jnp.arange(s) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, h, dh)

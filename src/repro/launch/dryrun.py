@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun   # orchestrates
+                                                             # subprocesses
+Single-combo mode runs in-process and writes one JSON; --all spawns one
+subprocess per combo (isolates compile memory, survives individual failures).
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, shape_applicable
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+
+
+def _reduced_layers(cfg, units: int):
+    """Config with `units` scan repeats, fully unrolled for analysis (XLA
+    cost analysis counts while-loop bodies once, so probes must be loop-free —
+    layers, attention q-chunks, SSD chunks and expert scans all unroll)."""
+    import dataclasses
+    if cfg.encdec is not None:
+        ed = dataclasses.replace(cfg.encdec, n_enc_layers=units,
+                                 n_dec_layers=units)
+        return dataclasses.replace(cfg, encdec=ed, n_layers=2 * units,
+                                    unroll_for_analysis=True)
+    return dataclasses.replace(cfg, n_layers=units * len(cfg.block_pattern),
+                               unroll_for_analysis=True)
+
+
+def _units_full(cfg) -> float:
+    if cfg.encdec is not None:
+        return float(cfg.encdec.n_enc_layers)  # enc & dec probed together
+    return cfg.n_layers / len(cfg.block_pattern)
+
+
+def _measure(cfg, mesh, shape_name, shape):
+    art = make_step(cfg, mesh, shape_name, shape)
+    with mesh:
+        compiled = jax.jit(art.fn, in_shardings=art.in_shardings).lower(
+            *art.args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = HA.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def probe_costs(cfg, mesh, shape_name, shape):
+    """XLA counts while-loop bodies ONCE (known_trip_count is metadata only),
+    so per-layer costs are extrapolated from 1-unit and 2-unit probes:
+    f(L) = base + L*body, with body = f(2)-f(1).  Exact for the homogeneous
+    scanned stacks; the few tail blocks are attributed at body-unit rate."""
+    f1, b1, c1 = _measure(_reduced_layers(cfg, 1), mesh, shape_name, shape)
+    f2, b2, c2 = _measure(_reduced_layers(cfg, 2), mesh, shape_name, shape)
+    n = _units_full(cfg)
+
+    def ext(v1, v2):
+        body = v2 - v1
+        return max(v1 - body, 0.0) + body * n
+
+    coll = {k: ext(c1[k], c2[k]) for k in c1}
+    return ext(f1, f2), ext(b1, b2), coll
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> dict:
+    cfg = get_config(arch, model_parallel=16)
+    shape = INPUT_SHAPES[shape_name]
+    if not shape_applicable(cfg, shape_name):
+        rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind, status="skip",
+                   reason=f"{arch} skips {shape_name} (see DESIGN.md §5)")
+        _write(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    art = make_step(cfg, mesh, shape_name, shape)
+    with mesh:
+        lowered = jax.jit(
+            art.fn, in_shardings=art.in_shardings
+        ).lower(*art.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    raw_coll = HA.collective_bytes(hlo)
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+
+    # layer-extrapolated costs (XLA counts while bodies once; see probe_costs).
+    # The §Roofline table is single-pod by spec, so multi-pod combos skip the
+    # (expensive, unrolled) probes — they prove lower+compile+memory only.
+    if mesh_kind == "single":
+        flops, nbytes, coll = probe_costs(cfg, mesh, shape_name, shape)
+    else:
+        flops, nbytes, coll = raw_flops, raw_bytes, raw_coll
+    terms = HA.roofline_terms(flops, nbytes, coll["total"])
+    n_params = art.meta["dim"]
+    n_active = HA.active_params(cfg, n_params)
+    mflops = HA.model_flops(cfg, shape, n_params, n_active)
+    chips = mesh.devices.size
+
+    rec = dict(
+        arch=arch, shape=shape_name, mesh=mesh_kind, status="ok",
+        chips=chips,
+        n_params=n_params, n_active=n_active,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        flops_per_device=flops, bytes_per_device=nbytes,
+        raw_module=dict(flops=raw_flops, bytes=raw_bytes,
+                        collectives=raw_coll),
+        collectives=coll,
+        roofline=terms,
+        dominant=HA.dominant(terms),
+        model_flops=mflops,
+        model_flops_per_device=mflops / chips,
+        useful_ratio=(mflops / chips) / flops if flops else None,
+        memory=dict(
+            argument_size=getattr(mem, "argument_size_in_bytes", None),
+            output_size=getattr(mem, "output_size_in_bytes", None),
+            temp_size=getattr(mem, "temp_size_in_bytes", None),
+            generated_code_size=getattr(mem, "generated_code_size_in_bytes", None),
+        ),
+        meta=art.meta,
+    )
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    dom = rec.get("dominant", "-")
+    print(f"[dryrun] {rec['arch']:28s} {rec['shape']:12s} {rec['mesh']:6s} "
+          f"{rec['status']:4s} dominant={dom} "
+          f"compile={rec.get('compile_s', '-')}s", flush=True)
+
+
+def orchestrate(out_dir: str, meshes, archs, shapes, timeout: int) -> int:
+    fails = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}.json")
+                if os.path.exists(path):
+                    continue  # resumable
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                       "--out", out_dir]
+                try:
+                    r = subprocess.run(cmd, timeout=timeout,
+                                       capture_output=True, text=True)
+                    if r.returncode != 0:
+                        fails += 1
+                        err = (r.stdout + r.stderr)[-3000:]
+                        with open(path, "w") as f:
+                            json.dump(dict(arch=arch, shape=shape,
+                                           mesh=mesh_kind, status="fail",
+                                           error=err), f, indent=1)
+                        print(f"[dryrun] FAIL {arch} {shape} {mesh_kind}:\n{err}",
+                              flush=True)
+                    else:
+                        print(r.stdout.strip().splitlines()[-1]
+                              if r.stdout.strip() else "", flush=True)
+                except subprocess.TimeoutExpired:
+                    fails += 1
+                    with open(path, "w") as f:
+                        json.dump(dict(arch=arch, shape=shape, mesh=mesh_kind,
+                                       status="timeout"), f, indent=1)
+                    print(f"[dryrun] TIMEOUT {arch} {shape} {mesh_kind}",
+                          flush=True)
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    if args.all:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+        fails = orchestrate(args.out, args.meshes.split(","), archs, shapes,
+                            args.timeout)
+        sys.exit(1 if fails else 0)
+
+    assert args.arch and args.shape
+    try:
+        run_one(args.arch, args.shape, args.mesh, args.out)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

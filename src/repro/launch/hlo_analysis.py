@@ -1,0 +1,116 @@
+"""Roofline terms from a compiled (SPMD-partitioned) module.
+
+cost_analysis() gives HLO FLOPs/bytes for the per-device partitioned module;
+collective bytes are NOT in cost_analysis, so we parse the compiled HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+
+Hardware constants (TPU v5e, system spec): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.  %ar = bf16[16,256]{1,0} all-reduce(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<dims>[\d,]*)\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result-shape bytes per collective op kind (per device).
+
+    '-start' variants are counted, '-done' skipped (same transfer).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = None
+        for op in _COLLECTIVES:
+            token = f" {op}("
+            start = f" {op}-start("
+            if token in stripped or start in stripped:
+                m = op
+                break
+        if m is None or f" {m}-done(" in stripped:
+            continue
+        # result shape(s) appear between '=' and the op name
+        try:
+            lhs = stripped.split("=", 1)[1]
+            head = lhs.split(m)[0]
+        except IndexError:
+            continue
+        nbytes = sum(
+            _shape_bytes(dt, dims) for dt, dims in _TUPLE_SHAPE_RE.findall(head)
+        )
+        out[m] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float) -> Dict[str, float]:
+    """Seconds each resource needs for one step (per chip; cost_analysis is
+    reported for the SPMD-partitioned per-device module, so dividing by
+    per-chip peaks gives the same answer as global/(chips x peak))."""
+    return dict(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=coll_bytes_per_device / LINK_BW,
+    )
+
+
+def dominant(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+
+
+def model_flops(cfg, shape: Dict, n_params: int, n_active: Optional[int] = None) -> float:
+    """MODEL_FLOPS: 6*N*D train tokens (dense; N_active for MoE), 2*N*tokens
+    decode, 2*N*D prefill."""
+    n = n_active or n_params
+    kind = shape["kind"]
+    tokens = shape["global_batch"] * (shape["seq_len"] if kind != "decode" else 1)
+    per_tok = 6 * n if kind == "train" else 2 * n
+    return float(per_tok) * tokens
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Parameters touched per token (MoE: shared + top_k of routed)."""
+    if not cfg.moe:
+        return n_params
+    m = cfg.moe
+    expert_p = 3 * cfg.d_model * m.d_expert
+    moe_layers = sum(1 for k in cfg.block_pattern if k == "attn_moe")
+    frac = moe_layers / len(cfg.block_pattern)
+    n_moe_blocks = round(cfg.n_layers * frac)
+    routed_total = n_moe_blocks * m.num_experts * expert_p
+    routed_active = n_moe_blocks * m.top_k * expert_p
+    return n_params - routed_total + routed_active

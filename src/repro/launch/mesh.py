@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+Functions only (importing this module never touches jax device state).
+Single pod: 16x16 ("data","model") = 256 chips (TPU v5e pod slice).
+Multi-pod:  2x16x16 ("pod","data","model") = 512 chips; the FL worker axis is
+("pod","data") = 32 workers, each tensor-parallel over 16 "model" chips.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    assert len(devices) >= n, (
+        f"need {n} devices, have {len(devices)} — the dry-run entrypoint must "
+        f"set XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+        f"jax import"
+    )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    n = math.prod(shape)
+    devices = jax.devices()
+    assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
+    return Mesh(np.asarray(devices[:n]).reshape(tuple(shape)), tuple(axes))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The FL-worker / batch axes of a mesh (everything except "model")."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_workers(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in batch_axes(mesh))
+
+
+def model_parallel(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)

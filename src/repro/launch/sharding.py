@@ -1,0 +1,129 @@
+"""Sharding utilities: FSDP spec augmentation, cache specs, constraints.
+
+Weight specs come from the ParamFactory (model-axis only).  At production
+scale the big MoEs (DeepSeek-V2 236B, Llama-4 400B) do not fit model-axis-
+sharded-only (472 GB/16 = 29.5 GB/chip), so `fsdp_augment` additionally
+shards the largest free dim of every large leaf over "data" (ZeRO-3); XLA
+inserts the per-layer all-gathers (forward) and reduce-scatters (backward)
+under the scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes, num_workers
+
+FSDP_MIN_SIZE = 1 << 22  # 4M elements: below this, replication is cheaper
+
+
+def fsdp_augment(specs, params_shapes, mesh: Mesh, axis: str = "data",
+                 min_size: int = FSDP_MIN_SIZE):
+    """Add `axis` to the largest unsharded dim of big leaves.
+
+    specs/params_shapes are matching pytrees (specs of PartitionSpec, shapes
+    of jax.ShapeDtypeStruct or arrays).  Leading scan (layer-stack) dims are
+    skipped (dim 0 of stacked leaves) — sharding the scan axis would gather a
+    layer per iteration anyway, and the non-leading dims are plenty.
+    """
+    ax_size = mesh.shape.get(axis, 1)
+    if ax_size == 1:
+        return specs
+
+    def aug(spec: P, shaped) -> P:
+        shape = shaped.shape
+        if math.prod(shape) < min_size:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        cand, cand_sz = None, 0
+        for i in range(1 if len(shape) > 2 else 0, len(shape)):
+            if entries[i] is None and shape[i] % ax_size == 0 and shape[i] > cand_sz:
+                cand, cand_sz = i, shape[i]
+        if cand is None:
+            return spec
+        entries[cand] = axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map(
+        aug, specs, params_shapes, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def make_constrain(mesh: Mesh):
+    """Activation constraint: [B, S, d] -> batch over worker axes, sequence
+    over "model" (sequence-parallel residual streams).  The §Perf experiment
+    REPRO_PREFILL_CONSTRAIN=batch_only drops the sequence sharding (trades
+    residual memory for the per-layer seq all-gathers)."""
+    import os
+
+    baxes = batch_axes(mesh)
+    if os.environ.get("REPRO_PREFILL_CONSTRAIN") == "batch_only":
+        spec = P(baxes, None, None)
+    else:
+        spec = P(baxes, "model", None)
+
+    def c(x):
+        if x.ndim != 3:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return c
+
+
+def make_constrain_logits(mesh: Mesh):
+    baxes = batch_axes(mesh)
+    spec = P(baxes, None, "model")  # vocab-sharded logits
+
+    def c(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return c
+
+
+def cache_specs(caches_shape, cfg, mesh: Mesh, global_batch: int):
+    """PartitionSpecs for a decode-cache pytree (built by eval_shape).
+
+    Structure knowledge: leaves under "blocks"/"enc_blocks"/"dec_blocks" (or
+    any stacked tree) carry a leading layer dim -> batch lives at dim 1;
+    "tail*" leaves have batch at dim 0.  Model axis goes to the kv-head dim
+    when divisible, else to the innermost divisible dim (head_dim / lora dims
+    always divide the 16-way mesh).
+    """
+    mp = mesh.shape.get("model", 1)
+    baxes = batch_axes(mesh)
+    nworkers = num_workers(mesh)
+
+    def leaf_spec(path, x) -> P:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        stacked = any(k in ("blocks", "enc_blocks", "dec_blocks") for k in keys)
+        bdim = 1 if stacked else 0
+        entries = [None] * x.ndim
+        if x.shape[bdim] == global_batch and global_batch % nworkers == 0:
+            entries[bdim] = baxes if len(baxes) > 1 else baxes[0]
+        # model axis: prefer the kv-head dim, else innermost divisible dim
+        cand = None
+        for i in range(x.ndim - 1, bdim, -1):
+            if entries[i] is None and x.shape[i] % mp == 0 and x.shape[i] >= mp:
+                cand = i
+                if x.shape[i] == cfg.n_kv_heads and x.ndim - i <= 2:
+                    break
+        if mp > 1 and cand is not None:
+            entries[cand] = "model"
+        return P(*entries)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(path, x) for path, x in flat]
+    )

@@ -1,0 +1,403 @@
+"""Distributed step builders: FLOA train_step, prefill_step, serve (decode)
+step, per (architecture x input shape x mesh).
+
+The FLOA train step realizes the paper's eq. (6)-(8) in ONE pjit'd backward
+pass via the weighted-loss identity
+
+    sum_i s_i * grad L_i  ==  grad ( sum_i s_i L_i ),
+
+where worker i = data-shard i of the global batch and s_i is the signed
+received coefficient (power x channel gain, sign-flipped for Byzantine
+workers, Thm 1).  The resulting gradient reduction over the "data" axis IS
+the over-the-air superposition — XLA lowers it to the reduce-scatter/
+all-reduce the roofline's collective term measures.  De-standardization bias
+(eq. 7, third term) and receiver AWGN (eps_t * z, sharded draw) are added to
+the aggregate, then SGD applies it (eq. 8).
+
+Scalar standardization stats: at ZeRO-3 scale no device can hold per-worker
+gradients, so the (gbar_t, eps_t) pair the attacker model and noise scaling
+consume is a one-round-stale EMA estimated from the aggregate (documented in
+DESIGN.md §7; the paper-exact fresh-stats path lives in repro.core.aggregation
+and is validated against the paper's claims in tests/benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import attacks as ATK
+from repro.core.attacks import AttackConfig, AttackType, first_n_mask
+from repro.core.channel import ChannelConfig, noise_std_for_snr, sample_channel_gains
+from repro.core.power_control import Policy, PowerConfig
+from repro.launch.mesh import batch_axes, model_parallel, num_workers
+from repro.launch.sharding import (
+    cache_specs,
+    fsdp_augment,
+    make_constrain,
+    make_constrain_logits,
+    to_shardings,
+)
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.common import (
+    ModelConfig,
+    reset_sharding_context,
+    set_sharding_context,
+)
+
+Array = jax.Array
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# model abstraction (decoder-only LM vs encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_model(cfg: ModelConfig, key, shape_only: bool = False):
+    if cfg.arch_type == "audio":
+        return ED.init_encdec(key, cfg, shape_only=shape_only)
+    return T.init_lm(key, cfg, shape_only=shape_only)
+
+
+def param_count(params_shape) -> int:
+    return sum(int(math.prod(x.shape)) for x in jax.tree_util.tree_leaves(params_shape))
+
+
+def batch_shapes(cfg: ModelConfig, shape: Dict, kind: str) -> Dict[str, SDS]:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape.
+
+    train/prefill semantics per arch family (DESIGN.md §5/6):
+      lm:    tokens [B, S+1]  (loss trains on S positions)
+      vlm:   patch embeddings [B, P, feat] + tokens [B, S-P+1] (P+S_text = S)
+      audio: frames [B, min(S, enc_cap), feat] + tokens [B, S+1]
+    """
+    b, s = shape["global_batch"], shape["seq_len"]
+    if cfg.arch_type == "vlm":
+        pfx = cfg.frontend.n_prefix
+        toks = s - pfx
+        assert toks > 0
+        out = {
+            "embeds_prefix": SDS((b, pfx, cfg.frontend.feature_dim), jnp.bfloat16),
+            "tokens": SDS((b, toks + 1), jnp.int32),
+        }
+    elif cfg.arch_type == "audio":
+        enc_s = min(s, cfg.encdec.enc_seq_cap)
+        out = {
+            "frames": SDS((b, enc_s, cfg.frontend.feature_dim), jnp.bfloat16),
+            "tokens": SDS((b, s + 1), jnp.int32),
+        }
+    else:
+        out = {"tokens": SDS((b, s + 1), jnp.int32)}
+    if kind == "prefill":  # no next-token shift in scoring mode
+        out["tokens"] = SDS((out["tokens"].shape[0], out["tokens"].shape[1] - 1),
+                            jnp.int32)
+    return out
+
+
+def batch_specs(batch: Dict[str, SDS], mesh: Mesh) -> Dict[str, P]:
+    baxes = batch_axes(mesh)
+    ax = baxes if len(baxes) > 1 else baxes[0]
+    return {k: P(*((ax,) + (None,) * (v.ndim - 1))) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# FLOA config for LLM-scale training
+# ---------------------------------------------------------------------------
+
+
+def default_floa(mesh: Mesh, dim: int, policy: Policy = Policy.BEV,
+                 n_byzantine: int = 2, snr_db: float = 10.0,
+                 attack: AttackType = AttackType.STRONGEST):
+    """The production FLOA setup used by train dry-runs: U = worker-axis size,
+    BEV power control (the paper's contribution), N=2 strongest attackers."""
+    u = num_workers(mesh)
+    n = min(n_byzantine, max(u // 2 - 1, 0))
+    return dict(
+        channel=ChannelConfig(num_workers=u, sigma=1.0,
+                              noise_std=noise_std_for_snr(1.0, dim, snr_db)),
+        power=PowerConfig(num_workers=u, dim=dim, p_max=1.0, policy=policy),
+        attack=AttackConfig(
+            attack=attack if n else AttackType.NONE,
+            byzantine_mask=first_n_mask(u, n),
+        ),
+    )
+
+
+def init_floa_state():
+    return dict(gbar=jnp.zeros((), jnp.float32), eps2=jnp.ones((), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    fn: Callable
+    args: Tuple            # ShapeDtypeStruct pytrees (dry-run stand-ins)
+    in_shardings: Tuple
+    params_specs: Any      # post-FSDP param specs
+    meta: Dict
+
+
+def _with_shard_ctx(fn: Callable, mesh: Mesh) -> Callable:
+    """Install the activation-sharding-hint context for the trace of `fn`
+    (hints fire at trace time; see models.common.shard_hint)."""
+    baxes = batch_axes(mesh)
+    mp = model_parallel(mesh)
+
+    def wrapped(*args):
+        tok = set_sharding_context(mesh, baxes, mp)
+        try:
+            return fn(*args)
+        finally:
+            reset_sharding_context(tok)
+
+    return wrapped
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    shape: Optional[Dict] = None, *,
+                    policy: Policy = Policy.BEV, n_byzantine: int = 2,
+                    alpha: float = 1e-3, fsdp: bool = True,
+                    use_floa: bool = True) -> StepArtifacts:
+    shape = shape or dict(global_batch=256, seq_len=4096)
+    u = num_workers(mesh)
+    constrain = make_constrain(mesh)
+    clogits = make_constrain_logits(mesh)
+    key0 = jax.random.PRNGKey(0)
+    params_shape, specs = init_model(cfg, key0, shape_only=True)
+    dim = param_count(params_shape)
+    if fsdp:
+        specs = fsdp_augment(specs, params_shape, mesh)
+    floa = default_floa(mesh, dim, policy=policy, n_byzantine=n_byzantine)
+    channel, power, attack = floa["channel"], floa["power"], floa["attack"]
+    moe_coef = cfg.moe.router_aux_coef if cfg.moe else 0.0
+
+    def per_example(params, batch):
+        if cfg.arch_type == "audio":
+            return ED.encdec_per_example_loss(params, batch, cfg, constrain,
+                                              clogits), jnp.zeros((), jnp.float32)
+        return T.lm_per_example_loss(params, batch, cfg, constrain=constrain,
+                                     constrain_logits=clogits)
+
+    def weighted_loss(params, batch, coeffs):
+        per_ex, aux = per_example(params, batch)      # [B], scalar
+        per_worker = per_ex.reshape(u, -1).mean(axis=1)  # [U] local losses L_i
+        wl = jnp.dot(coeffs, per_worker.astype(jnp.float32))
+        if moe_coef:
+            wl = wl + moe_coef * aux * jnp.sum(coeffs) / u
+        return wl, jnp.mean(per_worker)
+
+    def train_step(params, state, batch, seed):
+        key = jax.random.PRNGKey(seed)
+        k_ch, k_z = jax.random.split(key)
+        if use_floa:
+            h_abs = sample_channel_gains(k_ch, channel)
+            s, bias_w = ATK.signed_coefficients(
+                h_abs, power, channel, attack, state["gbar"], state["eps2"])
+        else:
+            s = jnp.full((u,), 1.0 / u)
+            bias_w = jnp.zeros(())
+        (wl, mean_loss), g = jax.value_and_grad(weighted_loss, has_aux=True)(
+            params, batch, s)
+        # pin gradient shardings to the param layout: scatter-style grads
+        # (embedding!) otherwise materialize replicated (40+ GB/device)
+        g = jax.tree_util.tree_map(
+            lambda sp, gg: jax.lax.with_sharding_constraint(
+                gg, NamedSharding(mesh, sp)),
+            specs, g, is_leaf=lambda x: isinstance(x, P),
+        )
+
+        # de-standardization bias (eq. 7 third term) + receiver AWGN
+        eps = jnp.sqrt(state["eps2"])
+        leaves, treedef = jax.tree_util.tree_flatten(g)
+        noisy = []
+        for i, x in enumerate(leaves):
+            x = x + (bias_w * state["gbar"]).astype(x.dtype)
+            if use_floa and channel.noise_std > 0.0:
+                z = jax.random.normal(jax.random.fold_in(k_z, i), x.shape,
+                                      jnp.float32)
+                x = x + (eps * channel.noise_std * z).astype(x.dtype)
+            noisy.append(x)
+        g = jax.tree_util.tree_unflatten(treedef, noisy)
+
+        # SGD on the noisy aggregate (eq. 8)
+        new_params = jax.tree_util.tree_map(
+            lambda p, gg: (p.astype(jnp.float32)
+                           - alpha * gg.astype(jnp.float32)).astype(p.dtype),
+            params, g)
+
+        # stale-stat estimators for next round (production side channel)
+        ssum = jnp.sum(s) + bias_w
+        fdim = float(dim)
+        s1 = sum(jnp.sum(x.astype(jnp.float32)) for x in leaves)
+        s2 = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+        mean_g = s1 / fdim / jnp.where(jnp.abs(ssum) > 1e-9, ssum, 1.0)
+        var_g = jnp.maximum(s2 / fdim - (s1 / fdim) ** 2, 1e-20)
+        denom = jnp.maximum(jnp.sum(jnp.square(s)), 1e-9)
+        new_state = dict(
+            gbar=0.9 * state["gbar"] + 0.1 * mean_g,
+            eps2=jnp.clip(0.9 * state["eps2"] + 0.1 * var_g / denom,
+                          1e-12, 1e12),
+        )
+        metrics = dict(loss=mean_loss, grad_scale=ssum)
+        return new_params, new_state, metrics
+
+    batch = batch_shapes(cfg, shape, "train")
+    bspecs = batch_specs(batch, mesh)
+    state = jax.tree_util.tree_map(lambda x: SDS(x.shape, x.dtype),
+                                   init_floa_state())
+    args = (params_shape, state, batch, SDS((), jnp.uint32))
+    in_sh = (
+        to_shardings(specs, mesh),
+        jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), state),
+        to_shardings(bspecs, mesh),
+        NamedSharding(mesh, P()),
+    )
+    return StepArtifacts(
+        fn=_with_shard_ctx(train_step, mesh), args=args, in_shardings=in_sh,
+        params_specs=specs,
+        meta=dict(dim=dim, num_workers=u, policy=str(policy)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: Dict) -> StepArtifacts:
+    constrain = make_constrain(mesh)
+    clogits = make_constrain_logits(mesh)
+    params_shape, specs = init_model(cfg, jax.random.PRNGKey(0), shape_only=True)
+    specs = fsdp_augment(specs, params_shape, mesh)
+
+    def prefill(params, batch):
+        # project ONLY the last position's hidden state to logits: the full
+        # [B, 32k, vocab] tensor would cost O(100 GB)/device for 163k vocabs
+        if cfg.arch_type == "audio":
+            enc_out = ED.encode(params, batch["frames"], cfg, constrain)
+            h = ED.decode_hidden(params, batch["tokens"], enc_out, cfg,
+                                 constrain)
+            head = params["lm_head"]
+        else:
+            h, _ = T.hidden_for_batch(
+                params, batch["tokens"], cfg,
+                embeds_prefix=batch.get("embeds_prefix"), constrain=constrain)
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+        return clogits(jnp.einsum("bd,dv->bv", h[:, -1, :], head)[:, None])[:, 0]
+
+    batch = batch_shapes(cfg, shape, "prefill")
+    bspecs = batch_specs(batch, mesh)
+    args = (params_shape, batch)
+    in_sh = (to_shardings(specs, mesh), to_shardings(bspecs, mesh))
+    return StepArtifacts(fn=_with_shard_ctx(prefill, mesh), args=args,
+                         in_shardings=in_sh,
+                         params_specs=specs,
+                         meta=dict(dim=param_count(params_shape)))
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step: ONE new token against a seq_len KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_window(cfg: ModelConfig, shape_name: str) -> Optional[int]:
+    """Effective attention window for a decode shape: the native window if the
+    model has one; for long_500k on full-attention dense archs, the explicit
+    long-context SWA variant; otherwise full attention."""
+    if cfg.window:
+        return cfg.window
+    if shape_name == "long_500k" and cfg.long_context_window and cfg.mla is None:
+        return cfg.long_context_window
+    return None
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: Dict,
+                     shape_name: str) -> StepArtifacts:
+    b, s = shape["global_batch"], shape["seq_len"]
+    clogits = make_constrain_logits(mesh)
+    params_shape, specs = init_model(cfg, jax.random.PRNGKey(0), shape_only=True)
+    specs = fsdp_augment(specs, params_shape, mesh)
+    window = decode_window(cfg, shape_name)
+
+    if cfg.arch_type == "audio":
+        enc_s = min(s, cfg.encdec.enc_seq_cap)
+        caches_shape = jax.eval_shape(lambda: ED.init_dec_caches(cfg, b, s))
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        cross_shape = (
+            SDS((cfg.encdec.n_dec_layers, b, enc_s, kv, hd), cfg.dtype),
+            SDS((cfg.encdec.n_dec_layers, b, enc_s, kv, hd), cfg.dtype),
+        )
+        c_specs = cache_specs({"dec_blocks": caches_shape}, cfg, mesh, b)["dec_blocks"]
+        x_specs = cache_specs({"dec_blocks": {"k": cross_shape[0],
+                                              "v": cross_shape[1]}}, cfg, mesh, b)
+        x_specs = (x_specs["dec_blocks"]["k"], x_specs["dec_blocks"]["v"])
+
+        def step(params, caches, cross_kv, tokens1, pos):
+            logits, new_caches = ED.decode_step(params, caches, cross_kv,
+                                                tokens1, pos, cfg, clogits)
+            return logits, new_caches
+
+        tokens1 = SDS((b, 1), jnp.int32)
+        baxes = batch_axes(mesh)
+        ax = baxes if len(baxes) > 1 else baxes[0]
+        tok_spec = P(ax, None) if b % num_workers(mesh) == 0 else P(None, None)
+        args = (params_shape, caches_shape, cross_shape, tokens1,
+                SDS((), jnp.int32))
+        in_sh = (
+            to_shardings(specs, mesh),
+            to_shardings(c_specs, mesh),
+            to_shardings(x_specs, mesh),
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, P()),
+        )
+        return StepArtifacts(fn=_with_shard_ctx(step, mesh), args=args,
+                             in_shardings=in_sh,
+                             params_specs=specs,
+                             meta=dict(dim=param_count(params_shape),
+                                       window=window))
+
+    caches_shape = jax.eval_shape(
+        lambda: T.init_caches(cfg, b, s, window=window))
+    c_specs = cache_specs(caches_shape, cfg, mesh, b)
+
+    def step(params, caches, tokens1, pos):
+        logits, new_caches = T.decode_step(params, caches, tokens1, pos, cfg,
+                                           window=window,
+                                           constrain_logits=clogits)
+        return logits, new_caches
+
+    tokens1 = SDS((b, 1), jnp.int32)
+    baxes = batch_axes(mesh)
+    ax = baxes if len(baxes) > 1 else baxes[0]
+    tok_spec = P(ax, None) if b % num_workers(mesh) == 0 else P(None, None)
+    args = (params_shape, caches_shape, tokens1, SDS((), jnp.int32))
+    in_sh = (
+        to_shardings(specs, mesh),
+        to_shardings(c_specs, mesh),
+        NamedSharding(mesh, tok_spec),
+        NamedSharding(mesh, P()),
+    )
+    return StepArtifacts(fn=_with_shard_ctx(step, mesh), args=args,
+                         in_shardings=in_sh,
+                         params_specs=specs,
+                         meta=dict(dim=param_count(params_shape), window=window))
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape_name: str,
+              shape: Dict) -> StepArtifacts:
+    if shape["kind"] == "train":
+        return make_train_step(cfg, mesh, shape)
+    if shape["kind"] == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    return make_decode_step(cfg, mesh, shape, shape_name)

@@ -1,0 +1,373 @@
+"""Attention: GQA (full / sliding-window / decode), qk-norm, MLA (DeepSeek-V2).
+
+Weight layout: wq [d, H, hd], wk/wv [d, KV, hd], wo [H, hd, d].  Sharding
+prefers the head dim on "model"; falls back to the d_model contraction dim for
+head counts that do not divide the mesh (StarCoder2 24H, Llama-4 40H).
+
+Decode provides two paths:
+  * `decode_step` — pjit-friendly, cache sharded on batch/kv-heads.
+  * `decode_local_partial` + `combine_partials` — flash-decoding style
+    partial-softmax pieces for *sequence-sharded* KV caches (used under
+    shard_map for long_500k and non-divisible-head archs; the combine is a
+    pmax/psum over the sharded axes = the collective the roofline sees).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    ModelConfig,
+    ParamFactory,
+    apply_rope,
+    make_causal_mask,
+    rms_norm,
+    shard_hint,
+)
+
+Array = jax.Array
+
+
+def _wspec(cfg: ModelConfig, shape, prefer: int) -> P:
+    """Shard dim `prefer` on "model" if legal, else first other legal dim."""
+    order = [prefer] + [i for i in range(len(shape)) if i != prefer]
+    for i in order:
+        if cfg.shard(shape[i]):
+            return P(*[("model" if j == i else None) for j in range(len(shape))])
+    return P(*([None] * len(shape)))
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(fac: ParamFactory, pre: str, cfg: ModelConfig) -> None:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    fac.param(f"{pre}.wq", (d, h, hd), _wspec(cfg, (d, h, hd), 1), fan_in=d)
+    fac.param(f"{pre}.wk", (d, kv, hd), _wspec(cfg, (d, kv, hd), 1), fan_in=d)
+    fac.param(f"{pre}.wv", (d, kv, hd), _wspec(cfg, (d, kv, hd), 1), fan_in=d)
+    fac.param(f"{pre}.wo", (h, hd, d), _wspec(cfg, (h, hd, d), 0), fan_in=h * hd)
+    if cfg.qk_norm:
+        fac.param(f"{pre}.q_norm", (hd,), P(None), init="zeros")
+        fac.param(f"{pre}.k_norm", (hd,), P(None), init="zeros")
+
+
+def _qkv(p: Dict, x: Array, cfg: ModelConfig, positions: Optional[Array],
+         rope: bool = True) -> Tuple[Array, Array, Array]:
+    q = shard_hint(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), "b.m.")
+    k = shard_hint(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), "b.m.")
+    v = shard_hint(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), "b.m.")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope and positions is not None:
+        # positions [B,S] -> rotate per head (head axis broadcast inside)
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    return q, k, v
+
+
+def _gqa_core(q: Array, k: Array, v: Array, mask: Optional[Array]) -> Array:
+    """q [B,Sq,H,hd], k/v [B,Sk,KV,hd] -> [B,Sq,H,hd]; softmax in f32."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k).astype(jnp.float32)
+    scores = shard_hint(scores / jnp.sqrt(jnp.float32(hd)), "bm...")
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+Q_CHUNK = 1024  # query-block size for memory-bounded full attention
+
+
+def _chunked_attn(q: Array, k: Array, v: Array, causal: bool,
+                  window: Optional[int], q_chunk: int = Q_CHUNK,
+                  unroll: bool = False) -> Array:
+    """Query-chunked attention: scores never exceed [B,H,q_chunk,Sk] per step
+    (keeps the 32k-prefill score tensor off the memory peak; lax.map = scan,
+    so it composes with remat/AD)."""
+    from repro.models.common import maybe_map
+
+    b, sq, h, hd = q.shape
+    if sq <= q_chunk:
+        mask = make_causal_mask(sq, sq, 0, window)[None, None, None] if causal else None
+        return _gqa_core(q, k, v, mask)
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    n = sq // q_chunk
+    qc = q.reshape(b, n, q_chunk, h, hd).swapaxes(0, 1)      # [n,B,qc,H,hd]
+    offs = jnp.arange(n) * q_chunk
+
+    def one(args):
+        qi, off = args
+        mask = (make_causal_mask(q_chunk, sq, off, window)[None, None, None]
+                if causal else None)
+        return _gqa_core(qi, k, v, mask)
+
+    out = maybe_map(one, (qc, offs), unroll)                 # [n,B,qc,H,hd]
+    return out.swapaxes(0, 1).reshape(b, sq, h, hd)
+
+
+def gqa_full(p: Dict, x: Array, cfg: ModelConfig, positions: Array,
+             window: Optional[int] = None, causal: bool = True) -> Array:
+    """Self-attention over a full [B,S,d] block (train / prefill)."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _chunked_attn(q, k, v, causal, window,
+                        unroll=cfg.unroll_for_analysis)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attention(p: Dict, x: Array, enc_kv: Tuple[Array, Array],
+                    cfg: ModelConfig) -> Array:
+    """Decoder cross-attention; enc_kv precomputed ([B,Se,KV,hd] x2), no RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = enc_kv
+    out = _chunked_attn(q, k, v, causal=False, window=None,
+                        unroll=cfg.unroll_for_analysis)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode_kv(p: Dict, enc_out: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# --- decode -----------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, window: Optional[int],
+               dtype) -> Dict[str, Array]:
+    """KV cache for one attention layer.  Ring-buffered if windowed; int8
+    storage (+ per-position/head f16 absmax scales) when cfg.kv_cache_dtype
+    is "int8" — decode is cache-bandwidth-bound, so this halves the dominant
+    memory roofline term at <0.5% logit error (tests/test_kv_quant.py)."""
+    slots = min(max_len, window) if window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.kv_cache_dtype == "int8":
+        return dict(
+            k=jnp.zeros((batch, slots, kv, hd), jnp.int8),
+            v=jnp.zeros((batch, slots, kv, hd), jnp.int8),
+            k_scale=jnp.zeros((batch, slots, kv), jnp.float16),
+            v_scale=jnp.zeros((batch, slots, kv), jnp.float16),
+        )
+    return dict(
+        k=jnp.zeros((batch, slots, kv, hd), dtype),
+        v=jnp.zeros((batch, slots, kv, hd), dtype),
+    )
+
+
+def _quantize_kv(x: Array):
+    """[B,1,KV,hd] -> (int8 values, f16 absmax scales [B,1,KV])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _dequantize_kv(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def decode_step(p: Dict, x1: Array, cache: Dict, pos: Array, cfg: ModelConfig,
+                window: Optional[int] = None) -> Tuple[Array, Dict]:
+    """One-token decode.  x1 [B,1,d]; pos scalar (current index); cache len S.
+
+    Windowed caches are ring buffers (slot = pos % window); positions are
+    reconstructed for masking so RoPE/causality stay exact.
+    """
+    b = x1.shape[0]
+    q, k1, v1 = _qkv(p, x1, cfg, jnp.full((b, 1), pos))
+    slots = cache["k"].shape[1]
+    slot = (pos % slots).astype(jnp.int32) if window else pos.astype(jnp.int32)
+    quant = cfg.kv_cache_dtype == "int8"
+    new_cache = {}
+    if quant:
+        k1q, k1s = _quantize_kv(k1)
+        v1q, v1s = _quantize_kv(v1)
+        new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k1q, (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v1q, (0, slot, 0, 0))
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], k1s, (0, slot, 0))
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], v1s, (0, slot, 0))
+        ck = _dequantize_kv(new_cache["k"], new_cache["k_scale"], k1.dtype)
+        cv = _dequantize_kv(new_cache["v"], new_cache["v_scale"], v1.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+        new_cache = dict(k=ck, v=cv)
+    # true position of each slot (for causal/window masking)
+    idx = jnp.arange(slots)
+    if window:
+        n_wraps = (pos + 1 + slots - 1 - idx) // slots
+        kpos = idx + (n_wraps) * slots - slots  # position last written to slot
+        kpos = jnp.where(kpos > pos, kpos - slots, kpos)
+    else:
+        kpos = idx
+    valid = (kpos <= pos) & (kpos >= 0)
+    if window:
+        valid &= kpos > pos - window
+    mask = valid[None, None, None, None, :]
+    out = _gqa_core(q, ck, cv, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def decode_local_partial(q: Array, k_loc: Array, v_loc: Array,
+                         valid: Array) -> Tuple[Array, Array, Array]:
+    """Partial flash-decode on a local KV shard.
+
+    q [B,H,hd]; k_loc/v_loc [B,S_loc,KV,hd]; valid [B,S_loc] bool.
+    Returns (m [B,H], l [B,H], acc [B,H,hd]) partial softmax stats.
+    """
+    b, h, hd = q.shape
+    kvh = k_loc.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_loc).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)                                   # [B,KV,G]
+    e = jnp.exp(s - m[..., None])
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", e.astype(v_loc.dtype), v_loc)
+    return (m.reshape(b, h), l.reshape(b, h),
+            acc.reshape(b, h, hd).astype(jnp.float32))
+
+
+def combine_partials(m: Array, l: Array, acc: Array, axis_names) -> Array:
+    """psum/pmax combine of partial softmax stats over mesh axes -> [B,H,hd]."""
+    mg = jax.lax.pmax(m, axis_names)
+    scale = jnp.exp(m - mg)
+    lg = jax.lax.psum(l * scale, axis_names)
+    accg = jax.lax.psum(acc * scale[..., None], axis_names)
+    return accg / jnp.maximum(lg, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(fac: ParamFactory, pre: str, cfg: ModelConfig) -> None:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    fac.param(f"{pre}.wq_a", (d, m.q_lora), _wspec(cfg, (d, m.q_lora), 1), fan_in=d)
+    fac.param(f"{pre}.q_norm", (m.q_lora,), P(None), init="zeros")
+    fac.param(f"{pre}.wq_b", (m.q_lora, h, qd), _wspec(cfg, (m.q_lora, h, qd), 1),
+              fan_in=m.q_lora)
+    fac.param(f"{pre}.wkv_a", (d, m.kv_lora + m.qk_rope_dim),
+              P(None, None), fan_in=d)
+    fac.param(f"{pre}.kv_norm", (m.kv_lora,), P(None), init="zeros")
+    fac.param(f"{pre}.wk_b", (m.kv_lora, h, m.qk_nope_dim),
+              _wspec(cfg, (m.kv_lora, h, m.qk_nope_dim), 1), fan_in=m.kv_lora)
+    fac.param(f"{pre}.wv_b", (m.kv_lora, h, m.v_dim),
+              _wspec(cfg, (m.kv_lora, h, m.v_dim), 1), fan_in=m.kv_lora)
+    fac.param(f"{pre}.wo", (h, m.v_dim, d), _wspec(cfg, (h, m.v_dim, d), 0),
+              fan_in=h * m.v_dim)
+
+
+def _mla_q(p: Dict, x: Array, cfg: ModelConfig, positions: Array):
+    m = cfg.mla
+    cq = rms_norm(jnp.einsum("bsd,dq->bsq", x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = shard_hint(jnp.einsum("bsq,qhk->bshk", cq, p["wq_b"]), "b.m.")
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[:, None, :],
+                        cfg.rope_theta).swapaxes(1, 2)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p: Dict, x: Array, cfg: ModelConfig, positions: Array):
+    m = cfg.mla
+    kv_a = jnp.einsum("bsd,de->bse", x, p["wkv_a"])
+    c_kv = rms_norm(kv_a[..., : m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., m.kv_lora :], positions, cfg.rope_theta)
+    return c_kv, k_rope  # [B,S,kv_lora], [B,S,rope]
+
+
+def mla_full(p: Dict, x: Array, cfg: ModelConfig, positions: Array,
+             window: Optional[int] = None) -> Array:
+    """Train/prefill MLA: materialize per-head K/V from the latent (cheap at
+    these lengths); decode uses the absorbed form instead."""
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_ckv(p, x, cfg, positions)
+    k_nope = shard_hint(jnp.einsum("bse,ehk->bshk", c_kv, p["wk_b"]), "b.m.")
+    v = shard_hint(jnp.einsum("bse,ehk->bshk", c_kv, p["wv_b"]), "b.m.")
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_dim + m.qk_rope_dim))
+    sq = x.shape[1]
+    qc = Q_CHUNK
+    n = max(sq // qc, 1)
+    if sq % qc or n == 1:
+        n, qc = 1, sq
+
+    def one(args):
+        qn, qr, off = args
+        s = (jnp.einsum("bqhk,bshk->bhqs", qn, k_nope)
+             + jnp.einsum("bqhk,bsk->bhqs", qr, k_rope)).astype(jnp.float32) * scale
+        s = shard_hint(s, "bm..")
+        mask = make_causal_mask(qc, sq, off, window)[None, None]
+        s = jnp.where(mask, s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+    if n == 1:
+        out = one((q_nope, q_rope, jnp.int32(0)))
+    else:
+        from repro.models.common import maybe_map
+
+        b, _, h, dn = q_nope.shape
+        qn = q_nope.reshape(b, n, qc, h, dn).swapaxes(0, 1)
+        qr = q_rope.reshape(b, n, qc, h, -1).swapaxes(0, 1)
+        out = maybe_map(one, (qn, qr, jnp.arange(n) * qc),
+                        cfg.unroll_for_analysis)
+        out = out.swapaxes(0, 1).reshape(b, sq, h, -1)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    m = cfg.mla
+    return dict(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    )
+
+
+def mla_decode_step(p: Dict, x1: Array, cache: Dict, pos: Array,
+                    cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """Absorbed-form MLA decode: everything stays in the kv_lora latent, so the
+    per-token cache cost is kv_lora + rope bytes (MLA's raison d'etre)."""
+    m = cfg.mla
+    b = x1.shape[0]
+    pos_b = jnp.full((b, 1), pos)
+    q_nope, q_rope = _mla_q(p, x1, cfg, pos_b)          # [B,1,H,*]
+    c1, r1 = _mla_ckv(p, x1, cfg, pos_b)                # [B,1,lora],[B,1,rope]
+    ck = jax.lax.dynamic_update_slice(cache["c_kv"], c1, (0, pos.astype(jnp.int32), 0))
+    cr = jax.lax.dynamic_update_slice(cache["k_rope"], r1, (0, pos.astype(jnp.int32), 0))
+    # absorb W_uk into q: q_eff [B,H,lora]
+    q_eff = jnp.einsum("bhk,ehk->bhe", q_nope[:, 0], p["wk_b"])
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_dim + m.qk_rope_dim))
+    s = (jnp.einsum("bhe,bse->bhs", q_eff, ck)
+         + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], cr)).astype(jnp.float32) * scale
+    valid = jnp.arange(ck.shape[1]) <= pos
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1).astype(ck.dtype)
+    ctx = jnp.einsum("bhs,bse->bhe", probs, ck)          # [B,H,lora]
+    out = jnp.einsum("bhe,ehk->bhk", ctx, p["wv_b"])     # [B,H,v]
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return y, dict(c_kv=ck, k_rope=cr)

@@ -1,0 +1,343 @@
+"""Shared model substrate: configs, parameter factory, norms, RoPE, embeddings.
+
+Functional style (no flax): `init_*` builds nested param dicts through a
+ParamFactory which records a parallel PartitionSpec tree, so `jax.jit`
+in_shardings can be derived mechanically for any mesh.  Sharding specs are
+*legal by construction*: a dim is annotated with a mesh axis only if its size
+divides the axis size declared in `cfg.model_parallel` (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                     # per-expert FFN hidden size
+    num_shared: int = 0               # shared (always-on) experts
+    interleave: int = 1               # every `interleave`-th block is MoE (1 = all)
+    capacity_factor: float = 1.25
+    impl: str = "capacity_gather"     # or "scan_dense" (masked full compute)
+    router_aux_coef: float = 0.01     # load-balance loss weight
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 256
+    d_conv: int = 4
+    ngroups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    n_enc_layers: int = 12
+    n_dec_layers: int = 12
+    enc_seq_cap: int = 4096           # encoder (stub-frontend) sequence length cap
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    kind: str                         # "vision" | "audio" (stubbed per spec)
+    feature_dim: int = 1024
+    n_prefix: int = 2880              # vision: anyres patch count; audio: n/a
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                    # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None    # default d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None      # native sliding window (None = full attn)
+    long_context_window: Optional[int] = None  # SWA used only for long_500k
+    block_pattern: Tuple[str, ...] = ("attn",)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    rglru_width: Optional[int] = None  # RG-LRU recurrent width (default d_model)
+    local_window: int = 2048           # window of "local_attn" blocks (hybrid)
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    model_parallel: int = 1            # size of the "model" mesh axis for specs
+    remat: bool = True
+    scan_layers: bool = True
+    norm_eps: float = 1e-6
+    citation: str = ""
+    # decode-shape applicability (set by configs; dryrun consults this)
+    skip_shapes: Tuple[str, ...] = ()
+    # analysis mode: replace scans/maps with Python loops so XLA cost
+    # analysis (which counts while bodies ONCE) sees every layer/chunk/expert.
+    # Used by the dry-run cost probes only — never for real execution.
+    unroll_for_analysis: bool = False
+    # CE/logits are computed in sequence chunks of this many positions so the
+    # [B, S, vocab] tensor never materializes (163k-vocab configs would need
+    # >100 GB/device otherwise).
+    lm_head_chunk: int = 1024
+    # decode KV cache storage: "native" (= cfg.dtype) or "int8" (per-position,
+    # per-head absmax quantization — §Perf memory-term optimization; decode is
+    # cache-bandwidth-bound so int8 halves the dominant roofline term).
+    kv_cache_dtype: str = "native"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        mult = 256
+        return ((self.vocab_size + mult - 1) // mult) * mult
+
+    def shard(self, size: int, axis: str = "model"):
+        """Return `axis` if `size` divides the model-parallel degree, else None."""
+        return axis if size % max(self.model_parallel, 1) == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# parameter factory
+# ---------------------------------------------------------------------------
+
+
+class ParamFactory:
+    """Builds a nested params dict + a parallel PartitionSpec dict.
+
+    Usage:
+        fac = ParamFactory(key, dtype=jnp.bfloat16)
+        w = fac.param("attn.wq", (d, h, hd), P(None, "model", None), fan_in=d)
+        params, specs = fac.collect()
+    Dots in names create nesting.  `fan_in` selects truncated-normal scale
+    1/sqrt(fan_in); `init="zeros"|"ones"` for norm scales / biases.
+    """
+
+    def __init__(self, key: Array, dtype=jnp.bfloat16, shape_only: bool = False):
+        self._key = key
+        self._count = 0
+        self.dtype = dtype
+        self.shape_only = shape_only  # record specs/shapes without allocating
+        self._params: Dict[str, Array] = {}
+        self._specs: Dict[str, P] = {}
+
+    def _next_key(self) -> Array:
+        self._count += 1
+        return jax.random.fold_in(self._key, self._count)
+
+    def param(self, name, shape, spec=None, fan_in=None, init="normal", dtype=None):
+        dtype = dtype or self.dtype
+        if self.shape_only:
+            val = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        elif init == "zeros":
+            val = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, dtype)
+        else:
+            scale = 1.0 / math.sqrt(fan_in if fan_in else shape[0])
+            val = (
+                jax.random.truncated_normal(self._next_key(), -2.0, 2.0, shape, jnp.float32)
+                * scale
+            ).astype(dtype)
+        assert name not in self._params, f"duplicate param {name}"
+        self._params[name] = val
+        self._specs[name] = spec if spec is not None else P()
+        return val
+
+    def collect(self):
+        return _nest(self._params), _nest(self._specs)
+
+
+def _nest(flat: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split(".")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def stack_layer_params(init_one, key: Array, n: int):
+    """Init `n` copies of a layer and stack leaves along a new leading axis.
+
+    init_one(key) -> (params, specs).  Returns (stacked_params, specs_with_
+    leading_None).  Used for scan-over-layers.
+    """
+    keys = jax.random.split(key, n)
+    p0, s0 = init_one(keys[0])
+    leaves0 = jax.tree_util.tree_leaves(p0)
+    if leaves0 and isinstance(leaves0[0], jax.ShapeDtypeStruct):  # shape-only
+        stacked = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct((n,) + tuple(x.shape), x.dtype), p0
+        )
+        specs = jax.tree_util.tree_map(
+            lambda s: P(*((None,) + tuple(s))), s0,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        return stacked, specs
+    rest = [init_one(k)[0] for k in keys[1:]]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), p0, *rest)
+    specs = jax.tree_util.tree_map(
+        lambda s: P(*((None,) + tuple(s))), s0,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return stacked, specs
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H?, Dh] rotated pairwise; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    # broadcast over any head axes between S and Dh
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xr = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return xr.reshape(x.shape).astype(x.dtype)
+
+
+def make_causal_mask(sq: int, sk: int, q_offset, window: Optional[int]) -> Array:
+    """Boolean [Sq, Sk] mask (True = attend).  q position = q_offset + i."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def softmax_xent(logits: Array, labels: Array, vocab: int) -> Array:
+    """Stable CE over possibly vocab-padded logits.  logits [..., Vp], labels [...]."""
+    logits = logits.astype(jnp.float32)
+    vp = logits.shape[-1]
+    if vp > vocab:  # mask padding ids out of the partition function
+        pad_mask = jnp.arange(vp) >= vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - ll
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hints
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation resolves conflicts (sequence-sharded residuals x
+# head-sharded weights) unpredictably; unhinted attention internals can end up
+# replicated (a single unhinted 128-head MLA layer peaks at 41 GB/device).
+# Step builders install a context; model code marks tensors with a compact
+# dim-code string: 'b' = batch axes, 'm' = "model" (if the dim divides the
+# mesh), '.' = unconstrained.  Without a context the hints are no-ops, so
+# single-host code paths are untouched.
+
+import contextvars as _contextvars
+
+_SHARD_CTX = _contextvars.ContextVar("repro_shard_ctx", default=None)
+
+
+def set_sharding_context(mesh, batch_axes: tuple, model_size: int):
+    """Install hints for the current trace; returns a token for reset()."""
+    return _SHARD_CTX.set((mesh, tuple(batch_axes), model_size))
+
+
+def reset_sharding_context(token) -> None:
+    _SHARD_CTX.reset(token)
+
+
+def shard_hint(x: Array, dims: str) -> Array:
+    ctx = _SHARD_CTX.get()
+    if ctx is None:
+        return x
+    mesh, baxes, mp = ctx
+    from jax.sharding import NamedSharding
+
+    assert len(dims) == x.ndim, (dims, x.shape)
+    spec = []
+    for ch, size in zip(dims, x.shape):
+        if ch == "b":
+            spec.append(baxes if len(baxes) > 1 else baxes[0])
+        elif ch == "m" and mp > 1 and size % mp == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def maybe_scan(body, init, xs, unroll: bool):
+    """lax.scan, or an unrolled Python loop in analysis mode (see
+    ModelConfig.unroll_for_analysis).  body(carry, x) -> (carry, y)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0] if xs is not None else 0
+    carry, ys = init, []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def maybe_map(fn, xs, unroll: bool):
+    """lax.map, or an unrolled Python loop in analysis mode."""
+    if not unroll:
+        return jax.lax.map(fn, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = [fn(jax.tree_util.tree_map(lambda a: a[i], xs)) for i in range(n)]
+    return jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)

@@ -1,0 +1,187 @@
+"""Encoder-decoder backbone (SeamlessM4T-v2 large's text/speech transformer).
+
+The modality frontend (mel + conv codec) is stubbed per spec: the encoder
+consumes precomputed frame embeddings [B, T_frames, feature_dim].  Everything
+else — bidirectional encoder stack, causal decoder with cross-attention,
+decode-time KV caching — is real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as ATT
+from repro.models import ffn as FFN
+from repro.models.common import (
+    ModelConfig,
+    ParamFactory,
+    maybe_map,
+    maybe_scan,
+    rms_norm,
+    softmax_xent,
+    stack_layer_params,
+)
+
+Array = jax.Array
+Identity = lambda x: x  # noqa: E731
+
+
+def _init_enc_block(key, cfg: ModelConfig, shape_only: bool = False):
+    fac = ParamFactory(key, dtype=cfg.dtype, shape_only=shape_only)
+    d = cfg.d_model
+    fac.param("ln1", (d,), P(None), init="zeros")
+    ATT.init_gqa(fac, "attn", cfg)
+    fac.param("ln2", (d,), P(None), init="zeros")
+    FFN.init_swiglu(fac, "ffn", cfg)
+    return fac.collect()
+
+
+def _init_dec_block(key, cfg: ModelConfig, shape_only: bool = False):
+    fac = ParamFactory(key, dtype=cfg.dtype, shape_only=shape_only)
+    d = cfg.d_model
+    fac.param("ln1", (d,), P(None), init="zeros")
+    ATT.init_gqa(fac, "self_attn", cfg)
+    fac.param("ln_x", (d,), P(None), init="zeros")
+    ATT.init_gqa(fac, "cross_attn", cfg)
+    fac.param("ln2", (d,), P(None), init="zeros")
+    FFN.init_swiglu(fac, "ffn", cfg)
+    return fac.collect()
+
+
+def init_encdec(key: Array, cfg: ModelConfig, shape_only: bool = False):
+    ed = cfg.encdec
+    k1, k2, k3 = jax.random.split(key, 3)
+    fac = ParamFactory(k1, dtype=cfg.dtype, shape_only=shape_only)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    fd = cfg.frontend.feature_dim if cfg.frontend else d
+    fac.param("enc_in", (fd, d), P(None, cfg.shard(d)), fan_in=fd)
+    fac.param("enc_norm", (d,), P(None), init="zeros")
+    fac.param("embed", (vp, d), P(cfg.shard(vp), None), fan_in=d)
+    fac.param("dec_norm", (d,), P(None), init="zeros")
+    fac.param("lm_head", (d, vp), P(None, cfg.shard(vp)), fan_in=d)
+    params, specs = fac.collect()
+    params["enc_blocks"], specs["enc_blocks"] = stack_layer_params(
+        lambda k: _init_enc_block(k, cfg, shape_only), k2, ed.n_enc_layers
+    )
+    params["dec_blocks"], specs["dec_blocks"] = stack_layer_params(
+        lambda k: _init_dec_block(k, cfg, shape_only), k3, ed.n_dec_layers
+    )
+    return params, specs
+
+
+def encode(params: Dict, frames: Array, cfg: ModelConfig,
+           constrain: Callable = Identity) -> Array:
+    """frames [B,T,feat] -> encoder output [B,T,d] (bidirectional)."""
+    x = jnp.einsum("btf,fd->btd", frames.astype(cfg.dtype), params["enc_in"])
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def block(p, xx):
+        h = rms_norm(xx, p["ln1"], cfg.norm_eps)
+        xx = constrain(xx + ATT.gqa_full(p["attn"], h, cfg, positions, causal=False))
+        h2 = rms_norm(xx, p["ln2"], cfg.norm_eps)
+        return constrain(xx + FFN.swiglu(p["ffn"], h2))
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    x, _ = maybe_scan(lambda xx, p: (block(p, xx), None), x,
+                      params["enc_blocks"], cfg.unroll_for_analysis)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_hidden(params: Dict, tokens: Array, enc_out: Array, cfg: ModelConfig,
+                  constrain: Callable = Identity) -> Array:
+    """Teacher-forced decoder pass -> final hidden [B,S,d]."""
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def block(p, xx):
+        h = rms_norm(xx, p["ln1"], cfg.norm_eps)
+        xx = constrain(xx + ATT.gqa_full(p["self_attn"], h, cfg, positions))
+        hx = rms_norm(xx, p["ln_x"], cfg.norm_eps)
+        kv = ATT.encode_kv(p["cross_attn"], enc_out, cfg)
+        xx = constrain(xx + ATT.cross_attention(p["cross_attn"], hx, kv, cfg))
+        h2 = rms_norm(xx, p["ln2"], cfg.norm_eps)
+        return constrain(xx + FFN.swiglu(p["ffn"], h2))
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    x, _ = maybe_scan(lambda xx, p: (block(p, xx), None), x,
+                      params["dec_blocks"], cfg.unroll_for_analysis)
+    return rms_norm(x, params["dec_norm"], cfg.norm_eps)
+
+
+def decode_full(params: Dict, tokens: Array, enc_out: Array, cfg: ModelConfig,
+                constrain: Callable = Identity,
+                constrain_logits: Callable = Identity) -> Array:
+    """Teacher-forced decoder pass -> logits [B,S,Vp]."""
+    h = decode_hidden(params, tokens, enc_out, cfg, constrain)
+    return constrain_logits(jnp.einsum("bsd,dv->bsv", h, params["lm_head"]))
+
+
+def encdec_per_example_loss(params: Dict, batch: Dict, cfg: ModelConfig,
+                            constrain: Callable = Identity,
+                            constrain_logits: Callable = Identity) -> Array:
+    """Per-sequence mean CE [B] (see lm_per_example_loss).  The lm_head is
+    applied in sequence chunks (256k vocab would not fit otherwise)."""
+    from repro.models.transformer import chunked_ce
+
+    enc_out = encode(params, batch["frames"], cfg, constrain)
+    h = decode_hidden(params, batch["tokens"][:, :-1], enc_out, cfg, constrain)
+    ce = chunked_ce(params, h, batch["tokens"][:, 1:], cfg, constrain_logits)
+    return jnp.mean(ce, axis=-1)
+
+
+def encdec_loss(params: Dict, batch: Dict, cfg: ModelConfig,
+                constrain: Callable = Identity,
+                constrain_logits: Callable = Identity) -> Array:
+    return jnp.mean(encdec_per_example_loss(
+        params, batch, cfg, constrain, constrain_logits))
+
+
+# --- decode ------------------------------------------------------------------
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    ed = cfg.encdec
+    one = ATT.init_cache(cfg, batch, max_len, None, cfg.dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (ed.n_dec_layers,) + x.shape), one
+    )
+
+
+def precompute_cross_kv(params: Dict, enc_out: Array, cfg: ModelConfig):
+    """Per-decoder-layer cross K/V, stacked [L, B, Se, KV, hd] x2."""
+    def one(p):
+        return ATT.encode_kv(p["cross_attn"], enc_out, cfg)
+
+    return jax.vmap(one)(params["dec_blocks"])
+
+
+def decode_step(params: Dict, caches: Dict, cross_kv, tokens1: Array,
+                pos: Array, cfg: ModelConfig,
+                constrain_logits: Callable = Identity):
+    """One decoder token.  cross_kv from precompute_cross_kv."""
+    x = params["embed"][tokens1]
+
+    def body(x1, inp):
+        p, c, ckv = inp
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        h, c = ATT.decode_step(p["self_attn"], h, c, pos, cfg)
+        x1 = x1 + h
+        hx = rms_norm(x1, p["ln_x"], cfg.norm_eps)
+        x1 = x1 + ATT.cross_attention(p["cross_attn"], hx, ckv, cfg)
+        h2 = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        x1 = x1 + FFN.swiglu(p["ffn"], h2)
+        return x1, c
+
+    x, new_caches = maybe_scan(body, x, (params["dec_blocks"], caches, cross_kv),
+                               cfg.unroll_for_analysis)
+    h = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    logits = constrain_logits(jnp.einsum("bsd,dv->bsv", h, params["lm_head"]))
+    return logits, new_caches

@@ -1,0 +1,38 @@
+"""Feed-forward layers: SwiGLU (dense) and plain GELU MLP."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ParamFactory, shard_hint
+
+Array = jax.Array
+
+
+def init_swiglu(fac: ParamFactory, pre: str, cfg: ModelConfig, d_ff: int = 0) -> None:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    fs = cfg.shard(f)
+    fac.param(f"{pre}.wi", (d, f), P(None, fs), fan_in=d)       # gate
+    fac.param(f"{pre}.wg", (d, f), P(None, fs), fan_in=d)       # up
+    fac.param(f"{pre}.wo", (f, d), P(fs, None), fan_in=f)       # down
+
+
+def swiglu(p: Dict, x: Array) -> Array:
+    h = jax.nn.silu(shard_hint(jnp.einsum("bsd,df->bsf", x, p["wi"]), "b.m"))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wg"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def init_gelu_mlp(fac: ParamFactory, pre: str, cfg: ModelConfig) -> None:
+    d, f = cfg.d_model, cfg.d_ff
+    fs = cfg.shard(f)
+    fac.param(f"{pre}.wi", (d, f), P(None, fs), fan_in=d)
+    fac.param(f"{pre}.wo", (f, d), P(fs, None), fan_in=f)
+
+
+def gelu_mlp(p: Dict, x: Array) -> Array:
+    h = jax.nn.gelu(shard_hint(jnp.einsum("bsd,df->bsf", x, p["wi"]), "b.m"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

@@ -1,0 +1,46 @@
+"""The paper's experiment model (§IV): MLP 784-64-10, ReLU, cross-entropy.
+
+D = 784*64 + 64 + 64*10 + 10 = 50890 parameters, matching the paper exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_mlp(key: Array, d_in: int = 784, d_hidden: int = 64, n_classes: int = 10):
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w1": jax.random.normal(k1, (d_in, d_hidden), jnp.float32)
+        * (2.0 / d_in) ** 0.5,
+        "b1": jnp.zeros((d_hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (d_hidden, n_classes), jnp.float32)
+        * (2.0 / d_hidden) ** 0.5,
+        "b2": jnp.zeros((n_classes,), jnp.float32),
+    }
+    return params
+
+
+def mlp_logits(params: Dict, x: Array) -> Array:
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params: Dict, batch: Dict) -> Array:
+    """Cross-entropy; batch = {"x": [B,784], "y": [B] int}."""
+    logits = mlp_logits(params, batch["x"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def mlp_accuracy(params: Dict, x: Array, y: Array) -> Array:
+    return jnp.mean(jnp.argmax(mlp_logits(params, x), axis=-1) == y)
+
+
+def num_params(params: Dict) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts: router, two dispatch implementations, shared experts.
+
+Dispatch impls (cfg.moe.impl):
+  * "scan_dense": lax.scan over experts, every expert computes every token,
+    masked by the router's combine weights.  Memory-light, compact HLO,
+    compiles for any sharding — but overcomputes by num_experts/top_k (the
+    roofline's MODEL_FLOPS/HLO_FLOPs ratio exposes this; it is the §Perf
+    hillclimb baseline).
+  * "capacity_gather": sort-based token->expert buckets with capacity
+    C = ceil(top_k*T/E * capacity_factor); experts compute only their bucket
+    ([E, C, d] batch, E sharded on "model").  ~E/top_k less compute; tokens
+    overflowing capacity are dropped (standard GShard semantics).
+
+Expert weights are stacked [E, ...] with E sharded on "model" (expert
+parallelism — 160/16, 128/16, 64/16 all divide the production mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ParamFactory
+from repro.models.ffn import init_swiglu, swiglu
+
+Array = jax.Array
+
+
+def init_moe(fac: ParamFactory, pre: str, cfg: ModelConfig) -> None:
+    d, m = cfg.d_model, cfg.moe
+    e, f = m.num_experts, m.d_expert
+    fac.param(f"{pre}.router", (d, e), P(None, None), fan_in=d, dtype=jnp.float32)
+    if m.impl == "scan_dense":
+        # scan iterates experts one at a time: shard the expert FFN width on
+        # "model" (tensor parallel within each expert step)
+        fs = cfg.shard(f)
+        fac.param(f"{pre}.w1", (e, d, f), P(None, None, fs), fan_in=d)
+        fac.param(f"{pre}.wg", (e, d, f), P(None, None, fs), fan_in=d)
+        fac.param(f"{pre}.w2", (e, f, d), P(None, fs, None), fan_in=f)
+    else:
+        # bucketed dispatch computes all experts at once: expert parallelism
+        es = cfg.shard(e)
+        fac.param(f"{pre}.w1", (e, d, f), P(es, None, None), fan_in=d)
+        fac.param(f"{pre}.wg", (e, d, f), P(es, None, None), fan_in=d)
+        fac.param(f"{pre}.w2", (e, f, d), P(es, None, None), fan_in=f)
+    if m.num_shared:
+        init_swiglu(fac, f"{pre}.shared", cfg, d_ff=m.num_shared * f)
+
+
+def router_probs(p: Dict, x: Array, cfg: ModelConfig) -> Array:
+    """[T, E] softmax router probabilities in f32."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def load_balance_loss(probs: Array, idx: Array, num_experts: int) -> Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    f = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, num_experts, dtype=jnp.float32), axis=1), axis=0
+    )  # fraction routed to each expert (counting top-k slots)
+    pbar = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * pbar)
+
+
+def _expert_ffn(w1: Array, wg: Array, w2: Array, x: Array) -> Array:
+    from repro.models.common import shard_hint
+
+    h = jax.nn.silu(shard_hint(x @ w1, "bm")) * (x @ wg)
+    return h @ w2
+
+
+def moe_scan_dense(p: Dict, x2: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """x2 [T, d] -> ([T, d], aux_loss). Masked full compute, scan over experts."""
+    m = cfg.moe
+    probs = router_probs(p, x2, cfg)                          # [T,E]
+    gates, idx = jax.lax.top_k(probs, m.top_k)                # [T,k]
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # combine weight per (token, expert): scatter the top-k gates
+    comb = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None], idx
+    ].set(gates)                                              # [T,E]
+
+    @jax.checkpoint
+    def expert_contrib(w1, wg, w2, w_col, x):
+        # w_col multiply INSIDE the checkpoint: otherwise scan-AD saves the
+        # [T, d] expert output o for every expert (it is needed for dL/dw_col)
+        # -> 2 GB/device/expert.  Rematerializing keeps residuals at O(inputs).
+        o = _expert_ffn(w1, wg, w2, x)
+        return w_col[:, None].astype(o.dtype) * o
+
+    def body(y, packed):
+        w1, wg, w2, w_col = packed
+        return y + expert_contrib(w1, wg, w2, w_col, x2), None
+
+    from repro.models.common import maybe_scan
+
+    y0 = jnp.zeros_like(x2)
+    y, _ = maybe_scan(body, y0, (p["w1"], p["wg"], p["w2"], comb.T),
+                      cfg.unroll_for_analysis)
+    aux = load_balance_loss(probs, idx, m.num_experts)
+    return y, aux
+
+
+def moe_capacity_gather(p: Dict, x2: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """x2 [T, d] -> ([T, d], aux). Sort-based bucketed dispatch with capacity."""
+    m = cfg.moe
+    t, d = x2.shape
+    e, k = m.num_experts, m.top_k
+    cap = int(-(-k * t // e) * m.capacity_factor)
+    cap = max(cap, 1)
+
+    probs = router_probs(p, x2, cfg)
+    gates, idx = jax.lax.top_k(probs, k)                      # [T,k]
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    from repro.models.common import shard_hint
+
+    flat_e = idx.reshape(-1)                                  # [T*k]
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, stok = flat_e[order], flat_g[order], flat_tok[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(e))           # [E]
+    rank = jnp.arange(t * k) - seg_start[se]
+    ok = rank < cap
+    slot = jnp.where(ok, se * cap + rank, e * cap)            # OOB -> dropped
+
+    buf = jnp.zeros((e * cap, d), x2.dtype).at[slot].set(
+        x2[stok], mode="drop")
+    xe = shard_hint(buf.reshape(e, cap, d), "m..")            # expert-parallel
+    he = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["wg"]
+    )
+    he = shard_hint(he, "m..")
+    ye = shard_hint(jnp.einsum("ecf,efd->ecd", he, p["w2"]), "m..")
+    ye = ye.reshape(e * cap, d)
+
+    out_tok = jnp.where(ok[:, None], ye[jnp.minimum(slot, e * cap - 1)], 0.0)
+    y = jnp.zeros_like(x2).at[stok].add(
+        (sg * ok)[:, None].astype(x2.dtype) * out_tok
+    )
+    y = shard_hint(y, "bm")
+    aux = load_balance_loss(probs, idx, e)
+    return y, aux
+
+
+def moe_ffn(p: Dict, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """[B,S,d] -> ([B,S,d], aux_loss); adds shared experts if configured."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    impl = moe_scan_dense if cfg.moe.impl == "scan_dense" else moe_capacity_gather
+    y2, aux = impl(p, x2, cfg)
+    y = y2.reshape(b, s, d)
+    if cfg.moe.num_shared:
+        y = y + swiglu(p["shared"], x)
+    return y, aux

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+  log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses an associative scan over S (log-space first-order
+recurrence); decode is the O(1) update.  The block follows RecurrentGemma:
+x -> [gelu gate branch] * [conv1d -> RG-LRU branch] -> out proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ParamFactory, shard_hint
+
+Array = jax.Array
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru_width or cfg.d_model
+
+
+def init_rglru(fac: ParamFactory, pre: str, cfg: ModelConfig) -> None:
+    d, w = cfg.d_model, _width(cfg)
+    ws = cfg.shard(w)
+    fac.param(f"{pre}.in_x", (d, w), P(None, ws), fan_in=d)    # recurrent branch
+    fac.param(f"{pre}.in_gate", (d, w), P(None, ws), fan_in=d) # gelu gate branch
+    fac.param(f"{pre}.conv_w", (4, w), P(None, ws), fan_in=4)
+    fac.param(f"{pre}.conv_b", (w,), P(ws), init="zeros")
+    fac.param(f"{pre}.w_a", (w, w), P(None, ws), fan_in=w)
+    fac.param(f"{pre}.b_a", (w,), P(ws), init="zeros")
+    fac.param(f"{pre}.w_i", (w, w), P(None, ws), fan_in=w)
+    fac.param(f"{pre}.b_i", (w,), P(ws), init="zeros")
+    fac.param(f"{pre}.lam", (w,), P(ws), init="ones")          # Lambda > 0
+    fac.param(f"{pre}.out", (w, d), P(ws, None), fan_in=w)
+
+
+def _gates(p: Dict, x: Array):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, p["w_i"]) + p["b_i"])
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12))
+    return a, beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+
+
+def _conv(p: Dict, x: Array) -> Array:
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + x.shape[1], :] * p["conv_w"][i] for i in range(k)) + p["conv_b"]
+
+
+def rglru_full(p: Dict, x: Array, cfg: ModelConfig) -> Array:
+    """[B,S,d] -> [B,S,d] via associative scan over S."""
+    gate = jax.nn.gelu(shard_hint(jnp.einsum("bsd,dw->bsw", x, p["in_gate"]), "b.m"))
+    xr = _conv(p, shard_hint(jnp.einsum("bsd,dw->bsw", x, p["in_x"]), "b.m"))
+    a, b = _gates(p, xr)                                      # [B,S,W] f32
+    a, b = shard_hint(a, "b.m"), shard_hint(b, "b.m")
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bsw,wd->bsd", y, p["out"])
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    w = _width(cfg)
+    return dict(
+        conv=jnp.zeros((batch, 3, w), dtype),
+        h=jnp.zeros((batch, w), jnp.float32),
+    )
+
+
+def rglru_decode_step(p: Dict, x1: Array, state: Dict, cfg: ModelConfig
+                      ) -> Tuple[Array, Dict]:
+    """One-token update.  x1 [B,1,d]."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x1, p["in_gate"]))[:, 0]
+    xr1 = jnp.einsum("bsd,dw->bsw", x1, p["in_x"])[:, 0]       # [B,W]
+    window = jnp.concatenate([state["conv"], xr1[:, None]], axis=1)
+    xr = jnp.sum(window * p["conv_w"], axis=1) + p["conv_b"]
+    a, b = _gates(p, xr)
+    h = a * state["h"] + b
+    y = (h.astype(x1.dtype) * gate)
+    out = jnp.einsum("bw,wd->bd", y, p["out"])[:, None]
+    return out, dict(conv=window[:, 1:], h=h)

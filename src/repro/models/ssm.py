@@ -1,0 +1,194 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked dual form for train/prefill: within a chunk the quadratic
+(attention-like) form, across chunks a linear recurrence over the
+[H, P, N] states (lax.scan over n_chunks — 16 chunks at 4k).
+Decode: the classic recurrent update, O(1) state
+  state <- state * exp(dt*A) + dt * B (outer) x;  y = C . state
+so long_500k decode carries a constant [B, H, P, N] state (no KV cache).
+
+Layout: d_inner = expand*d_model, H = d_inner/headdim heads sharded on
+"model"; B/C are grouped (ngroups, broadcast over heads).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ParamFactory, rms_norm, shard_hint
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.headdim
+    return s, d_in, nheads
+
+
+def init_ssm(fac: ParamFactory, pre: str, cfg: ModelConfig) -> None:
+    s, d_in, nheads = _dims(cfg)
+    d = cfg.d_model
+    conv_ch = d_in + 2 * s.ngroups * s.d_state
+    hs = cfg.shard(nheads)
+    fac.param(f"{pre}.in_proj",
+              (d, d_in + conv_ch + nheads),
+              P(None, cfg.shard(d_in + conv_ch + nheads)), fan_in=d)
+    fac.param(f"{pre}.conv_w", (s.d_conv, conv_ch), P(None, None), fan_in=s.d_conv)
+    fac.param(f"{pre}.conv_b", (conv_ch,), P(None), init="zeros")
+    fac.param(f"{pre}.A_log", (nheads,), P(hs), init="zeros")
+    fac.param(f"{pre}.D", (nheads,), P(hs), init="zeros")
+    fac.param(f"{pre}.dt_bias", (nheads,), P(hs), init="zeros")
+    fac.param(f"{pre}.norm", (d_in,), P(cfg.shard(d_in)), init="zeros")
+    fac.param(f"{pre}.out_proj", (d_in, d), P(cfg.shard(d_in), None), fan_in=d_in)
+
+
+def _split_proj(proj: Array, cfg: ModelConfig):
+    s, d_in, nheads = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + d_in + 2 * gn]
+    dt = proj[..., d_in + d_in + 2 * gn :]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc: Array, cfg: ModelConfig):
+    s, d_in, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in : d_in + gn]
+    c = xbc[..., d_in + gn :]
+    return x, b, c
+
+
+def _causal_conv(xbc: Array, w: Array, bias: Array) -> Array:
+    """Depthwise causal conv1d over [B,S,C] with kernel [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + bias)
+
+
+def ssd_full(p: Dict, u: Array, cfg: ModelConfig) -> Array:
+    """Mamba-2 block over a full sequence.  u [B,S,d] -> [B,S,d]."""
+    s, d_in, nheads = _dims(cfg)
+    bsz, slen, _ = u.shape
+    q = s.chunk
+    if slen % q:  # right-pad to a chunk multiple (padding can't leak: causal)
+        pad = q - slen % q
+        out = ssd_full(p, jnp.pad(u, ((0, 0), (0, pad), (0, 0))), cfg)
+        return out[:, :slen]
+    nck = slen // q
+
+    proj = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x, bmat, cmat = _split_xbc(xbc, cfg)
+
+    xh = shard_hint(x.reshape(bsz, slen, nheads, s.headdim), "b.m.")
+    bmat = bmat.reshape(bsz, slen, s.ngroups, s.d_state)
+    cmat = cmat.reshape(bsz, slen, s.ngroups, s.d_state)
+    # broadcast groups over heads
+    rep = nheads // s.ngroups
+    bh = jnp.repeat(bmat, rep, axis=2)  # [B,S,H,N]
+    ch = jnp.repeat(cmat, rep, axis=2)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))             # [H], negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    da = dt * a                                              # [B,S,H]
+
+    # chunk views
+    def ck(t):
+        return t.reshape(bsz, nck, q, *t.shape[2:])
+
+    xc, bc, cc, dac, dtc = map(ck, (xh, bh, ch, da, dt))
+
+    # intra-chunk (quadratic) term
+    cs = jnp.cumsum(dac, axis=2)                             # [B,C,Q,H]
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]        # [B,C,Q,Q,H] (i,j)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", cc, bc).astype(jnp.float32)
+    att = scores * l * dtc[:, :, None, :, :]                 # weight dt at source
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", att.astype(xc.dtype), xc)
+
+    # chunk states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)            # [B,C,Q,H]
+    wts = (decay_to_end * dtc).astype(xc.dtype)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", wts, bc, xc)
+
+    # inter-chunk recurrence over C (sequential scan, nck small; f32 state)
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))              # [B,C,H]
+
+    def body(carry, inp):
+        st, dec = inp                                        # [B,H,N,P],[B,H]
+        new = carry * dec[..., None, None] + st.astype(jnp.float32)
+        return new, carry                                    # emit state BEFORE chunk
+
+    from repro.models.common import maybe_scan
+
+    init = jnp.zeros(states[:, 0].shape, jnp.float32)
+    _, prev_states = maybe_scan(
+        body, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+        cfg.unroll_for_analysis,
+    )
+    prev_states = prev_states.swapaxes(0, 1)                 # [B,C,H,N,P]
+
+    # contribution of the entering state to each position
+    decay_from_start = jnp.exp(cs)                           # [B,C,Q,H]
+    y_off = jnp.einsum(
+        "bcqhn,bchnp,bcqh->bcqhp", cc, prev_states.astype(cc.dtype),
+        decay_from_start.astype(cc.dtype),
+    )
+
+    y = (y_diag + y_off).reshape(bsz, slen, nheads, s.headdim)
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(bsz, slen, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    s, d_in, nheads = _dims(cfg)
+    conv_ch = d_in + 2 * s.ngroups * s.d_state
+    return dict(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, nheads, s.d_state, s.headdim), jnp.float32),
+    )
+
+
+def ssd_decode_step(p: Dict, u1: Array, state: Dict, cfg: ModelConfig
+                    ) -> Tuple[Array, Dict]:
+    """One-token recurrent update.  u1 [B,1,d]."""
+    s, d_in, nheads = _dims(cfg)
+    bsz = u1.shape[0]
+    proj = jnp.einsum("bsd,de->bse", u1, p["in_proj"])[:, 0]
+    z, xbc, dt = _split_proj(proj, cfg)
+    # conv over (state, new)
+    window = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # [B,K,C]
+    conv = jnp.sum(window * p["conv_w"], axis=1) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    x, bvec, cvec = _split_xbc(xbc, cfg)
+    xh = x.reshape(bsz, nheads, s.headdim)
+    rep = nheads // s.ngroups
+    bh = jnp.repeat(bvec.reshape(bsz, s.ngroups, s.d_state), rep, axis=1)
+    chd = jnp.repeat(cvec.reshape(bsz, s.ngroups, s.d_state), rep, axis=1)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                  # [B,H]
+    upd = (dt[..., None, None] * bh[..., :, None].astype(jnp.float32)
+           * xh[..., None, :].astype(jnp.float32))           # [B,H,N,P]
+    new_ssm = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", chd.astype(jnp.float32), new_ssm)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_in).astype(u1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+    new_state = dict(conv=window[:, 1:], ssm=new_ssm)
+    return out, new_state

@@ -1,0 +1,405 @@
+"""Decoder-only LM assembly: scan-over-layers, heterogeneous block patterns,
+train / prefill / decode entry points.
+
+A "super-block" is one repeat of cfg.block_pattern (e.g. RecurrentGemma's
+(rglru, rglru, local_attn)); n_layers // len(pattern) repeats are scanned with
+stacked params (compact HLO, fast multi-device compiles), the remainder runs
+as unscanned tail blocks.  Block kinds:
+
+  attn       causal self-attention (GQA, or MLA when cfg.mla) + SwiGLU
+  attn_moe   causal self-attention + MoE FFN (+ shared experts)
+  local_attn sliding-window self-attention (cfg.local_window) + SwiGLU
+  ssm        Mamba-2 SSD mixer (no separate FFN, per the paper)
+  rglru      RG-LRU recurrent mixer + SwiGLU
+
+`constrain` is an optional activation-sharding hook (identity by default); the
+launcher passes `with_sharding_constraint(.., P("data", "model", None))` to get
+sequence-parallel residual streams on the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as ATT
+from repro.models import ffn as FFN
+from repro.models import moe as MOE
+from repro.models import rglru as RGL
+from repro.models import ssm as SSM
+from repro.models.common import (
+    ModelConfig,
+    ParamFactory,
+    maybe_map,
+    maybe_scan,
+    rms_norm,
+    softmax_xent,
+    stack_layer_params,
+)
+
+Array = jax.Array
+Identity = lambda x: x  # noqa: E731
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_subblock(fac: ParamFactory, pre: str, kind: str, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    fac.param(f"{pre}.ln1", (d,), P(None), init="zeros")
+    if kind in ("attn", "attn_moe", "local_attn"):
+        if cfg.mla is not None and kind != "local_attn":
+            ATT.init_mla(fac, f"{pre}.attn", cfg)
+        else:
+            ATT.init_gqa(fac, f"{pre}.attn", cfg)
+        fac.param(f"{pre}.ln2", (d,), P(None), init="zeros")
+        if kind == "attn_moe":
+            MOE.init_moe(fac, f"{pre}.ffn", cfg)
+        else:
+            FFN.init_swiglu(fac, f"{pre}.ffn", cfg)
+    elif kind == "ssm":
+        SSM.init_ssm(fac, f"{pre}.mixer", cfg)
+    elif kind == "rglru":
+        RGL.init_rglru(fac, f"{pre}.mixer", cfg)
+        fac.param(f"{pre}.ln2", (d,), P(None), init="zeros")
+        FFN.init_swiglu(fac, f"{pre}.ffn", cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+
+
+def _init_superblock(key: Array, cfg: ModelConfig, shape_only: bool = False):
+    fac = ParamFactory(key, dtype=cfg.dtype, shape_only=shape_only)
+    for i, kind in enumerate(cfg.block_pattern):
+        _init_subblock(fac, f"b{i}", kind, cfg)
+    return fac.collect()
+
+
+def layer_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_scanned_repeats, n_tail_blocks)."""
+    k = len(cfg.block_pattern)
+    return cfg.n_layers // k, cfg.n_layers % k
+
+
+def init_lm(key: Array, cfg: ModelConfig, shape_only: bool = False):
+    """Returns (params, specs).  shape_only=True -> ShapeDtypeStruct leaves
+    (allocation-free; the dry-run path for 236B+ configs)."""
+    k_emb, k_blocks, k_tail, k_head = jax.random.split(key, 4)
+    fac = ParamFactory(k_emb, dtype=cfg.dtype, shape_only=shape_only)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    fac.param("embed", (vp, d), P(cfg.shard(vp), None), fan_in=d)
+    fac.param("final_norm", (d,), P(None), init="zeros")
+    if not cfg.tie_embeddings:
+        fac.param("lm_head", (d, vp), P(None, cfg.shard(vp)), fan_in=d)
+    if cfg.frontend is not None:
+        fd = cfg.frontend.feature_dim
+        fac.param("projector.w1", (fd, d), P(None, cfg.shard(d)), fan_in=fd)
+        fac.param("projector.b1", (d,), P(None), init="zeros")
+        fac.param("projector.w2", (d, d), P(None, cfg.shard(d)), fan_in=d)
+        fac.param("projector.b2", (d,), P(None), init="zeros")
+    params, specs = fac.collect()
+
+    n_rep, n_tail = layer_counts(cfg)
+    if n_rep:
+        bl, bl_specs = stack_layer_params(
+            lambda k: _init_superblock(k, cfg, shape_only), k_blocks, n_rep
+        )
+        params["blocks"], specs["blocks"] = bl, bl_specs
+    for t in range(n_tail):
+        fac_t = ParamFactory(jax.random.fold_in(k_tail, t), dtype=cfg.dtype,
+                             shape_only=shape_only)
+        _init_subblock(fac_t, "b0", cfg.block_pattern[t], cfg)
+        tp, ts = fac_t.collect()
+        params[f"tail{t}"], specs[f"tail{t}"] = tp, ts
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_subblock(kind: str, p: Dict, x: Array, positions: Array,
+                    cfg: ModelConfig, window: Optional[int],
+                    constrain: Callable) -> Tuple[Array, Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "attn_moe", "local_attn"):
+        w = cfg.local_window if kind == "local_attn" else window
+        if cfg.mla is not None and kind != "local_attn":
+            h = ATT.mla_full(p["attn"], h, cfg, positions, window=w)
+        else:
+            h = ATT.gqa_full(p["attn"], h, cfg, positions, window=w)
+        x = constrain(x + h)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            y, aux = MOE.moe_ffn(p["ffn"], h2, cfg)
+        else:
+            y = FFN.swiglu(p["ffn"], h2)
+        x = constrain(x + y)
+    elif kind == "ssm":
+        x = constrain(x + SSM.ssd_full(p["mixer"], h, cfg))
+    elif kind == "rglru":
+        x = constrain(x + RGL.rglru_full(p["mixer"], h, cfg))
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = constrain(x + FFN.swiglu(p["ffn"], h2))
+    return x, aux
+
+
+def _apply_superblock(p: Dict, x: Array, positions: Array, cfg: ModelConfig,
+                      window: Optional[int], constrain: Callable):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        x, a = _apply_subblock(kind, p[f"b{i}"], x, positions, cfg, window, constrain)
+        aux = aux + a
+    return x, aux
+
+
+def forward_hidden(params: Dict, x: Array, positions: Array, cfg: ModelConfig,
+                   window: Optional[int] = None,
+                   constrain: Callable = Identity) -> Tuple[Array, Array]:
+    """Embedded inputs [B,S,d] -> final hidden [B,S,d]; returns (h, aux_loss)."""
+    n_rep, n_tail = layer_counts(cfg)
+    window = window if window is not None else cfg.window
+    block_fn = functools.partial(
+        _apply_superblock, cfg=cfg, window=window, constrain=constrain
+    )
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    aux = jnp.zeros((), jnp.float32)
+    if n_rep:
+        def body(carry, bp):
+            xx, ax = carry
+            xx, a = block_fn(bp, xx, positions)
+            return (xx, ax + a), None
+
+        (x, aux), _ = maybe_scan(body, (x, aux), params["blocks"],
+                                 cfg.unroll_for_analysis)
+    for t in range(n_tail):
+        kind = cfg.block_pattern[t]
+        sub_fn = functools.partial(
+            _apply_subblock, kind, cfg=cfg, window=window, constrain=constrain
+        )
+        if cfg.remat:
+            sub_fn = jax.checkpoint(sub_fn)
+        x, a = sub_fn(params[f"tail{t}"]["b0"], x, positions)
+        aux = aux + a
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def embed_tokens(params: Dict, tokens: Array, cfg: ModelConfig) -> Array:
+    return params["embed"][tokens]
+
+
+def logits_from_hidden(params: Dict, h: Array, cfg: ModelConfig,
+                       constrain_logits: Callable = Identity) -> Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return constrain_logits(jnp.einsum("bsd,dv->bsv", h, head))
+
+
+def hidden_for_batch(params: Dict, tokens: Array, cfg: ModelConfig,
+                     window: Optional[int] = None,
+                     embeds_prefix: Optional[Array] = None,
+                     constrain: Callable = Identity) -> Tuple[Array, Array]:
+    """tokens [B,S] (+ optional projected prefix embeddings) -> final hidden
+    over the token region [B,S,d] + MoE aux."""
+    x = embed_tokens(params, tokens, cfg)
+    npfx = 0
+    if embeds_prefix is not None:
+        pr = params["projector"]
+        e = jnp.einsum("bpf,fd->bpd", embeds_prefix.astype(cfg.dtype), pr["w1"]) + pr["b1"]
+        e = jnp.einsum("bpd,de->bpe", jax.nn.gelu(e), pr["w2"]) + pr["b2"]
+        x = jnp.concatenate([e, x], axis=1)
+        npfx = e.shape[1]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h, aux = forward_hidden(params, x, positions, cfg, window, constrain)
+    return h[:, npfx:], aux
+
+
+def forward(params: Dict, tokens: Array, cfg: ModelConfig,
+            window: Optional[int] = None,
+            embeds_prefix: Optional[Array] = None,
+            constrain: Callable = Identity,
+            constrain_logits: Callable = Identity) -> Tuple[Array, Array]:
+    """tokens [B,S] -> (logits [B,S,Vp], aux).  If `embeds_prefix` [B,P,feat]
+    is given (VLM/audio stub features), it is projected and prepended; logits
+    cover the token region only."""
+    h, aux = hidden_for_batch(params, tokens, cfg, window, embeds_prefix,
+                              constrain)
+    return logits_from_hidden(params, h, cfg, constrain_logits), aux
+
+
+def chunked_ce(params: Dict, h: Array, labels: Array, cfg: ModelConfig,
+               constrain_logits: Callable = Identity) -> Array:
+    """Per-position CE [B,S] from hidden states, lm_head applied in
+    cfg.lm_head_chunk-position slices so the [B,S,vocab] tensor never
+    materializes (163k-vocab configs would need >100 GB/device)."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    b, s, d = h.shape
+    ck = min(cfg.lm_head_chunk, s)
+
+    @jax.checkpoint
+    def one(args):
+        # rematerialized: saving per-chunk logits for backward would stack
+        # [n_chunks, B, ck, vocab] f32 residuals
+        hc, lc = args
+        logits = constrain_logits(jnp.einsum("bsd,dv->bsv", hc, head))
+        return softmax_xent(logits, lc, cfg.vocab_size)
+
+    if s <= ck:
+        return one((h, labels))
+    n, rem = divmod(s, ck)
+    hc = h[:, : n * ck].reshape(b, n, ck, d).swapaxes(0, 1)
+    lc = labels[:, : n * ck].reshape(b, n, ck).swapaxes(0, 1)
+    ce = maybe_map(one, (hc, lc), cfg.unroll_for_analysis)  # [n,B,ck]
+    ce = ce.swapaxes(0, 1).reshape(b, n * ck)
+    if rem:
+        ce_tail = one((h[:, n * ck:], labels[:, n * ck:]))
+        ce = jnp.concatenate([ce, ce_tail], axis=1)
+    return ce
+
+
+def lm_per_example_loss(params: Dict, batch: Dict, cfg: ModelConfig,
+                        window: Optional[int] = None,
+                        constrain: Callable = Identity,
+                        constrain_logits: Callable = Identity):
+    """Per-sequence mean next-token CE [B] + MoE aux scalar.  The FL layer
+    needs per-example losses so per-worker losses can be weighted by the
+    round's received coefficients (the OTA sum via one backward pass)."""
+    tokens = batch["tokens"]
+    h, aux = hidden_for_batch(
+        params, tokens[:, :-1], cfg, window=window,
+        embeds_prefix=batch.get("embeds_prefix"), constrain=constrain,
+    )
+    ce = chunked_ce(params, h, tokens[:, 1:], cfg, constrain_logits)  # [B,S-1]
+    return jnp.mean(ce, axis=-1), aux
+
+
+def lm_loss(params: Dict, batch: Dict, cfg: ModelConfig,
+            window: Optional[int] = None,
+            constrain: Callable = Identity,
+            constrain_logits: Callable = Identity) -> Array:
+    """Next-token CE (+ MoE aux).  batch: tokens [B,S] (+ optional
+    embeds_prefix); labels are tokens shifted left."""
+    per_ex, aux = lm_per_example_loss(
+        params, batch, cfg, window=window,
+        constrain=constrain, constrain_logits=constrain_logits,
+    )
+    moe_coef = cfg.moe.router_aux_coef if cfg.moe else 0.0
+    return jnp.mean(per_ex) + moe_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _init_subblock_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                         dtype) -> Dict:
+    if kind in ("attn", "attn_moe"):
+        if cfg.mla is not None:
+            return ATT.init_mla_cache(cfg, batch, max_len, dtype)
+        return ATT.init_cache(cfg, batch, max_len, cfg.window, dtype)
+    if kind == "local_attn":
+        return ATT.init_cache(cfg, batch, max_len, cfg.local_window, dtype)
+    if kind == "ssm":
+        return SSM.init_ssm_state(cfg, batch, dtype)
+    if kind == "rglru":
+        return RGL.init_rglru_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                window: Optional[int] = None) -> Dict:
+    """Stacked decode caches.  `window` overrides cfg.window for attn blocks
+    (the long-context SWA variant)."""
+    caches: Dict[str, Any] = {}
+    n_rep, n_tail = layer_counts(cfg)
+    w_attn = window if window is not None else cfg.window
+
+    def one(kind):
+        if kind in ("attn", "attn_moe") and cfg.mla is None:
+            return ATT.init_cache(cfg, batch, max_len, w_attn, cfg.dtype)
+        return _init_subblock_cache(kind, cfg, batch, max_len, cfg.dtype)
+
+    if n_rep:
+        per = {f"b{i}": one(k) for i, k in enumerate(cfg.block_pattern)}
+        caches["blocks"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), per
+        )
+    for t in range(n_tail):
+        caches[f"tail{t}"] = {"b0": one(cfg.block_pattern[t])}
+    return caches
+
+
+def _decode_subblock(kind: str, p: Dict, cache: Dict, x1: Array, pos: Array,
+                     cfg: ModelConfig, window: Optional[int]):
+    h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "attn_moe", "local_attn"):
+        w = cfg.local_window if kind == "local_attn" else window
+        if cfg.mla is not None and kind != "local_attn":
+            h, cache = ATT.mla_decode_step(p["attn"], h, cache, pos, cfg)
+        else:
+            h, cache = ATT.decode_step(p["attn"], h, cache, pos, cfg, window=w)
+        x1 = x1 + h
+        h2 = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            y, _ = MOE.moe_ffn(p["ffn"], h2, cfg)
+        else:
+            y = FFN.swiglu(p["ffn"], h2)
+        x1 = x1 + y
+    elif kind == "ssm":
+        y, cache = SSM.ssd_decode_step(p["mixer"], h, cache, cfg)
+        x1 = x1 + y
+    elif kind == "rglru":
+        y, cache = RGL.rglru_decode_step(p["mixer"], h, cache, cfg)
+        x1 = x1 + y
+        h2 = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        x1 = x1 + FFN.swiglu(p["ffn"], h2)
+    return x1, cache
+
+
+def decode_step(params: Dict, caches: Dict, tokens1: Array, pos: Array,
+                cfg: ModelConfig, window: Optional[int] = None,
+                constrain_logits: Callable = Identity):
+    """One decode step.  tokens1 [B,1] int32, pos scalar int32 (0-based index
+    of the new token).  Returns (logits [B,1,Vp], new_caches)."""
+    x = embed_tokens(params, tokens1, cfg)
+    window = window if window is not None else cfg.window
+    n_rep, n_tail = layer_counts(cfg)
+    new_caches: Dict[str, Any] = {}
+
+    def sb(p_sb, c_sb, x1):
+        c_new = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x1, c_new[f"b{i}"] = _decode_subblock(
+                kind, p_sb[f"b{i}"], c_sb[f"b{i}"], x1, pos, cfg, window
+            )
+        return x1, c_new
+
+    if n_rep:
+        def body(x1, inp):
+            p_sb, c_sb = inp
+            x1, c_new = sb(p_sb, c_sb, x1)
+            return x1, c_new
+
+        x, new_caches["blocks"] = maybe_scan(
+            body, x, (params["blocks"], caches["blocks"]),
+            cfg.unroll_for_analysis
+        )
+    for t in range(n_tail):
+        kind = cfg.block_pattern[t]
+        x, c = _decode_subblock(
+            kind, params[f"tail{t}"]["b0"], caches[f"tail{t}"]["b0"], x, pos,
+            cfg, window,
+        )
+        new_caches[f"tail{t}"] = {"b0": c}
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, h, cfg, constrain_logits), new_caches

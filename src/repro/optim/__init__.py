@@ -1,0 +1,4 @@
+from repro.optim.optimizers import adamw, apply_updates, sgd
+from repro.optim.schedules import constant, cosine, warmup_cosine
+
+__all__ = ["sgd", "adamw", "apply_updates", "constant", "cosine", "warmup_cosine"]

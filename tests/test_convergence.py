@@ -1,0 +1,100 @@
+"""Integration tests: the paper's §IV claims, in miniature.
+
+These are the behavioural contracts of the reproduction: CI ≈ EF benign,
+BEV robust where CI breaks.  Reduced rounds/dataset keep CPU time ~1 min.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.configs.registry import PAPER_MLP
+from repro.core import (
+    AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
+    first_n_mask, noise_std_for_snr,
+)
+from repro.core import theory
+from repro.data import FederatedSampler, make_dataset, worker_split
+from repro.fl import FLTrainer
+from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+U, ROUNDS = 10, 80
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_dataset(1200, seed=0)
+    xt, yt = make_dataset(400, seed=99)
+    shards = worker_split(x, y, U)
+    params = init_mlp(jax.random.PRNGKey(0))
+    return shards, params, jnp.asarray(xt), jnp.asarray(yt)
+
+
+def run(setup, policy, n_atk, alpha_hat=0.1, rounds=ROUNDS, sigma=1.0):
+    shards, params, xt, yt = setup
+    d = PAPER_MLP.full().dim
+    tp = theory.TheoryParams(num_workers=U, num_attackers=n_atk, dim=d,
+                             sigma=sigma)
+    pol = "ef" if policy == Policy.EF else policy.value
+    alpha = theory.alpha_from_alpha_hat(tp, pol, alpha_hat)
+    floa = FLOAConfig(
+        channel=ChannelConfig(num_workers=U, sigma=sigma,
+                              noise_std=0.0 if policy == Policy.EF
+                              else noise_std_for_snr(1.0, d, 10.0)),
+        power=PowerConfig(num_workers=U, dim=d, p_max=1.0, policy=policy),
+        attack=AttackConfig(
+            attack=AttackType.STRONGEST if n_atk else AttackType.NONE,
+            byzantine_mask=first_n_mask(U, n_atk)),
+    )
+    tr = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha,
+                   eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt, yt)})
+    sampler = FederatedSampler(shards, batch_per_worker=32, seed=1)
+    _, logs = tr.run(dict(params), sampler, rounds, jax.random.PRNGKey(42),
+                     eval_every=rounds - 1)
+    return logs[-1]
+
+
+def test_fig1_benign_ci_close_to_ef(setup):
+    ef = run(setup, Policy.EF, 0)
+    ci = run(setup, Policy.CI, 0)
+    bev = run(setup, Policy.BEV, 0)
+    assert ef.accuracy > 0.8
+    assert abs(ci.accuracy - ef.accuracy) < 0.05          # CI ~ EF
+    assert bev.accuracy > 0.7                             # BEV converges too
+    assert bev.accuracy <= ci.accuracy + 0.03             # ... a bit behind
+
+
+def test_fig4_ci_breaks_at_4_attackers_bev_survives(setup):
+    ci = run(setup, Policy.CI, 4)
+    bev = run(setup, Policy.BEV, 4)
+    # N=4 > U/(1+sqrt(pi U)) = 1.51: CI diverges (loss explodes / chance acc)
+    assert ci.accuracy < 0.35 or ci.loss > 2.0
+    # BEV threshold U/2=5: still converging in the right direction
+    assert bev.loss < ci.loss
+    assert bev.accuracy > ci.accuracy
+
+
+def test_single_attacker_bev_beats_ci(setup):
+    ci = run(setup, Policy.CI, 1)
+    bev = run(setup, Policy.BEV, 1)
+    assert bev.accuracy >= ci.accuracy - 0.02
+
+
+def test_digital_krum_defends(setup):
+    """Beyond paper: in digital mode Krum screens the sign-flippers out."""
+    shards, params, xt, yt = setup
+    d = PAPER_MLP.full().dim
+    floa = FLOAConfig(
+        channel=ChannelConfig(num_workers=U, sigma=1.0, noise_std=0.0),
+        power=PowerConfig(num_workers=U, dim=d, p_max=1.0, policy=Policy.EF),
+        attack=AttackConfig(attack=AttackType.STRONGEST,
+                            byzantine_mask=first_n_mask(U, 3)),
+    )
+    tr = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=0.1, mode="digital",
+                   defense="krum", defense_kwargs=dict(num_byzantine=3),
+                   eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt, yt)})
+    sampler = FederatedSampler(shards, batch_per_worker=32, seed=1)
+    _, logs = tr.run(dict(params), sampler, ROUNDS, jax.random.PRNGKey(1),
+                     eval_every=ROUNDS - 1)
+    assert logs[-1].accuracy > 0.8

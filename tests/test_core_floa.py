@@ -1,0 +1,164 @@
+"""Unit tests for the core FLOA library (channel, power, attacks, eq. 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core import (
+    AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
+    aggregate, first_n_mask, floa_grad, mean_aggregate, noise_std_for_snr,
+    per_worker_grads, sample_channel_gains,
+)
+from repro.core import attacks as ATK
+from repro.core import power_control as PC
+from repro.core import standardize as S
+
+U, D = 8, 64
+
+
+def make_cfg(policy=Policy.BEV, n_atk=0, noise=0.0,
+             attack=AttackType.STRONGEST, sigma=1.0):
+    return FLOAConfig(
+        channel=ChannelConfig(num_workers=U, sigma=sigma, noise_std=noise),
+        power=PowerConfig(num_workers=U, dim=D, p_max=1.0, policy=policy),
+        attack=AttackConfig(attack=attack if n_atk else AttackType.NONE,
+                            byzantine_mask=first_n_mask(U, n_atk)),
+    )
+
+
+def quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_problem(key):
+    kx, ky, kw = jax.random.split(key, 3)
+    params = {"w": jax.random.normal(kw, (4, 1)) * 0.3}
+    batch = {"x": jax.random.normal(kx, (U * 4, 4)),
+             "y": jax.random.normal(ky, (U * 4, 1))}
+    return params, batch
+
+
+def test_channel_moments():
+    cfg = ChannelConfig(num_workers=2000, sigma=1.5)
+    h = sample_channel_gains(jax.random.PRNGKey(0), cfg)
+    # E|h| = sigma sqrt(pi/2); E|h|^2 = 2 sigma^2
+    assert np.isclose(float(jnp.mean(h)), 1.5 * np.sqrt(np.pi / 2), rtol=0.05)
+    assert np.isclose(float(jnp.mean(h**2)), 2 * 1.5**2, rtol=0.07)
+
+
+def test_ci_inverts_channel():
+    ch = ChannelConfig(num_workers=U, sigma=1.0)
+    pw = PowerConfig(num_workers=U, dim=D, p_max=1.0, policy=Policy.CI)
+    h = sample_channel_gains(jax.random.PRNGKey(1), ch)
+    coeff = PC.received_coefficients(h, pw, ch)
+    # all received amplitudes identical == b0
+    b0 = PC.ci_b0(pw, ch)
+    np.testing.assert_allclose(np.asarray(coeff), float(b0), rtol=1e-6)
+
+
+def test_bev_max_power():
+    ch = ChannelConfig(num_workers=U, sigma=1.0)
+    pw = PowerConfig(num_workers=U, dim=D, p_max=2.0, policy=Policy.BEV)
+    h = sample_channel_gains(jax.random.PRNGKey(1), ch)
+    amp = PC.transmit_amplitudes(h, pw, ch)
+    np.testing.assert_allclose(np.asarray(amp), np.sqrt(2.0 / D), rtol=1e-6)
+    # power constraint (eq. 4): D p^2 <= p_max
+    assert np.all(D * np.asarray(amp) ** 2 <= 2.0 + 1e-6)
+
+
+def test_truncated_ci_respects_power_constraint():
+    ch = ChannelConfig(num_workers=U, sigma=1.0)
+    pw = PowerConfig(num_workers=U, dim=D, p_max=1.0, policy=Policy.TRUNCATED_CI)
+    for i in range(20):
+        h = sample_channel_gains(jax.random.PRNGKey(i), ch)
+        amp = PC.transmit_amplitudes(h, pw, ch)
+        assert np.all(D * np.asarray(amp) ** 2 <= 1.0 + 1e-6)
+
+
+def test_standardize_roundtrip():
+    g = jax.random.normal(jax.random.PRNGKey(0), (U, D))
+    tree = {"a": g[:, :32], "b": g[:, 32:]}
+    gbar_i, eps2_i = S.per_worker_scalar_stats(tree)
+    np.testing.assert_allclose(np.asarray(gbar_i), np.asarray(g).mean(1),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(eps2_i), np.asarray(g).var(1),
+                               rtol=1e-4)
+    gbar, eps2 = S.global_stats(gbar_i, eps2_i)
+    std = S.standardize(tree, gbar, eps2)
+    back = S.destandardize(std, jnp.float32(1.0), gbar, eps2)
+    # coeff_sum=1 and a single worker's view: destandardize(standardize(g)) = g
+    np.testing.assert_allclose(
+        np.asarray(back["a"]), np.asarray(tree["a"]), rtol=2e-4, atol=2e-5)
+
+
+def test_strongest_attack_power_accounting():
+    # eq. 32: E||phat ghat||^2 = phat^2 D (eps2 + gbar^2) == p_max
+    gbar, eps2 = jnp.float32(0.3), jnp.float32(0.7)
+    phat = ATK.strongest_attack_amplitude(jnp.float32(1.0), D, gbar, eps2)
+    np.testing.assert_allclose(
+        float(phat**2 * D * (eps2 + gbar**2)), 1.0, rtol=1e-6)
+
+
+def test_aggregate_matches_manual_eq7():
+    """The aggregate must equal eq. (7) computed by hand in numpy."""
+    key = jax.random.PRNGKey(3)
+    params, batch = make_problem(key)
+    cfg = make_cfg(policy=Policy.BEV, n_atk=2, noise=0.0)
+    grads_u, _ = per_worker_grads(quad_loss, params, batch, U)
+    gagg, aux = aggregate(grads_u, key, cfg)
+
+    g = np.asarray(grads_u["w"]).reshape(U, -1)
+    gbar_i, eps2_i = g.mean(1), g.var(1)
+    gbar, eps2 = gbar_i.mean(), eps2_i.mean()
+    h = np.asarray(aux["h_abs"])
+    s_honest = np.sqrt(1.0 / D) * h
+    phat = np.sqrt(1.0 / (D * (gbar**2 + eps2)))
+    want = np.zeros(g.shape[1])
+    for i in range(U):
+        if i < 2:  # attacker: -eps*phat*h*g + p|h|*gbar*1
+            want += -np.sqrt(eps2) * phat * h[i] * g[i]
+            want += s_honest[i] * gbar
+        else:
+            want += s_honest[i] * g[i]
+    np.testing.assert_allclose(np.asarray(gagg["w"]).reshape(-1), want,
+                               rtol=2e-4, atol=1e-6)
+
+
+def test_ef_equals_mean():
+    key = jax.random.PRNGKey(4)
+    params, batch = make_problem(key)
+    grads_u, _ = per_worker_grads(quad_loss, params, batch, U)
+    gagg, _ = aggregate(grads_u, key, make_cfg(policy=Policy.EF))
+    want = mean_aggregate(grads_u)
+    np.testing.assert_allclose(np.asarray(gagg["w"]), np.asarray(want["w"]),
+                               rtol=1e-5)
+
+
+def test_per_worker_grads_match_individual():
+    key = jax.random.PRNGKey(5)
+    params, batch = make_problem(key)
+    grads_u, _ = per_worker_grads(quad_loss, params, batch, U)
+    for i in [0, 3, U - 1]:
+        sub = {k: v[i * 4:(i + 1) * 4] for k, v in batch.items()}
+        gi = jax.grad(quad_loss)(params, sub)
+        np.testing.assert_allclose(np.asarray(grads_u["w"][i]),
+                                   np.asarray(gi["w"]), rtol=1e-5)
+
+
+def test_noise_snr_relation():
+    z = noise_std_for_snr(1.0, D, 10.0)
+    assert np.isclose(1.0 / (D * z**2), 10.0, rtol=1e-6)
+
+
+def test_gaussian_attack_adds_noise_only():
+    key = jax.random.PRNGKey(6)
+    params, batch = make_problem(key)
+    cfg = make_cfg(policy=Policy.BEV, n_atk=2, attack=AttackType.GAUSSIAN)
+    grads_u, _ = per_worker_grads(quad_loss, params, batch, U)
+    gagg, aux = aggregate(grads_u, key, cfg)
+    # attacker payload coefficients are zero
+    assert np.allclose(np.asarray(aux["coeffs"][:2]), 0.0)
+    assert np.all(np.asarray(aux["coeffs"][2:]) > 0.0)

@@ -1,0 +1,115 @@
+"""Hypothesis property tests on the FLOA system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core import (
+    AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
+    aggregate, first_n_mask, per_worker_grads,
+)
+from repro.core import power_control as PC
+from repro.core import standardize as S
+from repro.core.channel import sample_channel_gains
+
+
+def _grads(key, u, d):
+    g = jax.random.normal(key, (u, d)) * 0.5 + 0.1
+    return {"w": g}
+
+
+@given(u=st.integers(2, 12), d=st.integers(8, 200), seed=st.integers(0, 999))
+@settings(max_examples=30, deadline=None)
+def test_property_ef_aggregate_is_exact_mean(u, d, seed):
+    key = jax.random.PRNGKey(seed)
+    grads_u = _grads(key, u, d)
+    cfg = FLOAConfig(
+        channel=ChannelConfig(num_workers=u, noise_std=0.0),
+        power=PowerConfig(num_workers=u, dim=d, policy=Policy.EF),
+    )
+    gagg, _ = aggregate(grads_u, key, cfg)
+    np.testing.assert_allclose(np.asarray(gagg["w"]),
+                               np.asarray(grads_u["w"]).mean(0),
+                               rtol=1e-4, atol=1e-6)
+
+
+@given(u=st.integers(2, 12), seed=st.integers(0, 999),
+       pmax=st.floats(0.05, 8.0))
+@settings(max_examples=40, deadline=None)
+def test_property_power_constraints_hold(u, seed, pmax):
+    """Every policy satisfies eq. (4): D p_i^2 <= p_max (CI in expectation
+    via b0; BEV/truncated exactly)."""
+    d = 64
+    ch = ChannelConfig(num_workers=u, sigma=1.0)
+    h = sample_channel_gains(jax.random.PRNGKey(seed), ch)
+    for pol in (Policy.BEV, Policy.TRUNCATED_CI):
+        pw = PowerConfig(num_workers=u, dim=d, p_max=pmax, policy=pol)
+        amp = PC.transmit_amplitudes(h, pw, ch)
+        assert np.all(d * np.asarray(amp) ** 2 <= pmax * (1 + 1e-5))
+    # CI average-power accounting: E[b0^2/|h|^2] * D = P0max*lambda*E[1/|h|^2]
+    pw = PowerConfig(num_workers=u, dim=d, p_max=pmax, policy=Policy.CI)
+    b0 = float(PC.ci_b0(pw, ch))
+    assert b0 > 0 and np.isfinite(b0)
+
+
+@given(u=st.integers(3, 10), n=st.integers(0, 4), seed=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_property_attack_flips_make_aggregate_worse(u, n, seed):
+    """The strongest attack never increases the aggregate's alignment with
+    the honest mean gradient (in the noiseless channel)."""
+    n = min(n, u - 1)
+    d = 64
+    key = jax.random.PRNGKey(seed)
+    grads_u = _grads(key, u, d)
+    mean_g = np.asarray(grads_u["w"]).mean(0)
+
+    def agg(n_atk):
+        cfg = FLOAConfig(
+            channel=ChannelConfig(num_workers=u, noise_std=0.0),
+            power=PowerConfig(num_workers=u, dim=d, policy=Policy.BEV),
+            attack=AttackConfig(
+                attack=AttackType.STRONGEST if n_atk else AttackType.NONE,
+                byzantine_mask=first_n_mask(u, n_atk)),
+        )
+        g, _ = aggregate(grads_u, key, cfg)  # same key -> same channel draw
+        return np.asarray(g["w"])
+
+    align_clean = float(np.dot(agg(0).ravel(), mean_g.ravel()))
+    align_atk = float(np.dot(agg(n).ravel(), mean_g.ravel()))
+    assert align_atk <= align_clean + 1e-5
+
+
+@given(u=st.integers(2, 10), d=st.integers(16, 256), seed=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_property_standardized_unit_stats(u, d, seed):
+    """eq. (3): standardized symbols have ~zero mean, ~unit variance when a
+    worker's stats match the global stats."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (1, d)) * 2.0 + 0.7
+    tree = {"w": g}
+    gbar_i, eps2_i = S.per_worker_scalar_stats(tree)
+    std = S.standardize(tree, gbar_i[0], eps2_i[0])
+    arr = np.asarray(std["w"])
+    assert abs(arr.mean()) < 1e-3
+    assert abs(arr.var() - 1.0) < 1e-2
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=25, deadline=None)
+def test_property_aggregate_linear_in_grads(seed):
+    """The received aggregate is linear in the payload gradients for fixed
+    channel/stats draws (superposition principle of the MAC)."""
+    u, d = 6, 32
+    key = jax.random.PRNGKey(seed)
+    g1 = _grads(jax.random.fold_in(key, 1), u, d)
+    cfg = FLOAConfig(
+        channel=ChannelConfig(num_workers=u, noise_std=0.0),
+        power=PowerConfig(num_workers=u, dim=d, policy=Policy.BEV),
+    )
+    a1, aux1 = aggregate(g1, key, cfg)
+    g2 = {"w": g1["w"] * 2.0}
+    # stats change under scaling, but honest BEV coefficients do not
+    a2, aux2 = aggregate(g2, key, cfg)
+    np.testing.assert_allclose(np.asarray(a2["w"]), 2 * np.asarray(a1["w"]),
+                               rtol=1e-4)

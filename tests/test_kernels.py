@@ -1,0 +1,70 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("u", [4, 10, 32])
+@pytest.mark.parametrize("d", [512, 2048, 5000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_floa_aggregate_sweep(u, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(u * d), 4)
+    coeffs = jax.random.normal(ks[0], (u,))
+    grads = jax.random.normal(ks[1], (u, d)).astype(dtype)
+    noise = jax.random.normal(ks[2], (d,)).astype(dtype)
+    bias, eps = jnp.float32(-0.2), jnp.float32(1.3)
+    got = ops.floa_aggregate(coeffs, grads, noise, bias, eps, interpret=True)
+    want = ops.floa_aggregate_ref(coeffs, grads, noise, bias, eps)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("u,d", [(4, 256), (10, 2048), (16, 5000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grad_stats_sweep(u, d, dtype):
+    g = (jax.random.normal(jax.random.PRNGKey(u + d), (u, d)) * 0.7).astype(dtype)
+    got = ops.grad_stats(g, interpret=True)
+    want = ops.grad_stats_ref(g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("b,h,kv,dh,s", [
+    (1, 4, 1, 64, 512),     # MQA
+    (2, 8, 2, 64, 1024),    # GQA
+    (2, 8, 8, 128, 777),    # MHA, ragged length
+    (1, 16, 4, 128, 2048),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, h, kv, dh, s, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, dh)).astype(dtype)
+    pos = jnp.int32(s - 3)
+    got = ops.decode_attention(q, k, v, pos, interpret=True)
+    want = ops.decode_attention_ref(q, k, v, pos)
+    tol = 2e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_decode_attention_masks_future():
+    """Entries beyond pos must not affect the output."""
+    b, h, kv, dh, s = 1, 4, 2, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    pos = jnp.int32(100)
+    out1 = ops.decode_attention(q, k, v, pos, interpret=True)
+    k2 = k.at[:, 101:].set(99.0)
+    v2 = v.at[:, 101:].set(-99.0)
+    out2 = ops.decode_attention(q, k2, v2, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)

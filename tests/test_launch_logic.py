@@ -1,0 +1,99 @@
+"""Pure-logic tests for the launch layer (no multi-device mesh needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.steps import batch_shapes, decode_window
+from repro.launch.sharding import fsdp_augment
+from repro.models.common import ModelConfig
+
+
+def test_batch_shapes_per_family():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, model_parallel=16)
+        for name, shape in INPUT_SHAPES.items():
+            if name in cfg.skip_shapes:
+                continue
+            b = batch_shapes(cfg, shape, shape["kind"])
+            assert "tokens" in b
+            assert b["tokens"].shape[0] == shape["global_batch"]
+            if cfg.arch_type == "vlm":
+                assert "embeds_prefix" in b
+                total = b["embeds_prefix"].shape[1] + b["tokens"].shape[1] - (
+                    1 if shape["kind"] != "prefill" else 0)
+                assert total == shape["seq_len"]
+            elif cfg.arch_type == "audio":
+                assert b["frames"].shape[1] <= cfg.encdec.enc_seq_cap
+            else:
+                expect = shape["seq_len"] + (0 if shape["kind"] == "prefill" else 1)
+                assert b["tokens"].shape[1] == expect
+
+
+def test_decode_window_policy():
+    # native SWA models keep their window everywhere
+    sc = get_config("starcoder2-3b")
+    assert decode_window(sc, "decode_32k") == 4096
+    assert decode_window(sc, "long_500k") == 4096
+    # full-attention dense models: window ONLY for long_500k
+    qw = get_config("qwen3-4b")
+    assert decode_window(qw, "decode_32k") is None
+    assert decode_window(qw, "long_500k") == 8192
+    # MLA: full attention even at 500k (compressed cache fits)
+    ds = get_config("deepseek-v2-236b")
+    assert decode_window(ds, "long_500k") is None
+    # ssm has no attention windows at all
+    mb = get_config("mamba2-1.3b")
+    assert decode_window(mb, "long_500k") is None
+
+
+def test_fsdp_augment_shards_large_leaves_only():
+    import numpy as np
+    from repro.launch.mesh import make_debug_mesh
+    # fake 'mesh' with data axis of 4 — use jax devices trick not needed:
+    # construct via Mesh of 1 device? fsdp_augment only reads mesh.shape.
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+
+    specs = {"big": P(None, "model"), "small": P(None)}
+    shapes = {
+        "big": jax.ShapeDtypeStruct((1 << 12, 1 << 12), jnp.float32),  # 16M
+        "small": jax.ShapeDtypeStruct((128,), jnp.float32),
+    }
+    out = fsdp_augment(specs, shapes, FakeMesh(), axis="data")
+    assert out["big"] == P("data", "model")
+    assert out["small"] == P(None)
+
+
+def test_fsdp_augment_skips_leading_scan_dim():
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+
+    specs = {"stacked": P(None, None, "model")}
+    shapes = {"stacked": jax.ShapeDtypeStruct((60, 4096, 4096), jnp.bfloat16)}
+    out = fsdp_augment(specs, shapes, FakeMesh(), axis="data")
+    # dim0 (layer stack) untouched; dim1 gets the data axis
+    assert out["stacked"] == P(None, "data", "model")
+
+
+def test_probe_extrapolation_math():
+    from repro.launch.dryrun import probe_costs  # noqa: F401 (import check)
+    # linear model: f(L) = 7 + 3L measured at L=1,2 -> predict L=60
+    def ext(v1, v2, n):
+        body = v2 - v1
+        return max(v1 - body, 0.0) + body * n
+
+    assert ext(10.0, 13.0, 60) == pytest.approx(7 + 3 * 60)
+
+
+def test_skip_shapes_enforced():
+    from repro.configs import shape_applicable
+    cfg = get_config("seamless-m4t-large-v2")
+    assert not shape_applicable(cfg, "long_500k")
+    assert shape_applicable(cfg, "decode_32k")
+    for arch in ARCH_IDS:
+        if arch == "seamless-m4t-large-v2":
+            continue
+        assert shape_applicable(get_config(arch), "long_500k"), arch

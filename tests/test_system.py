@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the FLOA system (paper pipeline glue)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_smoke
+from repro.core import (
+    AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
+    first_n_mask, floa_grad,
+)
+from repro.launch.hlo_analysis import (
+    active_params, collective_bytes, dominant, model_flops, roofline_terms,
+)
+from repro.models.mlp import init_mlp, mlp_loss
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    kinds = {get_smoke(a).arch_type for a in ARCH_IDS}
+    assert kinds == {"dense", "vlm", "ssm", "moe", "hybrid", "audio"}
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+
+
+def test_full_configs_match_assignment():
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == (60, 5120, 128, 102400)
+    assert c.moe.num_experts == 160 and c.moe.top_k == 6 and c.mla.kv_lora == 512
+    c = get_config("starcoder2-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (30, 3072, 24, 2, 12288, 49152)
+    c = get_config("mamba2-1.3b")
+    assert c.ssm.d_state == 128 and c.vocab_size == 50280
+    c = get_config("llama4-maverick-400b-a17b")
+    assert c.moe.num_experts == 128 and c.moe.top_k == 1
+    c = get_config("seamless-m4t-large-v2")
+    assert c.vocab_size == 256206 and "long_500k" in c.skip_shapes
+
+
+def test_floa_grad_end_to_end_mlp():
+    u, d = 10, 50890
+    cfg = FLOAConfig(
+        channel=ChannelConfig(num_workers=u, sigma=1.0, noise_std=0.001),
+        power=PowerConfig(num_workers=u, dim=d, p_max=1.0, policy=Policy.BEV),
+        attack=AttackConfig(attack=AttackType.STRONGEST,
+                            byzantine_mask=first_n_mask(u, 2)),
+    )
+    params = init_mlp(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    batch = {"x": jax.random.normal(key, (40, 784)),
+             "y": jax.random.randint(key, (40,), 0, 10)}
+    g, aux = jax.jit(lambda p, b, k: floa_grad(mlp_loss, p, b, k, cfg))(
+        params, batch, key)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(g))
+    assert np.asarray(aux["coeffs"])[:2].max() < 0  # attackers flipped
+    assert np.asarray(aux["coeffs"])[2:].min() > 0
+
+
+def test_hlo_collective_parser():
+    hlo = """
+  %ar = bf16[16,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[8,128]{1,0} all-gather(%y), dimensions={0}
+  %rs = (f32[4,64]{1,0}, f32[4,64]{1,0}) reduce-scatter(%a, %b), dimensions={0}
+  %done = f32[8,128]{1,0} all-gather-done(%ag.1)
+  %cp = u32[2]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    cb = collective_bytes(hlo)
+    assert cb["all-reduce"] == 16 * 256 * 2
+    assert cb["all-gather"] == 8 * 128 * 4
+    assert cb["reduce-scatter"] == 2 * 4 * 64 * 4
+    assert cb["collective-permute"] == 2 * 4
+    assert cb["total"] == sum(cb[k] for k in
+                              ("all-reduce", "all-gather", "reduce-scatter",
+                               "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms_and_dominant():
+    t = roofline_terms(197e12, 819e9, 50e9)  # exactly 1 second each
+    assert np.isclose(t["compute_s"], 1.0) and np.isclose(t["memory_s"], 1.0)
+    t2 = roofline_terms(1e12, 819e9 * 5, 0)
+    assert dominant(t2) == "memory_s"
+
+
+def test_model_flops_and_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    n = 236_000_000_000
+    na = active_params(cfg, n)
+    assert na < n * 0.2  # MoE: active params << total
+    sh = dict(seq_len=4096, global_batch=256, kind="train")
+    assert model_flops(cfg, sh, n, na) == 6 * na * 4096 * 256
+    shd = dict(seq_len=32768, global_batch=128, kind="decode")
+    assert model_flops(cfg, shd, n, na) == 2 * na * 128

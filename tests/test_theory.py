@@ -1,0 +1,148 @@
+"""Theory (Thms 1-3, Remarks) — closed forms + hypothesis property tests."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory as TH
+from repro.core import (
+    AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
+    aggregate, first_n_mask, per_worker_grads,
+)
+
+
+def test_remark2_ci_threshold_iso():
+    """The paper's Remark-2 bound is sufficient; the exact iso threshold
+    (solving omega_CI>0 from eq. 21) is U/(1+sqrt(pi U)/2)."""
+    for u in (6, 10, 20, 50):
+        paper_thr = TH.max_attackers_ci_iso(u)
+        exact_thr = TH.max_attackers_ci_iso_exact(u)
+        assert paper_thr <= exact_thr  # paper bound is conservative
+        for n in range(0, u // 2 + 1):
+            tp = TH.TheoryParams(num_workers=u, num_attackers=n, dim=100)
+            if n < paper_thr:
+                assert TH.omega_ci(tp) > 0, (u, n)     # sufficient
+            if n < exact_thr:
+                assert TH.omega_ci(tp) > 0, (u, n)     # exact, below
+            if n > exact_thr:
+                assert TH.omega_ci(tp) < 0, (u, n)     # exact, above
+
+
+def test_remark4_bev_threshold_iso():
+    for u in (6, 10, 20):
+        for n in range(0, u + 1):
+            tp = TH.TheoryParams(num_workers=u, num_attackers=n, dim=100)
+            if n < u / 2:
+                assert TH.omega_bev(tp) > 0
+            if n > u / 2:
+                assert TH.omega_bev(tp) < 0
+
+
+def test_bev_tolerates_more_attackers_than_ci():
+    for u in (6, 10, 24, 100):
+        assert TH.max_attackers_bev_iso(u) >= TH.max_attackers_ci_iso(u)
+
+
+def test_omega_formulas_match_paper_special_case():
+    # Remark 2: omega_CI = (M/sqrt(U) - sqrt(N^2 pi/4)) sqrt(2 pmax sigma^2 / D)
+    u, n, d = 10, 3, 50
+    tp = TH.TheoryParams(num_workers=u, num_attackers=n, dim=d)
+    m = u - n
+    want = (m / math.sqrt(u) - math.sqrt(n**2 * math.pi / 4.0)) * math.sqrt(
+        2.0 * 1.0 * 1.0 / d)
+    assert np.isclose(TH.omega_ci(tp), want, rtol=1e-12)
+
+
+def test_lemma1_no_attack_ci():
+    # N=0: omega_CI^2 == Omega_CI (so the rate collapses to the EF form)
+    tp = TH.TheoryParams(num_workers=10, num_attackers=0, dim=50)
+    assert np.isclose(TH.omega_ci(tp) ** 2, TH.Omega_ci(tp), rtol=1e-12)
+
+
+def test_remark6_bev_no_attack_slower():
+    # omega_BEV^2 <= Omega_BEV at N=0 (BEV pays a benign-case penalty)
+    tp = TH.TheoryParams(num_workers=10, num_attackers=0, dim=50)
+    assert TH.omega_bev(tp) ** 2 <= TH.Omega_bev(tp) + 1e-12
+
+
+@given(
+    u=st.integers(4, 32),
+    frac=st.floats(0.0, 0.45),
+    sigma=st.floats(0.2, 3.0),
+    pmax=st.floats(0.1, 4.0),
+    d=st.integers(10, 10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_convergence_condition_consistent(u, frac, sigma, pmax, d):
+    """alpha < 2 omega/(L Omega) <=> converges() for both policies."""
+    n = int(u * frac)
+    tp = TH.TheoryParams(num_workers=u, num_attackers=n, dim=d,
+                         sigma=sigma, p_max=pmax)
+    lip = 1.7
+    for pol in ("ci", "bev"):
+        bound = TH.lr_upper_bound(tp, pol, lip)
+        if bound > 0:
+            assert TH.converges(tp, pol, bound * 0.5, lip)
+            assert not TH.converges(tp, pol, bound * 1.5, lip)
+        else:
+            assert not TH.converges(tp, pol, 1e-3, lip)
+
+
+@given(st.integers(4, 24), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_property_omega_monotone_in_attackers(u, n):
+    """More attackers never helps: omega decreases monotonically with N."""
+    n = min(n, u - 1)
+    for pol_omega in (TH.omega_ci, TH.omega_bev):
+        prev = None
+        for k in range(n + 1):
+            tp = TH.TheoryParams(num_workers=u, num_attackers=k, dim=64)
+            w = pol_omega(tp)
+            if prev is not None:
+                assert w <= prev + 1e-12
+            prev = w
+
+
+def test_rate_bound_decreases_with_T():
+    tp = TH.TheoryParams(num_workers=10, num_attackers=1, dim=50890)
+    kw = dict(lipschitz=1.0, f0_minus_fstar=2.0, delta2=1.0, eps_bound=1.0,
+              noise_std=0.01, alpha_bar=0.5)
+    b1 = TH.rate_bound(tp, "bev", total_steps=100, **kw)
+    b2 = TH.rate_bound(tp, "bev", total_steps=10_000, **kw)
+    assert b2 < b1
+    assert TH.rate_bound(
+        TH.TheoryParams(num_workers=10, num_attackers=6, dim=50890),
+        "bev", total_steps=100, **kw) == float("inf")
+
+
+def test_thm1_strongest_attack_is_worst_direction():
+    """Thm 1 (empirical form): among attacker payload choices with the same
+    power accounting, the sign-flipped own gradient minimizes the expected
+    inner product g_t . contribution — i.e. maximally deters descent."""
+    key = jax.random.PRNGKey(0)
+    u, d = 8, 32
+    g = jax.random.normal(key, (u, d)) * 0.7 + 0.5  # correlated worker grads
+    g_mean = g.mean(0)
+    gbar = float(g.mean())
+    eps2 = float(g.var())
+    phat = 1.0 / math.sqrt(d * (gbar**2 + eps2))
+    # candidate payloads for attacker 0, all obeying the same accounting
+    rng = np.random.default_rng(1)
+    best = None
+    for trial in range(200):
+        v = rng.normal(size=d)
+        v = v / np.sqrt((v**2).mean()) * np.sqrt(eps2 + gbar**2)  # same power
+        score = float(np.dot(np.asarray(g_mean), v))
+        best = score if best is None else min(best, score)
+    flip = -np.asarray(g[0]) * 1.0
+    flip_score = float(np.dot(np.asarray(g_mean), flip))
+    # sign-flip of one's own (correlated) gradient beats the best of 200
+    # random same-power directions (deterministic seeds)
+    assert flip_score < 0
+    assert flip_score <= best
+    # and it is strictly worse than honest behaviour
+    honest_score = float(np.dot(np.asarray(g_mean), np.asarray(g[0])))
+    assert flip_score < honest_score
