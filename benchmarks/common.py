@@ -4,11 +4,16 @@ Experimental setup per the paper: MLP 784-64-10 (D=50890), U=10 workers,
 3000 training samples i.i.d.-split, receive SNR 10 dB, Rayleigh CN(0,1)
 channels, strongest attack (Thm 1), learning rate set via the scaled
 alpha_hat = (Omega/omega) * alpha.
+
+Each figure is ONE compiled sweep (`run_figure`): every experiment becomes a
+lane of a stacked scenario axis and all rounds run inside one scan — no
+per-round or per-experiment Python dispatch.  `run_experiment` keeps the
+legacy looped-trainer path for comparison (see sweep_bench.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +31,7 @@ from repro.core import (
 )
 from repro.core import theory
 from repro.data import FederatedSampler, make_dataset, worker_split
-from repro.fl import FLTrainer
+from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 
 jax.config.update("jax_threefry_partitionable", True)
@@ -44,8 +49,9 @@ class Experiment:
     seed: int = 42
 
 
-def run_experiment(exp: Experiment, eval_every: int = 10) -> List:
-    mc = PAPER_MLP.full()
+def experiment_floa(exp: Experiment, mc=None) -> Tuple[FLOAConfig, float]:
+    """Experiment -> (FLOAConfig, raw alpha) — the paper's §IV setup."""
+    mc = mc or PAPER_MLP.full()
     u, d = mc.num_workers, mc.dim
     sigma = [exp.attacker_sigma if (exp.attacker_sigma is not None and
                                     i < exp.n_attackers) else mc.sigma
@@ -66,17 +72,49 @@ def run_experiment(exp: Experiment, eval_every: int = 10) -> List:
             attack=exp.attack if exp.n_attackers else AttackType.NONE,
             byzantine_mask=first_n_mask(u, exp.n_attackers)),
     )
+    return floa, alpha
 
+
+def figure_setup(mc=None):
+    """Dataset + init + eval shared by every figure (and every lane)."""
+    mc = mc or PAPER_MLP.full()
     x, y = make_dataset(mc.train_samples, seed=0)
     xt, yt = make_dataset(mc.test_samples, seed=99)
-    shards = worker_split(x, y, u)
-    params = init_mlp(jax.random.PRNGKey(0))
     xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+    shards = worker_split(x, y, mc.num_workers)
+    params = init_mlp(jax.random.PRNGKey(0))
+    eval_fn = lambda p: {"accuracy": mlp_accuracy(p, xt_j, yt_j)}
+    return mc, shards, params, eval_fn
 
-    tr = FLTrainer(
-        loss_fn=mlp_loss, floa=floa, alpha=alpha,
-        eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt_j, yt_j)},
-    )
+
+def run_figure(exps: List[Experiment], eval_every: int = 10,
+               mc=None) -> Dict[str, List]:
+    """All of a figure's experiments as ONE compiled sweep call.
+
+    Every experiment uses the same dataset and batch sequence (sampler
+    seed=1), exactly as the legacy per-experiment loop did; returns
+    {exp.name: [RoundLog, ...]} on the `eval_every` schedule.
+    """
+    mc, shards, params, eval_fn = figure_setup(mc)
+    rounds = exps[0].rounds
+    assert all(e.rounds == rounds for e in exps), "one sweep, one R"
+    spec = SweepSpec.build([
+        ScenarioCase(e.name, *experiment_floa(e, mc), seed=e.seed)
+        for e in exps
+    ])
+    batches = FederatedSampler(shards, mc.batch_per_worker,
+                               seed=1).stack_rounds(rounds)
+    result = SweepEngine(mlp_loss, spec, eval_fn=eval_fn,
+                         eval_every=eval_every).run(params, batches)
+    return {name: result.logs(name, eval_every) for name in result.names}
+
+
+def run_experiment(exp: Experiment, eval_every: int = 10) -> List:
+    """Legacy path: one experiment through the looped FLTrainer (kept as the
+    sweep engine's ground truth and as sweep_bench's baseline)."""
+    mc, shards, params, eval_fn = figure_setup()
+    floa, alpha = experiment_floa(exp, mc)
+    tr = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha, eval_fn=eval_fn)
     sampler = FederatedSampler(shards, batch_per_worker=mc.batch_per_worker,
                                seed=1)
     _, logs = tr.run(params, sampler, exp.rounds, jax.random.PRNGKey(exp.seed),
@@ -84,6 +122,7 @@ def run_experiment(exp: Experiment, eval_every: int = 10) -> List:
     return logs
 
 
-def print_csv(tag: str, exp: Experiment, logs: List) -> None:
+def print_csv(tag: str, exp_or_name, logs: List) -> None:
+    name = exp_or_name if isinstance(exp_or_name, str) else exp_or_name.name
     for lg in logs:
-        print(f"{tag},{exp.name},{lg.step},{lg.loss:.5f},{lg.accuracy:.4f}")
+        print(f"{tag},{name},{lg.step},{lg.loss:.5f},{lg.accuracy:.4f}")

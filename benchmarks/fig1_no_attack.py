@@ -2,19 +2,20 @@
 
 Paper claims (§IV-A): CI matches EF; BEV converges slightly slower/worse
 (Remark 6: omega_BEV^2 <= Omega_BEV when N=0).
+All three setups run as one compiled sweep (3 lanes x `rounds` scanned).
 CSV: fig,experiment,round,loss,accuracy
 """
-from benchmarks.common import Experiment, Policy, print_csv, run_experiment
+from benchmarks.common import Experiment, Policy, print_csv, run_figure
 
 
 def main(rounds: int = 150) -> dict:
-    out = {}
-    for name, pol in [("EF", Policy.EF), ("CI", Policy.CI), ("BEV", Policy.BEV)]:
-        exp = Experiment(name=name, policy=pol, n_attackers=0, alpha_hat=0.1,
-                         rounds=rounds)
-        logs = run_experiment(exp)
-        print_csv("fig1", exp, logs)
-        out[name] = logs
+    exps = [Experiment(name=name, policy=pol, n_attackers=0, alpha_hat=0.1,
+                       rounds=rounds)
+            for name, pol in [("EF", Policy.EF), ("CI", Policy.CI),
+                              ("BEV", Policy.BEV)]]
+    out = run_figure(exps)
+    for name, logs in out.items():
+        print_csv("fig1", name, logs)
     return out
 
 

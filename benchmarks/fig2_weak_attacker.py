@@ -3,23 +3,22 @@
 Paper claims (§IV-B): both converge at alpha_hat<=1 (BEV faster at 1, since
 Omega_BEV > Omega_CI dominates at large lr); at alpha_hat=2 CI fails but BEV
 still converges; at 0.1 CI is slightly better.
+All six setups run as one compiled sweep (6 lanes x `rounds` scanned).
 CSV: fig,experiment,round,loss,accuracy
 """
-from benchmarks.common import Experiment, Policy, print_csv, run_experiment
+from benchmarks.common import Experiment, Policy, print_csv, run_figure
 
 WEAK_SIGMA = 0.3  # attacker channel scale << honest sigma=1.0
 
 
 def main(rounds: int = 150) -> dict:
-    out = {}
-    for ah in (0.1, 1.0, 2.0):
-        for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]:
-            exp = Experiment(name=f"{name}@ah{ah}", policy=pol, n_attackers=1,
-                             alpha_hat=ah, attacker_sigma=WEAK_SIGMA,
-                             rounds=rounds)
-            logs = run_experiment(exp)
-            print_csv("fig2", exp, logs)
-            out[exp.name] = logs
+    exps = [Experiment(name=f"{name}@ah{ah}", policy=pol, n_attackers=1,
+                       alpha_hat=ah, attacker_sigma=WEAK_SIGMA, rounds=rounds)
+            for ah in (0.1, 1.0, 2.0)
+            for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]]
+    out = run_figure(exps)
+    for name, logs in out.items():
+        print_csv("fig2", name, logs)
     return out
 
 

@@ -3,23 +3,23 @@
 Paper claims (§IV-C): omega_CI > 0 is hard to guarantee -> CI cannot converge
 (or converges to failure); BEV still converges; larger alpha_hat converges
 faster (under the guarantee).
+All four setups run as one compiled sweep (4 lanes x `rounds` scanned).
 CSV: fig,experiment,round,loss,accuracy
 """
-from benchmarks.common import Experiment, Policy, print_csv, run_experiment
+from benchmarks.common import Experiment, Policy, print_csv, run_figure
 
 STRONG_SIGMA = 3.0  # attacker channel scale >> honest sigma=1.0
 
 
 def main(rounds: int = 150) -> dict:
-    out = {}
-    for ah in (0.1, 1.0):
-        for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]:
-            exp = Experiment(name=f"{name}@ah{ah}", policy=pol, n_attackers=1,
-                             alpha_hat=ah, attacker_sigma=STRONG_SIGMA,
-                             rounds=rounds)
-            logs = run_experiment(exp)
-            print_csv("fig3", exp, logs)
-            out[exp.name] = logs
+    exps = [Experiment(name=f"{name}@ah{ah}", policy=pol, n_attackers=1,
+                       alpha_hat=ah, attacker_sigma=STRONG_SIGMA,
+                       rounds=rounds)
+            for ah in (0.1, 1.0)
+            for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]]
+    out = run_figure(exps)
+    for name, logs in out.items():
+        print_csv("fig3", name, logs)
     return out
 
 

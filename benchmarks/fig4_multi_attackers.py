@@ -3,20 +3,20 @@
 Paper claims (§IV-D): with N < 4 both converge (slower as N grows); at N=4
 (> U/(1+sqrt(pi U)) = 1.51 for U=10) CI diverges while BEV (threshold U/2=5)
 still converges in the right direction, slower.
+All eight setups run as one compiled sweep (8 lanes x `rounds` scanned).
 CSV: fig,experiment,round,loss,accuracy
 """
-from benchmarks.common import Experiment, Policy, print_csv, run_experiment
+from benchmarks.common import Experiment, Policy, print_csv, run_figure
 
 
 def main(rounds: int = 150) -> dict:
-    out = {}
-    for n in (1, 2, 3, 4):
-        for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]:
-            exp = Experiment(name=f"{name}@N{n}", policy=pol, n_attackers=n,
-                             alpha_hat=0.1, rounds=rounds)
-            logs = run_experiment(exp)
-            print_csv("fig4", exp, logs)
-            out[exp.name] = logs
+    exps = [Experiment(name=f"{name}@N{n}", policy=pol, n_attackers=n,
+                       alpha_hat=0.1, rounds=rounds)
+            for n in (1, 2, 3, 4)
+            for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]]
+    out = run_figure(exps)
+    for name, logs in out.items():
+        print_csv("fig4", name, logs)
     return out
 
 

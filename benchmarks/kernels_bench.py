@@ -7,6 +7,7 @@ hold before any TPU deployment).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -23,11 +24,12 @@ def _timeit(fn, *args, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main() -> None:
+def main(tiny: bool = False) -> None:
     key = jax.random.PRNGKey(0)
     rows = []
 
-    u, d = 16, 1 << 20
+    u, d = 16, (1 << 14 if tiny else 1 << 20)
+    dtag = "16k" if tiny else "1M"
     ks = jax.random.split(key, 4)
     coeffs = jax.random.normal(ks[0], (u,))
     grads = jax.random.normal(ks[1], (u, d), jnp.float32)
@@ -36,15 +38,29 @@ def main() -> None:
     t = _timeit(ops.floa_aggregate_ref, coeffs, grads, noise, bias, eps)
     got = ops.floa_aggregate(coeffs, grads, noise, bias, eps)
     want = ops.floa_aggregate_ref(coeffs, grads, noise, bias, eps)
-    rows.append(("floa_aggregate_u16_d1M", t,
+    rows.append((f"floa_aggregate_u16_d{dtag}", t,
+                 float(jnp.max(jnp.abs(got - want)))))
+
+    # batched sweep variant: S scenario lanes over the same [U, D] slab size
+    s_n = 2 if tiny else 8
+    kb = jax.random.split(jax.random.PRNGKey(1), 5)
+    bc = jax.random.normal(kb[0], (s_n, u))
+    bg = jax.random.normal(kb[1], (s_n, u, d), jnp.float32)
+    bz = jax.random.normal(kb[2], (s_n, d))
+    bb = jax.random.normal(kb[3], (s_n,))
+    be = jax.random.normal(kb[4], (s_n,))
+    t = _timeit(ops.floa_aggregate_batched_ref, bc, bg, bz, bb, be)
+    got = ops.floa_aggregate_batched(bc, bg, bz, bb, be)
+    want = ops.floa_aggregate_batched_ref(bc, bg, bz, bb, be)
+    rows.append((f"floa_aggregate_batched_s{s_n}_u16_d{dtag}", t,
                  float(jnp.max(jnp.abs(got - want)))))
 
     t = _timeit(ops.grad_stats_ref, grads)
     got, want = ops.grad_stats(grads), ops.grad_stats_ref(grads)
     err = float(jnp.max(jnp.abs(got - want) / (jnp.abs(want) + 1.0)))  # relative
-    rows.append(("grad_stats_u16_d1M", t, err))
+    rows.append((f"grad_stats_u16_d{dtag}", t, err))
 
-    b, h, kv, hd, s = 4, 16, 8, 128, 8192
+    b, h, kv, hd, s = (1, 4, 2, 64, 512) if tiny else (4, 16, 8, 128, 8192)
     q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
     k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
     v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
@@ -52,11 +68,14 @@ def main() -> None:
     t = _timeit(ops.decode_attention_ref, q, k, v, pos)
     err = float(jnp.max(jnp.abs(
         ops.decode_attention(q, k, v, pos) - ops.decode_attention_ref(q, k, v, pos))))
-    rows.append(("decode_attention_b4_s8k", t, err))
+    rows.append((f"decode_attention_b{b}_s{s}", t, err))
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.3e}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="small shapes for CI smoke (interpret mode is slow)")
+    main(tiny=ap.parse_args().tiny)

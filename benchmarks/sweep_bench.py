@@ -1,0 +1,146 @@
+"""Sweep-engine throughput: looped FLTrainer vs scan vs scan+vmap.
+
+Runs the same S-scenario x R-round grid (fig-4 style: CI/BEV x attacker
+count on the paper MLP, D=50890) through three execution strategies:
+
+  looped     FLTrainer.run         — one jitted dispatch per round, and one
+                                     fresh compile per scenario (the config
+                                     is baked into each trainer's closure):
+                                     the seed repo's only mode
+  scan       FLTrainer.run_scan    — rounds compiled into one lax.scan,
+                                     still one program (compile) per scenario
+  scan+vmap  fl.sweep.SweepEngine  — rounds scanned AND scenarios stacked
+                                     into one vmapped lane axis: the whole
+                                     grid is ONE compile, ONE dispatch
+
+Two aggregate rounds/sec (S*R / wall) numbers per engine:
+
+  cold   end-to-end including compilation — what a figure script actually
+         pays to produce its grid once.  The looped/scan baselines pay S
+         compiles; the sweep engine pays one, so its advantage GROWS with S.
+  warm   steady-state rerun of the already-compiled program(s) — isolates
+         per-round dispatch/batching efficiency.
+
+  PYTHONPATH=src:. python benchmarks/sweep_bench.py [--rounds R] [--scenarios S]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import (
+    Experiment,
+    Policy,
+    experiment_floa,
+    figure_setup,
+)
+from repro.data import FederatedSampler
+from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
+from repro.models.mlp import mlp_loss
+
+
+def grid(num: int, rounds: int):
+    """CI/BEV x attacker-count grid, fig-4 style, cycled to `num` lanes."""
+    cells = [(pol, n) for n in (0, 1, 2, 3, 4)
+             for pol in (Policy.CI, Policy.BEV)]
+    return [Experiment(name=f"{cells[i % len(cells)][0].value}"
+                            f"@N{cells[i % len(cells)][1]}#{i}",
+                       policy=cells[i % len(cells)][0],
+                       n_attackers=cells[i % len(cells)][1],
+                       alpha_hat=0.1, rounds=rounds, seed=100 + i)
+            for i in range(num)]
+
+
+def main(rounds: int = 25, scenarios: int = 16) -> dict:
+    mc, shards, params, _ = figure_setup()
+    exps = grid(scenarios, rounds)
+    cfgs = [experiment_floa(e, mc) for e in exps]
+    batches = FederatedSampler(shards, mc.batch_per_worker,
+                               seed=1).stack_rounds(rounds)
+
+    class Replay:
+        """Feed the looped trainer the same pre-staged batches the scan
+        engines consume, so the timers isolate engine overhead rather than
+        charging host-side numpy sampling to the looped path only."""
+
+        def __init__(self):
+            self.t = 0
+
+        def next_round(self):
+            out = {k: v[self.t % rounds] for k, v in batches.items()}
+            self.t += 1
+            return out
+
+    total = len(exps) * rounds
+    cold, warm = {}, {}
+
+    def run_looped(trainers):
+        for tr, e in zip(trainers, exps):
+            p, _ = tr.run(params, Replay(), rounds,
+                          jax.random.PRNGKey(e.seed), eval_every=0)
+            jax.block_until_ready(p)
+
+    def run_scans(trainers):
+        for tr, e in zip(trainers, exps):
+            # run_scan syncs internally (round losses come back as np arrays)
+            tr.run_scan(params, batches, jax.random.PRNGKey(e.seed),
+                        eval_every=0)
+
+    # --- looped: fresh trainers => one compile per scenario, then per-round
+    # dispatch; warm rerun reuses the compiled round_steps.
+    trainers = [FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha)
+                for floa, alpha in cfgs]
+    t0 = time.perf_counter()
+    run_looped(trainers)
+    cold["looped"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_looped(trainers)
+    warm["looped"] = time.perf_counter() - t0
+
+    # --- scan: one lax.scan program (compile) per scenario.
+    trainers = [FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha)
+                for floa, alpha in cfgs]
+    t0 = time.perf_counter()
+    run_scans(trainers)
+    cold["scan"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_scans(trainers)
+    warm["scan"] = time.perf_counter() - t0
+
+    # --- scan+vmap: the whole grid as one program, one compile.
+    t0 = time.perf_counter()
+    spec = SweepSpec.build([
+        ScenarioCase(e.name, floa, alpha, seed=e.seed)
+        for e, (floa, alpha) in zip(exps, cfgs)
+    ])
+    engine = SweepEngine(mlp_loss, spec)
+    engine.run(params, batches)
+    cold["scan+vmap"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    engine.run(params, batches)
+    warm["scan+vmap"] = time.perf_counter() - t0
+
+    print(f"# paper MLP (D={mc.dim}), S={len(exps)} scenarios x R={rounds} "
+          f"rounds, backend={jax.default_backend()}")
+    print("engine,cold_rounds_per_sec,warm_rounds_per_sec,"
+          "cold_speedup_vs_looped,warm_speedup_vs_looped")
+    out = {}
+    for name in ("looped", "scan", "scan+vmap"):
+        c, w = total / cold[name], total / warm[name]
+        out[name] = dict(cold=c, warm=w,
+                         cold_speedup=cold["looped"] / cold[name],
+                         warm_speedup=warm["looped"] / warm[name])
+        print(f"{name},{c:.1f},{w:.1f},"
+              f"{out[name]['cold_speedup']:.2f}x,"
+              f"{out[name]['warm_speedup']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--scenarios", type=int, default=16)
+    args = ap.parse_args()
+    main(rounds=args.rounds, scenarios=args.scenarios)

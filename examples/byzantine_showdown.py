@@ -6,6 +6,12 @@ Digital defenses see per-worker gradients (U x uplink cost, no privacy);
 FLOA sees only the analog superposition (1 x uplink, gradient-private) —
 the paper's whole trade-off, quantified.
 
+Execution: every FLOA cell (policy x attacker count) is one lane of a single
+compiled sweep (fl.sweep) — one compile, one dispatch for the whole analog
+half of the table.  Digital cells go through FLTrainer.run_scan (defense
+screening needs per-worker gradients and per-defense code paths, so each
+defense is its own scanned program, still with zero per-round dispatch).
+
   PYTHONPATH=src python examples/byzantine_showdown.py
 """
 import jax
@@ -20,10 +26,11 @@ from repro.core import (
 )
 from repro.core import theory
 from repro.data import FederatedSampler, make_dataset, worker_split
-from repro.fl import FLTrainer
+from repro.fl import FLTrainer, ScenarioCase, SweepSpec, run_sweep
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 
 ROUNDS = 100
+NS = [0, 1, 3, 4]
 
 
 def setup():
@@ -34,57 +41,74 @@ def setup():
             jnp.asarray(xt), jnp.asarray(yt))
 
 
-def run(mc, shards, xt, yt, mode, n_atk, policy=Policy.BEV, defense="mean",
-        **dkw):
+def floa_config(mc, n_atk: int, policy: Policy, noise: float) -> FLOAConfig:
     u, d = mc.num_workers, mc.dim
-    tp = theory.TheoryParams(num_workers=u, num_attackers=n_atk, dim=d)
-    if mode == "floa":
-        pol = policy.value
-        alpha = theory.alpha_from_alpha_hat(tp, pol, 0.1)
-        noise = noise_std_for_snr(mc.p_max, d, mc.snr_db)
-    else:
-        alpha, noise, policy = 0.1, 0.0, Policy.EF
-    floa = FLOAConfig(
+    return FLOAConfig(
         channel=ChannelConfig(num_workers=u, sigma=1.0, noise_std=noise),
         power=PowerConfig(num_workers=u, dim=d, p_max=mc.p_max, policy=policy),
         attack=AttackConfig(
             attack=AttackType.STRONGEST if n_atk else AttackType.NONE,
             byzantine_mask=first_n_mask(u, n_atk)),
     )
-    tr = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha, mode=mode,
+
+
+def run_floa_grid(mc, batches, params, eval_fn):
+    """All FLOA (policy x N) cells as one compiled sweep; returns
+    {(policy, n): final accuracy}."""
+    u, d = mc.num_workers, mc.dim
+    noise = noise_std_for_snr(mc.p_max, d, mc.snr_db)
+    cases = []
+    for policy in (Policy.BEV, Policy.CI):
+        for n in NS:
+            tp = theory.TheoryParams(num_workers=u, num_attackers=n, dim=d)
+            alpha = theory.alpha_from_alpha_hat(tp, policy.value, 0.1)
+            cases.append(ScenarioCase(f"{policy.value}@N{n}",
+                                      floa_config(mc, n, policy, noise),
+                                      alpha, seed=5))
+    result = run_sweep(mlp_loss, params, batches, SweepSpec.build(cases),
+                       eval_fn=eval_fn, eval_every=ROUNDS)  # final acc only
+    return {name: float(result.metrics["accuracy"][i, -1])
+            for i, name in enumerate(result.names)}
+
+
+def run_digital(mc, batches, params, eval_fn, n_atk: int, defense: str,
+                **dkw) -> float:
+    """One digital cell: gathered per-worker gradients + screening defense,
+    rounds scanned (run_scan) so there is no per-round Python dispatch."""
+    floa = floa_config(mc, n_atk, Policy.EF, 0.0)
+    tr = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=0.1, mode="digital",
                    defense=defense, defense_kwargs=dkw,
-                   eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt, yt)})
-    sampler = FederatedSampler(shards, mc.batch_per_worker, seed=1)
-    _, logs = tr.run(init_mlp(jax.random.PRNGKey(0)), sampler, ROUNDS,
-                     jax.random.PRNGKey(5), eval_every=ROUNDS - 1)
+                   eval_fn=eval_fn)
+    _, logs = tr.run_scan(params, batches, jax.random.PRNGKey(5),
+                          eval_every=ROUNDS - 1)
     return logs[-1].accuracy
 
 
 def main() -> None:
     mc, shards, xt, yt = setup()
-    contenders = [
-        ("FLOA-BEV (analog, private)", dict(mode="floa", policy=Policy.BEV)),
-        ("FLOA-CI  (analog, private)", dict(mode="floa", policy=Policy.CI)),
-        ("digital mean (no defense)", dict(mode="digital", defense="mean")),
-        ("digital median", dict(mode="digital", defense="median")),
-        ("digital trimmed-mean(3)", dict(mode="digital",
-                                         defense="trimmed_mean", trim=3)),
-        ("digital Krum(f=3)", dict(mode="digital", defense="krum",
-                                   num_byzantine=3)),
-        ("digital geometric-median", dict(mode="digital",
-                                          defense="geometric_median")),
+    eval_fn = lambda p: {"accuracy": mlp_accuracy(p, xt, yt)}
+    params = init_mlp(jax.random.PRNGKey(0))
+    batches = FederatedSampler(shards, mc.batch_per_worker,
+                               seed=1).stack_rounds(ROUNDS)
+
+    floa_accs = run_floa_grid(mc, batches, params, eval_fn)
+    digital = [
+        ("digital mean (no defense)", dict(defense="mean")),
+        ("digital median", dict(defense="median")),
+        ("digital trimmed-mean(3)", dict(defense="trimmed_mean", trim=3)),
+        ("digital Krum(f=3)", dict(defense="krum", num_byzantine=3)),
+        ("digital geometric-median", dict(defense="geometric_median")),
     ]
-    ns = [0, 1, 3, 4]
-    print(f"{'defense':30s} " + " ".join(f"N={n:<4d}" for n in ns))
-    for name, kw in contenders:
-        accs = []
-        for n in ns:
-            kw2 = dict(kw)
-            extra = {k: v for k, v in kw2.items()
-                     if k not in ("mode", "policy", "defense")}
-            accs.append(run(mc, shards, xt, yt, kw2.get("mode"), n,
-                            policy=kw2.get("policy", Policy.BEV),
-                            defense=kw2.get("defense", "mean"), **extra))
+
+    print(f"{'defense':30s} " + " ".join(f"N={n:<4d}" for n in NS))
+    for policy, label in [(Policy.BEV, "FLOA-BEV (analog, private)"),
+                          (Policy.CI, "FLOA-CI  (analog, private)")]:
+        accs = [floa_accs[f"{policy.value}@N{n}"] for n in NS]
+        print(f"{label:30s} " + " ".join(f"{a:.3f}" for a in accs))
+    for name, kw in digital:
+        extra = {k: v for k, v in kw.items() if k != "defense"}
+        accs = [run_digital(mc, batches, params, eval_fn, n,
+                            kw["defense"], **extra) for n in NS]
         print(f"{name:30s} " + " ".join(f"{a:.3f}" for a in accs))
 
 

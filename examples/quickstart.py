@@ -1,13 +1,18 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds — as ONE compiled sweep.
 
 Trains the paper's MLP (784-64-10, D=50890) over a simulated wireless MAC
-with U=10 workers under three setups — error-free, CI, and BEV — then repeats
-with 3 Byzantine workers mounting the strongest attack (Thm 1).  Reproduces
-the paper's headline: CI ≈ EF when benign but collapses under attack; BEV
-pays ~2% benign accuracy for robustness.
+with U=10 workers under five setups at once — error-free, CI, and BEV benign,
+plus CI and BEV with 3 Byzantine workers mounting the strongest attack
+(Thm 1).  All five are lanes of a single scan x vmap program (fl.sweep), so
+the whole demo is one compile + one dispatch.  Reproduces the paper's
+headline: CI ≈ EF when benign but collapses under attack; BEV pays ~2%
+benign accuracy for robustness.
 
   PYTHONPATH=src python examples/quickstart.py
+  REPRO_SMOKE=1 PYTHONPATH=src python examples/quickstart.py   # tiny CI mode
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -20,12 +25,13 @@ from repro.core import (
 )
 from repro.core import theory
 from repro.data import FederatedSampler, make_dataset, worker_split
-from repro.fl import FLTrainer
+from repro.fl import ScenarioCase, SweepSpec, run_sweep
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
 
-def run(policy: Policy, n_attackers: int, rounds: int = 120) -> float:
-    mc = PAPER_MLP.full()
+
+def case(name: str, policy: Policy, n_attackers: int, mc) -> ScenarioCase:
     u, d = mc.num_workers, mc.dim
     tp = theory.TheoryParams(num_workers=u, num_attackers=n_attackers, dim=d)
     pol = "ef" if policy == Policy.EF else policy.value
@@ -40,22 +46,41 @@ def run(policy: Policy, n_attackers: int, rounds: int = 120) -> float:
             attack=AttackType.STRONGEST if n_attackers else AttackType.NONE,
             byzantine_mask=first_n_mask(u, n_attackers)),
     )
+    return ScenarioCase(name, floa, alpha, seed=1)
+
+
+def main(rounds: int = 120) -> dict:
+    mc = PAPER_MLP.smoke() if SMOKE else PAPER_MLP.full()
+    if SMOKE:
+        rounds = min(rounds, 10)
+    spec = SweepSpec.build([
+        case("EF benign", Policy.EF, 0, mc),
+        case("CI benign", Policy.CI, 0, mc),
+        case("BEV benign", Policy.BEV, 0, mc),
+        case("CI 3-attackers", Policy.CI, 3, mc),
+        case("BEV 3-attackers", Policy.BEV, 3, mc),
+    ])
     x, y = make_dataset(mc.train_samples, seed=0)
     xt, yt = make_dataset(mc.test_samples, seed=99)
     xt, yt = jnp.asarray(xt), jnp.asarray(yt)
-    trainer = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha,
-                        eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt, yt)})
-    sampler = FederatedSampler(worker_split(x, y, u), mc.batch_per_worker)
-    _, logs = trainer.run(init_mlp(jax.random.PRNGKey(0)), sampler, rounds,
-                          jax.random.PRNGKey(1), eval_every=rounds - 1)
-    return logs[-1].accuracy
+    batches = FederatedSampler(worker_split(x, y, mc.num_workers),
+                               mc.batch_per_worker).stack_rounds(rounds)
+    result = run_sweep(
+        mlp_loss, init_mlp(jax.random.PRNGKey(0)), batches, spec,
+        eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt, yt)},
+        eval_every=rounds)  # only the final accuracy matters here
+
+    accs = {name: float(result.metrics["accuracy"][i, -1])
+            for i, name in enumerate(result.names)}
+    print("== benign (no attackers) ==")
+    for name in ("EF benign", "CI benign", "BEV benign"):
+        print(f"  {name:16s} test accuracy: {accs[name]:.3f}")
+    print("== 3 Byzantine workers, strongest attack (Thm 1) ==")
+    for name in ("CI 3-attackers", "BEV 3-attackers"):
+        print(f"  {name:16s} test accuracy: {accs[name]:.3f}")
+    print("-> BEV trades a sliver of benign accuracy for Byzantine robustness.")
+    return accs
 
 
 if __name__ == "__main__":
-    print("== benign (no attackers) ==")
-    for pol in (Policy.EF, Policy.CI, Policy.BEV):
-        print(f"  {pol.value.upper():4s} test accuracy: {run(pol, 0):.3f}")
-    print("== 3 Byzantine workers, strongest attack (Thm 1) ==")
-    for pol in (Policy.CI, Policy.BEV):
-        print(f"  {pol.value.upper():4s} test accuracy: {run(pol, 3):.3f}")
-    print("-> BEV trades a sliver of benign accuracy for Byzantine robustness.")
+    main()

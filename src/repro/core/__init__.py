@@ -2,6 +2,8 @@
 from repro.core.aggregation import (
     FLOAConfig,
     aggregate,
+    batched_floa_combine,
+    flatten_worker_grads,
     floa_grad,
     mean_aggregate,
     per_worker_grads,
@@ -9,10 +11,13 @@ from repro.core.aggregation import (
 from repro.core.attacks import AttackConfig, AttackType, first_n_mask
 from repro.core.channel import ChannelConfig, noise_std_for_snr, sample_channel_gains
 from repro.core.power_control import Policy, PowerConfig
+from repro.core.scenario import ScenarioParams, scenario_coefficients
 
 __all__ = [
     "FLOAConfig", "aggregate", "floa_grad", "mean_aggregate", "per_worker_grads",
+    "batched_floa_combine", "flatten_worker_grads",
     "AttackConfig", "AttackType", "first_n_mask",
     "ChannelConfig", "noise_std_for_snr", "sample_channel_gains",
     "Policy", "PowerConfig",
+    "ScenarioParams", "scenario_coefficients",
 ]

@@ -165,6 +165,69 @@ def aggregate(
     return gagg, aux
 
 
+# Below this flat size the einsum oracle beats the kernel's grid overhead;
+# above it (and on TPU, where the kernel compiles to Mosaic rather than the
+# interpreter) the fused single-pass kernel wins — it is bandwidth-bound.
+BATCHED_KERNEL_MIN_D = 1 << 16
+
+
+def flatten_worker_grads(grads_u, batch_dims: int = 1):
+    """Pytree with [*lead, ...] leaves -> ([*lead, D] matrix, unflatten fn).
+
+    batch_dims counts the leading axes shared by every leaf ([U] for a single
+    scenario, [S, U] for a stacked sweep).  unflatten maps a [*lead[:-1], D]
+    aggregate (the worker axis reduced away) back to the parameter pytree.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads_u)
+    lead = leaves[0].shape[:batch_dims]
+    lead_n = 1
+    for n in lead:
+        lead_n *= int(n)
+    sizes = [int(x.size) // lead_n for x in leaves]
+    shapes = [x.shape[batch_dims:] for x in leaves]
+    flat = jnp.concatenate(
+        [x.reshape(*lead, -1).astype(jnp.float32) for x in leaves], axis=-1
+    )
+
+    def unflatten(vec):
+        out, off = [], 0
+        out_lead = vec.shape[:-1]
+        for n, shp, x in zip(sizes, shapes, leaves):
+            out.append(vec[..., off:off + n].reshape(*out_lead, *shp)
+                       .astype(x.dtype))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def batched_floa_combine(
+    coeffs: Array,
+    flat: Array,
+    noise: Array,
+    bias: Array,
+    eps: Array,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """[S, U, D] OTA combine: out[s] = coeffs[s] @ flat[s] + bias[s] + eps[s] z[s].
+
+    The sweep engine's hot spot.  Routed through the fused Pallas kernel when
+    the flattened gradient is large and the backend compiles it natively
+    (TPU); the einsum reference otherwise — on CPU hosts the kernel only runs
+    in interpret mode, which is for correctness tests, not speed.
+    """
+    if use_kernel is None:
+        use_kernel = (jax.default_backend() == "tpu"
+                      and flat.shape[-1] >= BATCHED_KERNEL_MIN_D)
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.floa_aggregate_batched(coeffs, flat, noise, bias, eps,
+                                          interpret=interpret)
+    from repro.kernels import ref
+    return ref.floa_aggregate_batched_ref(coeffs, flat, noise, bias, eps)
+
+
 def mean_aggregate(grads_u) -> object:
     """Plain FedSGD mean (the EF path without the FLOA bookkeeping)."""
     return jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), grads_u)

@@ -67,10 +67,11 @@ def first_n_mask(num_workers: int, n: int) -> Tuple[bool, ...]:
 
 
 def strongest_attack_amplitude(
-    p_max: Array, dim: int, gbar: Array, eps2: Array
+    p_max: Array, dim, gbar: Array, eps2: Array
 ) -> Array:
-    """phat_n of eq. (18).  p_max [U] (or scalar), gbar/eps2 round scalars."""
-    return jnp.sqrt(p_max / (float(dim) * (gbar**2 + eps2)))
+    """phat_n of eq. (18).  p_max [U] (or scalar), gbar/eps2 round scalars,
+    dim a static int or traced scalar (the sweep path passes an array)."""
+    return jnp.sqrt(p_max / (dim * (gbar**2 + eps2)))
 
 
 def signed_coefficients(
@@ -121,6 +122,15 @@ def signed_coefficients(
     return s, bias_w
 
 
+def jam_std_arrays(
+    h_abs: Array, p_maxes: Array, dim, mask: Array, eps2: Array
+) -> Array:
+    """GAUSSIAN jamming std from raw arrays (shared with core.scenario):
+    max-power white noise from masked workers, scaled by eps_t."""
+    amp = jnp.sqrt(p_maxes / dim) * h_abs  # max power jam
+    return jnp.sqrt(eps2 * jnp.sum(jnp.where(mask, amp, 0.0) ** 2))
+
+
 def gaussian_jam_std(
     h_abs: Array, power: PowerConfig, attack: AttackConfig, eps2: Array
 ) -> Array:
@@ -128,6 +138,5 @@ def gaussian_jam_std(
     de-standardization (scaled by eps_t like any received symbol)."""
     if attack.attack != AttackType.GAUSSIAN or attack.num_attackers == 0:
         return jnp.zeros(())
-    mask = attack.mask()
-    amp = jnp.sqrt(power.p_maxes() / float(power.dim)) * h_abs  # max power jam
-    return jnp.sqrt(eps2 * jnp.sum(jnp.where(mask, amp, 0.0) ** 2))
+    return jam_std_arrays(h_abs, power.p_maxes(), float(power.dim),
+                          attack.mask(), eps2)

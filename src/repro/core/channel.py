@@ -41,13 +41,20 @@ class ChannelConfig:
         return jnp.broadcast_to(s, (self.num_workers,))
 
 
-def sample_channel_gains(key: Array, cfg: ChannelConfig) -> Array:
-    """Draw |h_{i,t}| for all U workers for one round.  Shape [U].
+def rayleigh_gains(key: Array, sigmas: Array) -> Array:
+    """|h| = sigma * sqrt(2 * E), E ~ Exp(1)  (so |h|^2 ~ Exp(mean 2 sigma^2)).
 
-    |h| = sigma * sqrt(2 * E) with E ~ Exp(1)  (so |h|^2 ~ Exp(mean 2 sigma^2)).
+    The one Rayleigh recipe shared by the dataclass path (below) and the
+    traceable sweep path (core.scenario.sample_gains) — per-key draws must
+    stay identical between the two, so neither may fork its own version.
     """
-    e = jax.random.exponential(key, (cfg.num_workers,), dtype=jnp.float32)
-    return cfg.sigmas() * jnp.sqrt(2.0 * e)
+    e = jax.random.exponential(key, sigmas.shape, dtype=jnp.float32)
+    return sigmas * jnp.sqrt(2.0 * e)
+
+
+def sample_channel_gains(key: Array, cfg: ChannelConfig) -> Array:
+    """Draw |h_{i,t}| for all U workers for one round.  Shape [U]."""
+    return rayleigh_gains(key, cfg.sigmas())
 
 
 def expected_abs_gain(cfg: ChannelConfig) -> Array:
@@ -60,15 +67,21 @@ def expected_sq_gain(cfg: ChannelConfig) -> Array:
     return 2.0 * cfg.sigmas() ** 2
 
 
-def expected_min_sq_gain(cfg: ChannelConfig) -> Array:
+def min_sq_gain_from_sigmas(sigmas: Array) -> Array:
     """E[min_i |h_i|^2] = 1 / sum_i lambda_i with lambda_i = 1/(2 sigma_i^2).
 
-    This is the `lambda` used by the CI scaling factor b0^2 = P0_max * lambda
-    (paper eq. 9-10): the minimum of independent exponentials is exponential
-    with rate = sum of rates.
+    Array form shared by the dataclass path (below) and the traceable sweep
+    path (core.scenario): the minimum of independent exponentials is
+    exponential with rate = sum of rates.
     """
-    lam = 1.0 / (2.0 * cfg.sigmas() ** 2)
+    lam = 1.0 / (2.0 * sigmas**2)
     return 1.0 / jnp.sum(lam)
+
+
+def expected_min_sq_gain(cfg: ChannelConfig) -> Array:
+    """The `lambda` used by the CI scaling factor b0^2 = P0_max * lambda
+    (paper eq. 9-10)."""
+    return min_sq_gain_from_sigmas(cfg.sigmas())
 
 
 def noise_std_for_snr(p_max: float, dim: int, snr_db: float) -> float:

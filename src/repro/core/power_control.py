@@ -32,7 +32,7 @@ from typing import Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.channel import ChannelConfig, expected_min_sq_gain
+from repro.core.channel import ChannelConfig, min_sq_gain_from_sigmas
 
 Array = jax.Array
 
@@ -58,16 +58,27 @@ class PowerConfig:
         return jnp.broadcast_to(p, (self.num_workers,))
 
 
+def ci_b0_arrays(p_maxes: Array, sigmas: Array, dim) -> Array:
+    """b0 = sqrt(P0_max * lambda) from raw arrays — the one CI power formula,
+    shared by the dataclass path below and the traceable sweep path
+    (core.scenario.scenario_coefficients); `dim` may be a scalar or traced."""
+    p0_max = jnp.min(p_maxes) / dim
+    return jnp.sqrt(p0_max * min_sq_gain_from_sigmas(sigmas))
+
+
 def ci_b0(power: PowerConfig, channel: ChannelConfig) -> Array:
     """b0 = sqrt(P0_max * lambda), the common received amplitude under CI."""
-    p0_max = jnp.min(power.p_maxes()) / float(power.dim)
-    lam = expected_min_sq_gain(channel)
-    return jnp.sqrt(p0_max * lam)
+    return ci_b0_arrays(power.p_maxes(), channel.sigmas(), float(power.dim))
+
+
+def max_amplitude_arrays(p_maxes: Array, dim) -> Array:
+    """sqrt(p_i^max / D) from raw arrays (shared with core.scenario)."""
+    return jnp.sqrt(p_maxes / dim)
 
 
 def max_amplitude(power: PowerConfig) -> Array:
     """sqrt(p_i^max / D): the BEV amplitude and the per-draw cap, [U]."""
-    return jnp.sqrt(power.p_maxes() / float(power.dim))
+    return max_amplitude_arrays(power.p_maxes(), float(power.dim))
 
 
 def transmit_amplitudes(

@@ -1,0 +1,163 @@
+"""Traceable scenario parameters: `FLOAConfig` as a struct-of-arrays pytree.
+
+`FLOAConfig` is a frozen dataclass whose policy/attack fields steer Python
+branches at trace time — perfect for one jit per scenario, useless for a
+`vmap` over a *stacked* scenario axis (the paper's Figs. 1-4 are exactly such
+grids: attack type x attacker count x power policy x seed).  This module is
+the bridge:
+
+  ScenarioParams      every FLOAConfig field that varies per scenario, as
+                      arrays (enums -> int32 codes, masks/sigmas -> vectors),
+                      so a whole sweep stacks into one [S, ...] pytree.
+  from_floa           FLOAConfig (+ per-scenario alpha) -> ScenarioParams.
+  scenario_coefficients
+                      branchless re-derivation of channel.py / power_control.py
+                      / attacks.py for ONE scenario — policy and attack
+                      selection via jnp.where on the code arrays, so the same
+                      function vmaps cleanly over the stacked axis.
+
+The branchless path must agree with the branching modules exactly; the
+per-combination equivalence test in tests/test_sweep.py is the contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks as A
+from repro.core.channel import rayleigh_gains
+from repro.core.power_control import Policy, ci_b0_arrays, max_amplitude_arrays
+
+Array = jax.Array
+
+POLICY_CODES = {
+    Policy.CI: 0,
+    Policy.BEV: 1,
+    Policy.EF: 2,
+    Policy.TRUNCATED_CI: 3,
+}
+ATTACK_CODES = {
+    A.AttackType.NONE: 0,
+    A.AttackType.STRONGEST: 1,
+    A.AttackType.SIGN_FLIP_PROTOCOL_POWER: 2,
+    A.AttackType.GAUSSIAN: 3,
+}
+_CI, _BEV, _EF, _TCI = 0, 1, 2, 3
+_NONE, _STRONGEST, _SIGN_FLIP, _GAUSSIAN = 0, 1, 2, 3
+
+
+class ScenarioParams(NamedTuple):
+    """One scenario's FLOA knobs as arrays (NamedTuple == pytree, so a list of
+    these stacks with a single tree_map into the [S, ...] sweep axis)."""
+
+    policy: Array      # int32 [] — POLICY_CODES
+    attack: Array      # int32 [] — ATTACK_CODES
+    byz_mask: Array    # bool  [U]
+    sigma: Array       # f32   [U] Rayleigh scales
+    p_max: Array       # f32   [U] per-worker max power
+    dim: Array         # f32   []  power-accounting gradient dim D (eq. 4)
+    noise_std: Array   # f32   []  receiver AWGN std (0 under EF)
+    alpha: Array       # f32   []  raw learning rate (eq. 8)
+
+    @property
+    def num_workers(self) -> int:
+        return self.byz_mask.shape[-1]
+
+
+def from_floa(cfg, alpha: float) -> ScenarioParams:
+    """FLOAConfig (frozen dataclass) -> traceable ScenarioParams.
+
+    EF scenarios get noise_std forced to 0 here (the dataclass path simply
+    never reaches the noise branch under EF; the branchless path always adds
+    the noise term, so the std itself must be zero).
+    """
+    cfg.validate()
+    u = cfg.num_workers
+    mask = (jnp.asarray(cfg.attack.byzantine_mask, dtype=bool)
+            if cfg.attack.byzantine_mask else jnp.zeros((u,), dtype=bool))
+    is_ef = cfg.power.policy == Policy.EF
+    return ScenarioParams(
+        policy=jnp.int32(POLICY_CODES[cfg.power.policy]),
+        attack=jnp.int32(ATTACK_CODES[cfg.attack.attack]),
+        byz_mask=mask,
+        sigma=cfg.channel.sigmas(),
+        p_max=cfg.power.p_maxes(),
+        dim=jnp.float32(cfg.power.dim),
+        noise_std=jnp.float32(0.0 if is_ef else cfg.channel.noise_std),
+        alpha=jnp.float32(alpha),
+    )
+
+
+def stack(params: Tuple[ScenarioParams, ...]) -> ScenarioParams:
+    """[ScenarioParams] * S -> ScenarioParams with a leading S axis on every
+    leaf.  All scenarios must share U (shapes must match to stack)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
+
+
+def sample_gains(key: Array, sp: ScenarioParams) -> Array:
+    """|h_{i,t}| ~ Rayleigh(sp.sigma), [U] — channel.sample_channel_gains
+    with the scales coming from the traceable params (both share
+    channel.rayleigh_gains, so the draws are identical per key).  Under EF
+    the dataclass path forces h == 1; scenario_coefficients handles that
+    branchlessly, so the raw draw here is simply ignored for EF scenarios."""
+    return rayleigh_gains(key, sp.sigma)
+
+
+def scenario_coefficients(
+    h_abs: Array, sp: ScenarioParams, gbar: Array, eps2: Array
+) -> Tuple[Array, Array, Array, Array]:
+    """Branchless eq. (7) coefficient derivation for one scenario.
+
+    Returns (s, bias_w, jam_std, noise_std):
+      s [U]       signed per-worker payload coefficients (attacks.py semantics)
+      bias_w []   de-standardization bias weight (x gbar x 1)
+      jam_std []  GAUSSIAN jamming noise std (0 unless that attack is active)
+      noise_std []  effective receiver AWGN std (0 under EF)
+
+    Every policy/attack formula is computed, then selected with jnp.where on
+    the int32 codes — so the whole thing vmaps over a stacked scenario axis.
+    The selected values are the *same expressions* the branching modules
+    compute, so per-scenario outputs match attacks.signed_coefficients /
+    power_control.transmit_amplitudes bit-for-bit.
+    """
+    u = sp.byz_mask.shape[-1]
+    dim = sp.dim   # power-accounting D from the config, NOT the model's size
+    is_ef = sp.policy == _EF
+    mask = sp.byz_mask
+    eps = jnp.sqrt(eps2)
+
+    # --- power_control.transmit_amplitudes, all policies at once (the
+    # formulas live in power_control/attacks as array helpers so the
+    # branching and branchless paths cannot drift apart).
+    b0 = ci_b0_arrays(sp.p_max, sp.sigma, dim)
+    ci_amp = b0 / h_abs
+    bev_amp = max_amplitude_arrays(sp.p_max, dim)
+    amp = jnp.where(sp.policy == _CI, ci_amp,
+                    jnp.where(sp.policy == _TCI,
+                              jnp.minimum(ci_amp, bev_amp), bev_amp))
+    honest_s = jnp.where(is_ef, 1.0 / u, amp * h_abs)
+
+    # --- attacks.signed_coefficients (+ the EF early-return's sign flip).
+    phat = A.strongest_attack_amplitude(sp.p_max, dim, gbar, eps2)
+    strongest_s = -eps * phat * h_abs
+    attacker_s = jnp.where(sp.attack == _STRONGEST, strongest_s,
+                           jnp.where(sp.attack == _SIGN_FLIP, -honest_s, 0.0))
+    # EF models any active attacker as a sign-flipped mean share (-1/U).
+    attacker_s = jnp.where(is_ef, -honest_s, attacker_s)
+    active = sp.attack != _NONE
+    s = jnp.where(active & mask, attacker_s, honest_s)
+
+    # PS de-standardizes assuming protocol power for every worker; attackers
+    # that never standardized (STRONGEST/GAUSSIAN) leave the bias behind.
+    has_bias = active & (~is_ef) & ((sp.attack == _STRONGEST)
+                                    | (sp.attack == _GAUSSIAN))
+    bias_w = jnp.where(has_bias, jnp.sum(jnp.where(mask, honest_s, 0.0)), 0.0)
+
+    # --- attacks.gaussian_jam_std.
+    jam = A.jam_std_arrays(h_abs, sp.p_max, dim, mask, eps2)
+    jam_std = jnp.where(active & (~is_ef) & (sp.attack == _GAUSSIAN), jam, 0.0)
+
+    noise_std = jnp.where(is_ef, 0.0, sp.noise_std)
+    return s, bias_w, jam_std, noise_std

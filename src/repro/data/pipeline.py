@@ -35,6 +35,14 @@ class FederatedSampler:
             ys.append(y[idx])
         return {"x": np.concatenate(xs), "y": np.concatenate(ys)}
 
+    def stack_rounds(self, rounds: int) -> Dict[str, np.ndarray]:
+        """Pre-draw `rounds` batches stacked on a leading [R] axis — the input
+        layout the compiled scan engines (FLTrainer.run_scan, fl.sweep)
+        consume.  Draws from the same RNG stream as repeated next_round()
+        calls, so a fresh same-seed sampler replays the identical sequence."""
+        draws = [self.next_round() for _ in range(rounds)]
+        return {k: np.stack([d[k] for d in draws]) for k in draws[0]}
+
 
 class TokenBatcher:
     """Iterates [global_batch, seq_len] token batches from a generator fn."""

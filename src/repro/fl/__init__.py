@@ -1,3 +1,11 @@
+from repro.fl.sweep import (
+    ScenarioCase,
+    SweepEngine,
+    SweepResult,
+    SweepSpec,
+    run_sweep,
+)
 from repro.fl.trainer import FLTrainer, RoundLog
 
-__all__ = ["FLTrainer", "RoundLog"]
+__all__ = ["FLTrainer", "RoundLog", "ScenarioCase", "SweepEngine",
+           "SweepResult", "SweepSpec", "run_sweep"]

@@ -1,0 +1,293 @@
+"""Compiled multi-scenario sweep engine: S scenarios x R rounds, one XLA program.
+
+The paper's experimental section (Figs. 1-4) is a grid of scenarios — attack
+type x attacker count x power policy x seed — that the looped `FLTrainer.run`
+simulates one round-dispatch at a time.  This engine removes both axes of
+Python overhead:
+
+  rounds     -> a `jax.lax.scan` body (no per-round dispatch or host sync);
+  scenarios  -> a vmapped stacked-`ScenarioParams` axis (one trace, S lanes),
+                built by `SweepSpec` from ordinary frozen `FLOAConfig`s.
+
+Inside the scan body the per-scenario gradient pytrees are flattened to a
+single [S, U, D] block and the OTA superposition + de-standardization bias +
+receiver noise are applied in one `batched_floa_combine` call, which routes
+to the fused batched Pallas kernel on TPU (einsum oracle elsewhere).
+
+    spec   = SweepSpec.build([(name, floa_cfg, alpha, seed), ...])
+    engine = SweepEngine(loss_fn, spec, eval_fn=...)
+    result = engine.run(params0, batches)     # batches: [R, ...] leaves
+    result.loss            # [S, R]
+    result.metrics["acc"]  # [S, R]
+
+All scenarios share the model init, the per-round batches (the paper's
+figures reuse one dataset/sampler across setups), U, and D; everything else —
+policy, attack, attacker count/channel, SNR, learning rate, PRNG seed —
+varies per scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scenario as SC
+from repro.core import standardize as S
+from repro.core.aggregation import (
+    FLOAConfig,
+    batched_floa_combine,
+    flatten_worker_grads,
+    per_worker_grads,
+)
+from repro.core.attacks import AttackType
+from repro.core.power_control import Policy
+from repro.fl.trainer import RoundLog
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioCase:
+    """One lane of the sweep: a frozen FLOAConfig plus its lr and PRNG seed."""
+
+    name: str
+    floa: FLOAConfig
+    alpha: float
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """An ordered set of scenarios destined for one compiled sweep."""
+
+    cases: Tuple[ScenarioCase, ...]
+
+    @classmethod
+    def build(cls, cases: Sequence) -> "SweepSpec":
+        """Accepts ScenarioCase instances or (name, floa, alpha[, seed]) tuples."""
+        out = []
+        for c in cases:
+            if not isinstance(c, ScenarioCase):
+                c = ScenarioCase(*c)
+            out.append(c)
+        return cls(cases=tuple(out))
+
+    def __post_init__(self):
+        assert self.cases, "empty sweep"
+        u = self.cases[0].floa.num_workers
+        for c in self.cases:
+            c.floa.validate()
+            assert c.floa.num_workers == u, "sweep scenarios must share U"
+
+    def __len__(self) -> int:
+        return len(self.cases)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.cases)
+
+    @property
+    def num_workers(self) -> int:
+        return self.cases[0].floa.num_workers
+
+    def stacked_params(self) -> SC.ScenarioParams:
+        """Frozen dataclass configs -> traceable struct-of-arrays, [S, ...]."""
+        return SC.stack(tuple(SC.from_floa(c.floa, c.alpha)
+                              for c in self.cases))
+
+    def keys(self) -> Array:
+        return jnp.stack([jax.random.PRNGKey(c.seed) for c in self.cases])
+
+    # Static trace decisions: skip the [S, D] RNG draws entirely when no
+    # scenario can consume them (EF-only sweeps, noiseless ablations).
+    @property
+    def any_noise(self) -> bool:
+        return any(c.floa.channel.noise_std > 0.0
+                   and c.floa.power.policy != Policy.EF for c in self.cases)
+
+    @property
+    def any_jamming(self) -> bool:
+        return any(c.floa.attack.attack == AttackType.GAUSSIAN
+                   and c.floa.attack.num_attackers > 0
+                   and c.floa.power.policy != Policy.EF for c in self.cases)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-scenario, per-round trajectories ([S, R] arrays, host-side)."""
+
+    names: Tuple[str, ...]
+    params: object                  # final params, leaves [S, ...]
+    loss: np.ndarray                # [S, R]
+    grad_norm: np.ndarray           # [S, R]
+    metrics: Dict[str, np.ndarray]  # each [S, R]
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+    def logs(self, name_or_idx, eval_every: int = 1) -> List[RoundLog]:
+        """RoundLog list for one scenario, sampled on the same schedule as
+        `FLTrainer.run(eval_every=...)` — drop-in for the figure CSV writers.
+        Use the engine's own eval_every here: off-schedule rounds carry NaN
+        accuracy (the eval was skipped inside the scan)."""
+        i = (name_or_idx if isinstance(name_or_idx, int)
+             else self.index(name_or_idx))
+        rounds = self.loss.shape[1]
+        acc = self.metrics.get("accuracy")
+        out = []
+        for t in range(rounds):
+            if eval_every and (t % eval_every == 0 or t == rounds - 1):
+                out.append(RoundLog(
+                    step=t, loss=float(self.loss[i, t]),
+                    accuracy=(float(acc[i, t]) if acc is not None
+                              else float("nan")),
+                    grad_norm=float(self.grad_norm[i, t])))
+        return out
+
+
+def stack_params(params, num: int):
+    """Broadcast one init pytree to a stacked [S, ...] scenario axis."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (num,) + x.shape), params)
+
+
+class SweepEngine:
+    """Builds (and caches) the jitted scan-over-rounds x vmap-over-scenarios
+    program for one (loss_fn, spec, eval_fn) triple.  Reuse the instance to
+    amortize compilation across repeated runs (benchmarks, seeds-resampling)."""
+
+    def __init__(self, loss_fn: Callable, spec: SweepSpec,
+                 eval_fn: Optional[Callable] = None, eval_every: int = 1):
+        """eval_every: run eval_fn only on rounds t with t % eval_every == 0
+        plus the final round (the FLTrainer.run schedule); other rounds carry
+        NaN in the metrics arrays.  eval_every <= 0 means final round only.
+        Evaluation happens inside the compiled scan, so a sparse schedule
+        skips the eval compute entirely."""
+        self.loss_fn = loss_fn
+        self.spec = spec
+        self.eval_fn = eval_fn
+        self.eval_every = eval_every
+        self._num = len(spec)
+        self._u = spec.num_workers
+        self._sp = spec.stacked_params()
+        self._run_jit = jax.jit(self._make_run())
+
+    def _make_run(self):
+        loss_fn, eval_fn = self.loss_fn, self.eval_fn
+        eval_every = self.eval_every
+        u, num = self._u, self._num
+        any_noise = self.spec.any_noise
+        any_jam = self.spec.any_jamming
+
+        def one_round(params_s, batch, sub_s, sp: SC.ScenarioParams):
+            # 1. per-worker local SGD gradients, per scenario: leaves [S, U, ...]
+            grads = jax.vmap(
+                lambda p: per_worker_grads(loss_fn, p, batch, u)[0]
+            )(params_s)
+
+            # 2. scalar-stat standardization handshake.
+            gbar_i, eps2_i = jax.vmap(S.per_worker_scalar_stats)(grads)
+            gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
+            eps = jnp.sqrt(eps2)
+
+            # 3. channel draw + power control + attack, branchless per lane.
+            flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
+            dim = flat.shape[-1]
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)  # [S, 3, 2]
+            h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
+            coeff, bias_w, jam_std, noise_std = jax.vmap(
+                SC.scenario_coefficients
+            )(h_abs, sp, gbar, eps2)
+
+            # 4. OTA superposition + bias + receiver AWGN, one fused combine.
+            if any_noise:
+                z = jax.vmap(
+                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                )(ks[:, 1])
+                noise_row = noise_std[:, None] * z
+            else:
+                noise_row = jnp.zeros((num, dim), jnp.float32)
+            gagg_flat = batched_floa_combine(
+                coeff, flat, noise_row, bias_w * gbar, eps)
+            if any_jam:  # GAUSSIAN ablation: unstructured max-power jamming
+                n2 = jax.vmap(
+                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                )(ks[:, 2])
+                gagg_flat = gagg_flat + jam_std[:, None] * n2
+
+            # 5. PS update w <- w - alpha * gagg (per-scenario alpha).
+            gagg = unflatten(gagg_flat)
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: p - (sp.alpha.reshape((num,) + (1,) * (p.ndim - 1))
+                                  * g).astype(p.dtype),
+                params_s, gagg)
+
+            gn = jnp.sqrt(jnp.sum(jnp.square(gagg_flat), axis=-1))
+            loss = jax.vmap(lambda p: loss_fn(p, batch))(new_params)
+            return new_params, loss, gn
+
+        def eval_maybe(params_s, t, rounds):
+            """eval_fn on the FLTrainer.run schedule; NaN off-schedule.  The
+            lax.cond skips the eval compute entirely on off-schedule rounds.
+            Metrics are cast to f32 so the NaN sentinel is representable
+            (an integer metric would silently read as a plausible value)."""
+            if eval_fn is None:
+                return {}
+
+            def as_f32(p):
+                return jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.float32), jax.vmap(eval_fn)(p))
+
+            shapes = jax.eval_shape(as_f32, params_s)
+            blank = jax.tree_util.tree_map(
+                lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes)
+            due = (t == rounds - 1)
+            if eval_every > 0:
+                due = due | (t % eval_every == 0)
+            return jax.lax.cond(due, as_f32, lambda _: blank, params_s)
+
+        def run(params_s, keys, batches):
+            rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+
+            def body(carry, batch):
+                params_s, keys, t = carry
+                split = jax.vmap(jax.random.split)(keys)    # [S, 2, 2]
+                keys, subs = split[:, 0], split[:, 1]
+                params_s, loss, gn = one_round(params_s, batch, subs, self._sp)
+                metrics = eval_maybe(params_s, t, rounds)
+                return (params_s, keys, t + 1), (loss, gn, metrics)
+
+            (params_s, _, _), (loss, gn, metrics) = jax.lax.scan(
+                body, (params_s, keys, jnp.int32(0)), batches)
+            return params_s, loss, gn, metrics
+
+        return run
+
+    def run(self, params0, batches, keys: Optional[Array] = None,
+            params_stacked: bool = False) -> SweepResult:
+        """params0: single init pytree, broadcast to all lanes (or pass
+        params_stacked=True for leaves already carrying a leading S axis).
+        batches: pytree of [R, ...] arrays shared by every scenario."""
+        if not params_stacked:
+            params0 = stack_params(params0, self._num)
+        keys = self.spec.keys() if keys is None else keys
+        batches = jax.tree_util.tree_map(jnp.asarray, batches)
+        params, loss, gn, metrics = self._run_jit(params0, keys, batches)
+        return SweepResult(
+            names=self.spec.names,
+            params=params,
+            loss=np.asarray(loss).T,            # scan gives [R, S]
+            grad_norm=np.asarray(gn).T,
+            metrics={k: np.asarray(v).T for k, v in metrics.items()},
+        )
+
+
+def run_sweep(loss_fn: Callable, params0, batches, spec: SweepSpec,
+              eval_fn: Optional[Callable] = None,
+              eval_every: int = 1) -> SweepResult:
+    """One-shot convenience wrapper around SweepEngine."""
+    return SweepEngine(loss_fn, spec, eval_fn=eval_fn,
+                       eval_every=eval_every).run(params0, batches)

@@ -79,6 +79,19 @@ class FLTrainer:
 
         self._round_step = jax.jit(round_step)
 
+        def scan_run(params, batches, key):
+            def body(carry, batch):
+                params, key = carry
+                key, sub = jax.random.split(key)
+                params, loss, gn, _ = round_step(params, batch, sub)
+                return (params, key), (loss, gn)
+
+            (params, _), (loss, gn) = jax.lax.scan(body, (params, key), batches)
+            metrics = self.eval_fn(params) if self.eval_fn else {}
+            return params, loss, gn, metrics
+
+        self._scan_run = jax.jit(scan_run)
+
     def run(self, params, sampler, rounds: int, key: Array,
             eval_every: int = 25, log_every: int = 0) -> (object, List[RoundLog]):
         logs: List[RoundLog] = []
@@ -98,4 +111,32 @@ class FLTrainer:
                 if log_every:
                     print(f"  round {t:4d} loss {float(loss):8.4f} "
                           f"acc {logs[-1].accuracy:.4f}")
+        return params, logs
+
+    def run_scan(self, params, batches, key: Array,
+                 eval_every: int = 25) -> (object, List[RoundLog]):
+        """`run` with the round loop compiled into one `jax.lax.scan`.
+
+        batches: pytree of [R, ...] arrays — all rounds' batches stacked up
+        front (e.g. `FederatedSampler.stack_rounds(R)`), so the whole run is
+        a single dispatch with no per-round Python or host sync.  Keys are
+        split round-by-round exactly as in `run`, so on identical inputs the
+        trajectories are bit-for-bit identical; only the log schedule
+        changes: per-round loss/grad-norm come back as arrays and the final
+        params get one eval, so RoundLogs carry the final accuracy only.
+        """
+        rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        batches = jax.tree_util.tree_map(jnp.asarray, batches)
+        t0 = time.perf_counter()
+        params, loss, gn, metrics = self._scan_run(params, batches, key)
+        loss, gn = np.asarray(loss), np.asarray(gn)
+        wall = (time.perf_counter() - t0) / rounds
+        final_acc = float(metrics.get("accuracy", np.nan)) if metrics else np.nan
+        logs = [
+            RoundLog(step=t, loss=float(loss[t]),
+                     accuracy=final_acc if t == rounds - 1 else float("nan"),
+                     grad_norm=float(gn[t]), wall_s=wall)
+            for t in range(rounds)
+            if eval_every and (t % eval_every == 0 or t == rounds - 1)
+        ]
         return params, logs

@@ -34,6 +34,55 @@ def _kernel(scal_ref, coeff_ref, g_ref, z_ref, o_ref):
     o_ref[:] = (acc + bias + eps * z).astype(o_ref.dtype)
 
 
+def _batched_kernel(scal_ref, coeff_ref, g_ref, z_ref, o_ref):
+    s = coeff_ref[:].astype(jnp.float32)            # [1, U] scenario row
+    g = g_ref[:].astype(jnp.float32)                # [1, U, TILE_D]
+    z = z_ref[:].astype(jnp.float32)                # [1, TILE_D]
+    bias = scal_ref[0, 0]
+    eps = scal_ref[0, 1]
+    acc = jnp.sum(s[0, :, None] * g[0], axis=0)     # VPU reduce over workers
+    o_ref[:] = (acc + bias + eps * z[0])[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
+def floa_aggregate_batched(coeffs: Array, grads: Array, noise: Array,
+                           bias: Array, eps: Array, interpret: bool = False,
+                           tile_d: int = TILE_D) -> Array:
+    """Batched scenario-sweep variant of `floa_aggregate`.
+
+    coeffs [S, U] f32, grads [S, U, D], noise [S, D], bias/eps [S] -> [S, D].
+    Grid is (S, D // TILE_D): scenario-major so each scenario's coeff/bias/eps
+    row is loaded once and reused across its D tiles; the [U, TILE_D] gradient
+    slab per grid step is identical to the unbatched kernel, so the VMEM
+    budget does not grow with S.
+    """
+    s_n, u, d = grads.shape
+    assert coeffs.shape == (s_n, u) and noise.shape == (s_n, d)
+    assert bias.shape == (s_n,) and eps.shape == (s_n,)
+    if d % tile_d:  # pad D to a tile multiple (cheap; D is huge in practice)
+        pad = tile_d - d % tile_d
+        grads = jnp.pad(grads, ((0, 0), (0, 0), (0, pad)))
+        noise = jnp.pad(noise, ((0, 0), (0, pad)))
+        return floa_aggregate_batched(coeffs, grads, noise, bias, eps,
+                                      interpret=interpret,
+                                      tile_d=tile_d)[:, :d]
+    scal = jnp.stack([bias.astype(jnp.float32),
+                      eps.astype(jnp.float32)], axis=1)  # [S, 2]
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=(s_n, d // tile_d),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda s, i: (s, 0)),          # scalar row
+            pl.BlockSpec((1, u), lambda s, i: (s, 0)),          # coeff row
+            pl.BlockSpec((1, u, tile_d), lambda s, i: (s, 0, i)),  # grad slab
+            pl.BlockSpec((1, tile_d), lambda s, i: (s, i)),     # noise row
+        ],
+        out_specs=pl.BlockSpec((1, tile_d), lambda s, i: (s, i)),
+        out_shape=jax.ShapeDtypeStruct((s_n, d), grads.dtype),
+        interpret=interpret,
+    )(scal, coeffs.astype(jnp.float32), grads, noise)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
 def floa_aggregate(coeffs: Array, grads: Array, noise: Array, bias: Array,
                    eps: Array, interpret: bool = False,

@@ -11,6 +11,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.floa_aggregate import floa_aggregate as _floa_aggregate
+from repro.kernels.floa_aggregate import (
+    floa_aggregate_batched as _floa_aggregate_batched,
+)
 from repro.kernels.grad_stats import grad_stats as _grad_stats
 
 Array = jax.Array
@@ -26,6 +29,13 @@ def floa_aggregate(coeffs, grads, noise, bias, eps, interpret=None) -> Array:
                            jnp.asarray(eps), interpret=interpret)
 
 
+def floa_aggregate_batched(coeffs, grads, noise, bias, eps,
+                           interpret=None) -> Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    return _floa_aggregate_batched(coeffs, grads, noise, jnp.asarray(bias),
+                                   jnp.asarray(eps), interpret=interpret)
+
+
 def grad_stats(grads, interpret=None) -> Array:
     interpret = _interpret_default() if interpret is None else interpret
     return _grad_stats(grads, interpret=interpret)
@@ -38,5 +48,6 @@ def decode_attention(q, k, v, pos, interpret=None) -> Array:
 
 # oracles re-exported for tests/benchmarks
 floa_aggregate_ref = ref.floa_aggregate_ref
+floa_aggregate_batched_ref = ref.floa_aggregate_batched_ref
 grad_stats_ref = ref.grad_stats_ref
 decode_attention_ref = ref.decode_attention_ref

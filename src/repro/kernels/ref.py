@@ -18,6 +18,18 @@ def floa_aggregate_ref(coeffs: Array, grads: Array, noise: Array,
     return (acc + bias + eps * noise.astype(jnp.float32)).astype(grads.dtype)
 
 
+def floa_aggregate_batched_ref(coeffs: Array, grads: Array, noise: Array,
+                               bias: Array, eps: Array) -> Array:
+    """out[s,d] = sum_u coeffs[s,u] grads[s,u,d] + bias[s] + eps[s] noise[s,d].
+
+    coeffs [S, U] f32, grads [S, U, D], noise [S, D], bias/eps [S].
+    """
+    acc = jnp.einsum("su,sud->sd", coeffs.astype(jnp.float32),
+                     grads.astype(jnp.float32))
+    out = acc + bias[:, None] + eps[:, None] * noise.astype(jnp.float32)
+    return out.astype(grads.dtype)
+
+
 def grad_stats_ref(grads: Array) -> Array:
     """Per-worker [U, 2] f32: (sum_d g, sum_d g^2) — the eq. (3) stats."""
     g = grads.astype(jnp.float32)

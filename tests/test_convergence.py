@@ -7,6 +7,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# Miniature end-to-end FL runs: ~20s of CPU training. Tier-1 CI skips them;
+# the scheduled full-suite job (and local `pytest` with no -m filter) runs all.
+pytestmark = pytest.mark.slow
+
 jax.config.update("jax_threefry_partitionable", True)
 
 from repro.configs.registry import PAPER_MLP

@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e '.[test]'; CI's tier-1 job has it)")
 from hypothesis import given, settings, strategies as st
 
 jax.config.update("jax_threefry_partitionable", True)

@@ -5,11 +5,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
 from repro.models import transformer as T
 
 
+@pytest.mark.slow  # full decode loop, ~1 min on CPU
 def test_int8_kv_decode_close_to_exact():
     cfg = get_smoke("qwen3-4b")
     cfg_q = dataclasses.replace(cfg, kv_cache_dtype="int8")

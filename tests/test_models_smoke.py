@@ -29,6 +29,7 @@ def _batch(cfg):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow  # compiles a train step per arch (~10-30s each)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke(arch)
     batch = _batch(cfg)
@@ -73,6 +74,7 @@ def test_smoke_forward_shapes(arch):
 @pytest.mark.parametrize("arch", ["starcoder2-3b", "deepseek-v2-236b",
                                   "mamba2-1.3b", "recurrentgemma-9b",
                                   "llama4-maverick-400b-a17b"])
+@pytest.mark.slow  # compiles fwd+decode per arch (~10-20s each)
 def test_smoke_decode_matches_forward(arch):
     """Step-by-step decode with caches reproduces the teacher-forced logits."""
     cfg = get_smoke(arch)
