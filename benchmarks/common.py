@@ -88,12 +88,16 @@ def figure_setup(mc=None):
 
 
 def run_figure(exps: List[Experiment], eval_every: int = 10,
-               mc=None) -> Dict[str, List]:
+               mc=None, mesh=None):
     """All of a figure's experiments as ONE compiled sweep call.
 
     Every experiment uses the same dataset and batch sequence (sampler
-    seed=1), exactly as the legacy per-experiment loop did; returns
-    {exp.name: [RoundLog, ...]} on the `eval_every` schedule.
+    seed=1), exactly as the legacy per-experiment loop did.  Returns the
+    `SweepResult` itself — the figure scripts hand it straight to
+    `render_tables.print_sweep_csv` / `sweep_markdown` (no per-experiment
+    CSV intermediates); `result.logs(name, eval_every)` recovers the legacy
+    RoundLog lists.  Pass mesh= (e.g. `launch.mesh.make_sweep_mesh()`) to
+    shard the scenario lanes over devices.
     """
     mc, shards, params, eval_fn = figure_setup(mc)
     rounds = exps[0].rounds
@@ -104,9 +108,8 @@ def run_figure(exps: List[Experiment], eval_every: int = 10,
     ])
     batches = FederatedSampler(shards, mc.batch_per_worker,
                                seed=1).stack_rounds(rounds)
-    result = SweepEngine(mlp_loss, spec, eval_fn=eval_fn,
-                         eval_every=eval_every).run(params, batches)
-    return {name: result.logs(name, eval_every) for name in result.names}
+    return SweepEngine(mlp_loss, spec, eval_fn=eval_fn,
+                       eval_every=eval_every, mesh=mesh).run(params, batches)
 
 
 def run_experiment(exp: Experiment, eval_every: int = 10) -> List:

@@ -5,18 +5,18 @@ Paper claims (§IV-A): CI matches EF; BEV converges slightly slower/worse
 All three setups run as one compiled sweep (3 lanes x `rounds` scanned).
 CSV: fig,experiment,round,loss,accuracy
 """
-from benchmarks.common import Experiment, Policy, print_csv, run_figure
+from benchmarks.common import Experiment, Policy, run_figure
+from benchmarks.render_tables import print_sweep_csv
 
 
-def main(rounds: int = 150) -> dict:
+def main(rounds: int = 150):
     exps = [Experiment(name=name, policy=pol, n_attackers=0, alpha_hat=0.1,
                        rounds=rounds)
             for name, pol in [("EF", Policy.EF), ("CI", Policy.CI),
                               ("BEV", Policy.BEV)]]
-    out = run_figure(exps)
-    for name, logs in out.items():
-        print_csv("fig1", name, logs)
-    return out
+    result = run_figure(exps)
+    print_sweep_csv("fig1", result, eval_every=10)
+    return result
 
 
 if __name__ == "__main__":

@@ -6,20 +6,20 @@ still converges; at 0.1 CI is slightly better.
 All six setups run as one compiled sweep (6 lanes x `rounds` scanned).
 CSV: fig,experiment,round,loss,accuracy
 """
-from benchmarks.common import Experiment, Policy, print_csv, run_figure
+from benchmarks.common import Experiment, Policy, run_figure
+from benchmarks.render_tables import print_sweep_csv
 
 WEAK_SIGMA = 0.3  # attacker channel scale << honest sigma=1.0
 
 
-def main(rounds: int = 150) -> dict:
+def main(rounds: int = 150):
     exps = [Experiment(name=f"{name}@ah{ah}", policy=pol, n_attackers=1,
                        alpha_hat=ah, attacker_sigma=WEAK_SIGMA, rounds=rounds)
             for ah in (0.1, 1.0, 2.0)
             for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]]
-    out = run_figure(exps)
-    for name, logs in out.items():
-        print_csv("fig2", name, logs)
-    return out
+    result = run_figure(exps)
+    print_sweep_csv("fig2", result, eval_every=10)
+    return result
 
 
 if __name__ == "__main__":

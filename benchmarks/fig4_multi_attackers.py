@@ -6,18 +6,18 @@ still converges in the right direction, slower.
 All eight setups run as one compiled sweep (8 lanes x `rounds` scanned).
 CSV: fig,experiment,round,loss,accuracy
 """
-from benchmarks.common import Experiment, Policy, print_csv, run_figure
+from benchmarks.common import Experiment, Policy, run_figure
+from benchmarks.render_tables import print_sweep_csv
 
 
-def main(rounds: int = 150) -> dict:
+def main(rounds: int = 150):
     exps = [Experiment(name=f"{name}@N{n}", policy=pol, n_attackers=n,
                        alpha_hat=0.1, rounds=rounds)
             for n in (1, 2, 3, 4)
             for name, pol in [("CI", Policy.CI), ("BEV", Policy.BEV)]]
-    out = run_figure(exps)
-    for name, logs in out.items():
-        print_csv("fig4", name, logs)
-    return out
+    result = run_figure(exps)
+    print_sweep_csv("fig4", result, eval_every=10)
+    return result
 
 
 if __name__ == "__main__":

@@ -1,6 +1,13 @@
-"""Render EXPERIMENTS.md tables from results/dryrun + results/perf JSONs.
+"""Render EXPERIMENTS.md tables from results/dryrun + results/perf JSONs,
+figure CSV/markdown straight from an in-memory `SweepResult`, and the
+sweep-engine throughput table from BENCH_sweep.json.
 
   PYTHONPATH=src python -m benchmarks.render_tables            # prints md
+
+The figure scripts hand their `SweepResult` to `print_sweep_csv` /
+`sweep_markdown` directly — no per-experiment CSV intermediates (the
+RoundLog sampling lives in `SweepResult.logs`, so the schedule matches the
+legacy per-experiment writers row for row).
 """
 from __future__ import annotations
 
@@ -25,6 +32,52 @@ def fmt_s(x):
     if x >= 0.1:
         return f"{x:.2f}"
     return f"{x:.2e}"
+
+
+def sweep_csv_rows(tag, result, eval_every: int = 1):
+    """`fig,experiment,round,loss,accuracy` rows from a SweepResult."""
+    for name in result.names:
+        for lg in result.logs(name, eval_every):
+            yield f"{tag},{name},{lg.step},{lg.loss:.5f},{lg.accuracy:.4f}"
+
+
+def print_sweep_csv(tag, result, eval_every: int = 1) -> None:
+    """Figure-script CSV writer fed by the SweepResult itself."""
+    for row in sweep_csv_rows(tag, result, eval_every):
+        print(row)
+
+
+def sweep_markdown(result, eval_every: int = 1) -> str:
+    """Per-scenario final-round summary table from a SweepResult."""
+    lines = ["| scenario | final loss | final accuracy | final grad norm |",
+             "|---|---|---|---|"]
+    for name in result.names:
+        logs = result.logs(name, eval_every)
+        last = logs[-1]
+        acc = "-" if last.accuracy != last.accuracy else f"{last.accuracy:.4f}"
+        lines.append(f"| {name} | {last.loss:.5f} | {acc} | "
+                     f"{last.grad_norm:.4f} |")
+    return "\n".join(lines)
+
+
+def sweep_bench_table(path: str = "BENCH_sweep.json") -> str:
+    """Engine-throughput table from sweep_bench.py's JSON record."""
+    with open(path) as f:
+        d = json.load(f)
+    lines = [
+        f"S={d['scenarios']} x R={d['rounds']}, D={d['dim']}, "
+        f"backend={d['backend']}, devices={d['devices']} "
+        f"(speedups vs {d['baseline']})",
+        "",
+        "| engine | cold rounds/s | warm rounds/s | cold speedup | warm speedup |",
+        "|---|---|---|---|---|",
+    ]
+    for name, e in d["engines"].items():
+        lines.append(
+            f"| {name} | {e['cold_rounds_per_sec']:.1f} | "
+            f"{e['warm_rounds_per_sec']:.1f} | {e['cold_speedup']:.2f}x | "
+            f"{e['warm_speedup']:.2f}x |")
+    return "\n".join(lines)
 
 
 def roofline_table(recs) -> str:
@@ -96,6 +149,10 @@ def dryrun_table(recs) -> str:
 
 
 def main() -> None:
+    if os.path.exists("BENCH_sweep.json"):
+        print("### Sweep-engine throughput (BENCH_sweep.json)\n")
+        print(sweep_bench_table())
+        print()
     recs = load("results/dryrun")
     print("### Dry-run status (80 combos)\n")
     print(dryrun_table(recs))

@@ -1,31 +1,52 @@
-"""Sweep-engine throughput: looped FLTrainer vs scan vs scan+vmap.
+"""Sweep-engine throughput: looped FLTrainer vs scan vs tree-state vs flat.
 
 Runs the same S-scenario x R-round grid (fig-4 style: CI/BEV x attacker
-count on the paper MLP, D=50890) through three execution strategies:
+count on the paper MLP, D=50890) through the execution strategies:
 
-  looped     FLTrainer.run         — one jitted dispatch per round, and one
+  looped      FLTrainer.run        — one jitted dispatch per round, and one
                                      fresh compile per scenario (the config
                                      is baked into each trainer's closure):
                                      the seed repo's only mode
-  scan       FLTrainer.run_scan    — rounds compiled into one lax.scan,
+  scan        FLTrainer.run_scan   — rounds compiled into one lax.scan,
                                      still one program (compile) per scenario
-  scan+vmap  fl.sweep.SweepEngine  — rounds scanned AND scenarios stacked
-                                     into one vmapped lane axis: the whole
-                                     grid is ONE compile, ONE dispatch
+  scan+vmap   SweepEngine(flat_state=False)
+                                   — rounds scanned AND scenarios stacked
+                                     into one vmapped lane axis (the PR 1
+                                     engine): per round it still pays the
+                                     [S, U, D] flatten/concat and a per-leaf
+                                     unflatten + update
+  flat        SweepEngine          — the flat-state warm path: params stay
+                                     one [S, D] matrix across the scan and
+                                     the combine + PS update fuse into
+                                     `batched_floa_step`
+  flat+shmap  SweepEngine(mesh=...)
+                                   — the flat scan shard_mapped over a
+                                     ("data",) mesh (enable with --sharded;
+                                     on CPU hosts set
+                                     XLA_FLAGS=--xla_force_host_platform_device_count=8
+                                     BEFORE launching to fan the lane axis
+                                     over 8 fake devices)
 
 Two aggregate rounds/sec (S*R / wall) numbers per engine:
 
   cold   end-to-end including compilation — what a figure script actually
          pays to produce its grid once.  The looped/scan baselines pay S
-         compiles; the sweep engine pays one, so its advantage GROWS with S.
+         compiles; the sweep engines pay one, so their advantage GROWS with S.
   warm   steady-state rerun of the already-compiled program(s) — isolates
-         per-round dispatch/batching efficiency.
+         per-round dispatch/batching efficiency (best of --reps reruns, since
+         shared CI boxes are noisy).
+
+Results are printed as CSV and written to a machine-readable JSON
+(--out, default BENCH_sweep.json) so the perf trajectory is tracked across
+PRs; the CI sweep-sharded job uploads it as a workflow artifact.
 
   PYTHONPATH=src:. python benchmarks/sweep_bench.py [--rounds R] [--scenarios S]
+      [--sharded] [--reps N] [--skip-looped] [--out BENCH_sweep.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -53,7 +74,9 @@ def grid(num: int, rounds: int):
             for i in range(num)]
 
 
-def main(rounds: int = 25, scenarios: int = 16) -> dict:
+def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
+         reps: int = 3, skip_looped: bool = False,
+         out_path: str = "BENCH_sweep.json") -> dict:
     mc, shards, params, _ = figure_setup()
     exps = grid(scenarios, rounds)
     cfgs = [experiment_floa(e, mc) for e in exps]
@@ -75,6 +98,13 @@ def main(rounds: int = 25, scenarios: int = 16) -> dict:
 
     total = len(exps) * rounds
     cold, warm = {}, {}
+    runners = []  # (name, run_once); cold-timed on registration
+
+    def measure(name, run_once):
+        t0 = time.perf_counter()
+        run_once()
+        cold[name] = time.perf_counter() - t0
+        runners.append((name, run_once))
 
     def run_looped(trainers):
         for tr, e in zip(trainers, exps):
@@ -90,57 +120,98 @@ def main(rounds: int = 25, scenarios: int = 16) -> dict:
 
     # --- looped: fresh trainers => one compile per scenario, then per-round
     # dispatch; warm rerun reuses the compiled round_steps.
-    trainers = [FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha)
-                for floa, alpha in cfgs]
-    t0 = time.perf_counter()
-    run_looped(trainers)
-    cold["looped"] = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    run_looped(trainers)
-    warm["looped"] = time.perf_counter() - t0
+    if not skip_looped:
+        trainers = [FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha)
+                    for floa, alpha in cfgs]
+        measure("looped", lambda t=trainers: run_looped(t))
 
-    # --- scan: one lax.scan program (compile) per scenario.
-    trainers = [FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha)
-                for floa, alpha in cfgs]
-    t0 = time.perf_counter()
-    run_scans(trainers)
-    cold["scan"] = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    run_scans(trainers)
-    warm["scan"] = time.perf_counter() - t0
+        # --- scan: one lax.scan program (compile) per scenario.
+        trainers = [FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=alpha)
+                    for floa, alpha in cfgs]
+        measure("scan", lambda t=trainers: run_scans(t))
 
-    # --- scan+vmap: the whole grid as one program, one compile.
-    t0 = time.perf_counter()
     spec = SweepSpec.build([
         ScenarioCase(e.name, floa, alpha, seed=e.seed)
         for e, (floa, alpha) in zip(exps, cfgs)
     ])
+
+    # --- scan+vmap: the PR 1 tree-state engine — whole grid, one program.
+    engine = SweepEngine(mlp_loss, spec, flat_state=False)
+    measure("scan+vmap", lambda e=engine: e.run(params, batches))
+
+    # --- flat: flat-state scan + fused combine/update (this PR's warm path).
     engine = SweepEngine(mlp_loss, spec)
-    engine.run(params, batches)
-    cold["scan+vmap"] = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    engine.run(params, batches)
-    warm["scan+vmap"] = time.perf_counter() - t0
+    measure("flat", lambda e=engine: e.run(params, batches))
+
+    # --- flat+shmap: the same flat scan sharded over every visible device.
+    if sharded:
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh()
+        engine = SweepEngine(mlp_loss, spec, mesh=mesh)
+        measure("flat+shmap", lambda e=engine: e.run(params, batches))
+
+    # Warm reps are interleaved across engines (A B C A B C ...) and each
+    # engine keeps its best: on shared/noisy boxes consecutive reps alias
+    # the machine's slow phases onto whichever engine happens to be running,
+    # while interleaving spreads them evenly.
+    best = {name: float("inf") for name, _ in runners}
+    for _ in range(reps):
+        for name, run_once in runners:
+            t0 = time.perf_counter()
+            run_once()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    warm.update(best)
 
     print(f"# paper MLP (D={mc.dim}), S={len(exps)} scenarios x R={rounds} "
-          f"rounds, backend={jax.default_backend()}")
+          f"rounds, backend={jax.default_backend()}, "
+          f"devices={jax.device_count()}")
     print("engine,cold_rounds_per_sec,warm_rounds_per_sec,"
-          "cold_speedup_vs_looped,warm_speedup_vs_looped")
-    out = {}
-    for name in ("looped", "scan", "scan+vmap"):
+          "cold_speedup_vs_baseline,warm_speedup_vs_baseline")
+    baseline = "looped" if "looped" in cold else "scan+vmap"
+    engines = {}
+    for name in cold:
         c, w = total / cold[name], total / warm[name]
-        out[name] = dict(cold=c, warm=w,
-                         cold_speedup=cold["looped"] / cold[name],
-                         warm_speedup=warm["looped"] / warm[name])
+        engines[name] = dict(
+            cold_rounds_per_sec=round(c, 2), warm_rounds_per_sec=round(w, 2),
+            cold_speedup=round(cold[baseline] / cold[name], 3),
+            warm_speedup=round(warm[baseline] / warm[name], 3))
         print(f"{name},{c:.1f},{w:.1f},"
-              f"{out[name]['cold_speedup']:.2f}x,"
-              f"{out[name]['warm_speedup']:.2f}x")
-    return out
+              f"{engines[name]['cold_speedup']:.2f}x,"
+              f"{engines[name]['warm_speedup']:.2f}x")
+
+    record = dict(
+        bench="sweep", scenarios=len(exps), rounds=rounds, dim=mc.dim,
+        num_workers=mc.num_workers, backend=jax.default_backend(),
+        devices=jax.device_count(), baseline=baseline, reps=reps,
+        engines=engines,
+    )
+    if "scan+vmap" in engines and "flat" in engines:
+        record["flat_vs_pr1_warm_speedup"] = round(
+            warm["scan+vmap"] / warm["flat"], 3)
+        if "flat+shmap" in engines:
+            record["sharded_vs_pr1_warm_speedup"] = round(
+                warm["scan+vmap"] / warm["flat+shmap"], 3)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {out_path}")
+    return record
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--scenarios", type=int, default=16)
+    ap.add_argument("--sharded", action="store_true",
+                    help="also bench SweepEngine(mesh=...) over all devices "
+                         "(pair with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 on CPU)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="warm reruns per engine (best-of, for noisy boxes)")
+    ap.add_argument("--skip-looped", action="store_true",
+                    help="skip the per-scenario looped/scan baselines")
+    ap.add_argument("--out", default="BENCH_sweep.json",
+                    help="machine-readable output path ('' to disable)")
     args = ap.parse_args()
-    main(rounds=args.rounds, scenarios=args.scenarios)
+    main(rounds=args.rounds, scenarios=args.scenarios, sharded=args.sharded,
+         reps=args.reps, skip_looped=args.skip_looped, out_path=args.out)

@@ -228,6 +228,39 @@ def batched_floa_combine(
     return ref.floa_aggregate_batched_ref(coeffs, flat, noise, bias, eps)
 
 
+def batched_floa_step(
+    w: Array,
+    alpha: Array,
+    coeffs: Array,
+    flat: Array,
+    noise: Array,
+    bias: Array,
+    eps: Array,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    """Fused [S, U, D] OTA combine + PS update (eq. 7 + eq. 8), flat state.
+
+        gagg[s]  = coeffs[s] @ flat[s] + bias[s] + eps[s] * noise[s]
+        w_new[s] = w[s] - alpha[s] * gagg[s]
+
+    Returns (w_new, gagg); gagg is materialized so the sweep engine can log
+    grad norms without re-deriving it from the update.  Same TPU-kernel /
+    einsum-oracle routing and oracle-equivalence contract as
+    `batched_floa_combine` — on TPU with a large flat gradient the whole
+    round update is one pass over the [S, U, D] slab.
+    """
+    if use_kernel is None:
+        use_kernel = (jax.default_backend() == "tpu"
+                      and flat.shape[-1] >= BATCHED_KERNEL_MIN_D)
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.floa_step_batched(w, coeffs, flat, noise, bias, eps,
+                                     alpha, interpret=interpret)
+    from repro.kernels import ref
+    return ref.floa_step_batched_ref(w, coeffs, flat, noise, bias, eps, alpha)
+
+
 def mean_aggregate(grads_u) -> object:
     """Plain FedSGD mean (the EF path without the FLOA bookkeeping)."""
     return jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), grads_u)

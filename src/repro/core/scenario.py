@@ -96,6 +96,21 @@ def stack(params: Tuple[ScenarioParams, ...]) -> ScenarioParams:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
 
 
+def pad_lanes(sp, total: int):
+    """Pad a lane-stacked pytree (ScenarioParams, key array, flat [S, D]
+    state, ...) to `total` lanes by replicating the last real lane.  The
+    single definition of ghost-lane padding for mesh sharding: every leaf
+    keeps valid values, so the padded lanes run real — discarded —
+    scenarios instead of NaNs poisoning collective-free lane math."""
+    s = jax.tree_util.tree_leaves(sp)[0].shape[0]
+    assert total >= s, (total, s)
+    if total == s:
+        return sp
+    return jax.tree_util.tree_map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (total - s,) + x.shape[1:])]), sp)
+
+
 def sample_gains(key: Array, sp: ScenarioParams) -> Array:
     """|h_{i,t}| ~ Rayleigh(sp.sigma), [U] — channel.sample_channel_gains
     with the scales coming from the traceable params (both share

@@ -53,6 +53,34 @@ def per_worker_scalar_stats(grads_u) -> Tuple[Array, Array]:
     return gbar, eps2
 
 
+def flat_scalar_stats(flat, sizes=None) -> Tuple[Array, Array]:
+    """`per_worker_scalar_stats` for an already-flattened [U, D] gradient.
+
+    The flat-state sweep engine keeps per-worker gradients as one [U, D]
+    matrix and never materializes the pytree, so the stats have to come off
+    the flat rows.  When `sizes` (the per-leaf entry counts of the original
+    pytree, in flatten order) is given, the reduction is performed per leaf
+    segment and the partial sums are combined in the same order as the
+    pytree path — keeping the floating-point reduction tree identical to
+    `per_worker_scalar_stats` so the two paths agree bitwise, not just
+    approximately.  With sizes=None the whole row is reduced at once.
+    """
+    d = flat.shape[-1]
+    f = flat.astype(jnp.float32)
+    segs = [f]
+    if sizes is not None:
+        off, segs = 0, []
+        for n in sizes:
+            segs.append(f[..., off:off + n])
+            off += n
+        assert off == d, f"leaf sizes sum to {off}, flat D is {d}"
+    s1 = sum(jnp.sum(x, axis=-1) for x in segs)
+    s2 = sum(jnp.sum(jnp.square(x), axis=-1) for x in segs)
+    gbar = s1 / d
+    eps2 = jnp.maximum(s2 / d - gbar**2, 1e-20)
+    return gbar, eps2
+
+
 def global_stats(gbar_i: Array, eps2_i: Array) -> Tuple[Array, Array]:
     """PS-side averaging: gbar_t = mean_i gbar_i, eps_t^2 = mean_i eps2_i."""
     return jnp.mean(gbar_i), jnp.mean(eps2_i)

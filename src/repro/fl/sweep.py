@@ -9,10 +9,23 @@ Python overhead:
   scenarios  -> a vmapped stacked-`ScenarioParams` axis (one trace, S lanes),
                 built by `SweepSpec` from ordinary frozen `FLOAConfig`s.
 
-Inside the scan body the per-scenario gradient pytrees are flattened to a
-single [S, U, D] block and the OTA superposition + de-standardization bias +
-receiver noise are applied in one `batched_floa_combine` call, which routes
-to the fused batched Pallas kernel on TPU (einsum oracle elsewhere).
+The warm path operates on **flat state end-to-end**: parameters are flattened
+once to a [S, D] matrix before the scan and stay flat across all rounds.  The
+pytree boundary is crossed only inside the loss/grad closure (via a cached
+row-unflatten built from one `jax.eval_shape` of the init) and once at the end
+of the run — per-worker gradients come off the grad transpose already as one
+[S, U, D] block, so the per-round flatten/concat and per-leaf unflatten/update
+of the tree-state engine disappear.  The OTA superposition +
+de-standardization bias + receiver noise + PS update fuse into one
+`batched_floa_step` call (fused batched Pallas kernel on TPU, einsum oracle
+elsewhere).  `flat_state=False` keeps the PR-1 tree-state path as the
+equivalence reference.
+
+The lane axis is embarrassingly parallel, so it shards: pass `mesh=` (a 1-D
+("data",) mesh, e.g. `launch.mesh.make_sweep_mesh()`) and the flat-state scan
+is `shard_map`ped over the devices — S is padded to a multiple of the device
+count with ghost lanes (replicas of the last scenario) that are dropped from
+the results; every real lane's trajectory is unchanged.
 
     spec   = SweepSpec.build([(name, floa_cfg, alpha, seed), ...])
     engine = SweepEngine(loss_fn, spec, eval_fn=...)
@@ -28,17 +41,21 @@ varies per scenario.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import scenario as SC
 from repro.core import standardize as S
 from repro.core.aggregation import (
     FLOAConfig,
     batched_floa_combine,
+    batched_floa_step,
     flatten_worker_grads,
     per_worker_grads,
 )
@@ -154,13 +171,57 @@ def stack_params(params, num: int):
         lambda x: jnp.broadcast_to(x[None], (num,) + x.shape), params)
 
 
+def make_row_unflatten(template):
+    """Cached [D]-row -> params-pytree mapper, from one `jax.eval_shape`.
+
+    template: a single (unstacked) params pytree or matching ShapeDtypeStruct
+    tree.  Returns (unflatten_row, sizes) where sizes are the per-leaf entry
+    counts in flatten order — the same order `flatten_worker_grads` uses, so
+    flatten(unflatten(w)) == w.
+    """
+    shapes = jax.eval_shape(lambda p: p, template)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    sizes = tuple(math.prod(l.shape) for l in leaves)
+
+    def unflatten_row(w):
+        out, off = [], 0
+        for l, n in zip(leaves, sizes):
+            out.append(w[off:off + n].reshape(l.shape).astype(l.dtype))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return unflatten_row, sizes
+
+
 class SweepEngine:
     """Builds (and caches) the jitted scan-over-rounds x vmap-over-scenarios
     program for one (loss_fn, spec, eval_fn) triple.  Reuse the instance to
-    amortize compilation across repeated runs (benchmarks, seeds-resampling)."""
+    amortize compilation across repeated runs (benchmarks, seeds-resampling).
+
+    flat_state=True (default) runs the flat-state warm path: params live as
+    one [S, D] f32 matrix for the whole scan and the combine + PS update fuse
+    into `batched_floa_step`.  flat_state=False keeps the PR-1 tree-state
+    path (per-round flatten/concat + per-leaf update, verbatim by default)
+    as the equivalence reference and benchmark baseline.  The paths agree to
+    fp rounding; constructing BOTH engines with strict_numerics=True pins
+    the standardization stats' reduction tree (leaf-segmented sums off the
+    materialized slab, behind an optimization barrier), making their
+    trajectories bit-identical for f32 models at the cost of one extra pass
+    over the [S, U, D] slab per round.  (The flat state is f32; non-f32
+    leaves are round-tripped through f32 each round, matching the flatten
+    that the tree path applies to the gradients.)
+
+    mesh: optional 1-D ("data",) jax.sharding.Mesh (see
+    `launch.mesh.make_sweep_mesh`).  The flat-state scan is shard_mapped over
+    the lane axis; S is padded up to a multiple of the device count with
+    ghost lanes (replicas of the last scenario) that are dropped from the
+    returned SweepResult.  Requires flat_state=True.
+    """
 
     def __init__(self, loss_fn: Callable, spec: SweepSpec,
-                 eval_fn: Optional[Callable] = None, eval_every: int = 1):
+                 eval_fn: Optional[Callable] = None, eval_every: int = 1,
+                 flat_state: bool = True, mesh: Optional[Mesh] = None,
+                 strict_numerics: bool = False):
         """eval_every: run eval_fn only on rounds t with t % eval_every == 0
         plus the final round (the FLTrainer.run schedule); other rounds carry
         NaN in the metrics arrays.  eval_every <= 0 means final round only.
@@ -170,15 +231,90 @@ class SweepEngine:
         self.spec = spec
         self.eval_fn = eval_fn
         self.eval_every = eval_every
+        self.flat_state = flat_state
+        self.mesh = mesh
+        self.strict_numerics = strict_numerics
         self._num = len(spec)
         self._u = spec.num_workers
         self._sp = spec.stacked_params()
-        self._run_jit = jax.jit(self._make_run())
+        self._pad = 0
+        if mesh is not None:
+            assert flat_state, "mesh-sharded sweeps require the flat-state path"
+            assert mesh.axis_names == ("data",), (
+                f'sweep mesh must be 1-D ("data",), got {mesh.axis_names}')
+            self._pad = -self._num % mesh.shape["data"]
+        self._sp_run = SC.pad_lanes(self._sp, self._num + self._pad)
+        # The compiled program is built lazily on the first run: the flat
+        # path needs the params template (leaf shapes/dtypes) to cache its
+        # row unflatten, and that only arrives with params0.
+        self._run_jit = None
+        self._template = None
 
-    def _make_run(self):
-        loss_fn, eval_fn = self.loss_fn, self.eval_fn
+    # ------------------------------------------------------------ builders
+
+    def _scan_driver(self, one_round, eval_lane, finalize=None):
+        """Shared scan-over-rounds driver for both state representations.
+
+        Key splitting, the FLTrainer.run eval schedule, and the
+        (state, keys, t) carry are identical for the tree- and flat-state
+        paths; only the per-round step (`one_round`), the per-lane eval view
+        (`eval_lane`, None to skip eval), and the final state -> stacked
+        params mapping (`finalize`) differ.
+        """
         eval_every = self.eval_every
-        u, num = self._u, self._num
+
+        def eval_maybe(state, t, rounds):
+            """eval_lane on the FLTrainer.run schedule; NaN off-schedule.
+            The lax.cond skips the eval compute entirely on off-schedule
+            rounds.  Metrics are cast to f32 so the NaN sentinel is
+            representable (an integer metric would silently read as a
+            plausible value)."""
+            if eval_lane is None:
+                return {}
+
+            def as_f32(s_):
+                return jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.float32), jax.vmap(eval_lane)(s_))
+
+            shapes = jax.eval_shape(as_f32, state)
+            blank = jax.tree_util.tree_map(
+                lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes)
+            due = (t == rounds - 1)
+            if eval_every > 0:
+                due = due | (t % eval_every == 0)
+            return jax.lax.cond(due, as_f32, lambda _: blank, state)
+
+        def run(state, keys, batches, sp):
+            rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+
+            def body(carry, batch):
+                state, keys, t = carry
+                split = jax.vmap(jax.random.split)(keys)    # [S, 2, 2]
+                keys, subs = split[:, 0], split[:, 1]
+                state, loss, gn = one_round(state, batch, subs, sp)
+                metrics = eval_maybe(state, t, rounds)
+                return (state, keys, t + 1), (loss, gn, metrics)
+
+            (state, _, _), (loss, gn, metrics) = jax.lax.scan(
+                body, (state, keys, jnp.int32(0)), batches)
+            if finalize is not None:
+                state = finalize(state)
+            return state, loss, gn, metrics
+
+        return run
+
+    def _make_run(self, sizes):
+        """PR-1 tree-state path: params stay a pytree; every round pays the
+        [S, U, D] flatten/concat and a per-leaf unflatten + update.
+
+        By default this is the PR-1 engine verbatim (pytree stats, then
+        flatten) — the honest benchmark baseline.  strict_numerics swaps the
+        stats for the barrier + leaf-segmented reduction off the flattened
+        slab, pinning the fp reduction tree both engines use so the
+        flat-state path can match it bitwise."""
+        loss_fn = self.loss_fn
+        u = self._u
+        strict = self.strict_numerics
         any_noise = self.spec.any_noise
         any_jam = self.spec.any_jamming
 
@@ -189,13 +325,22 @@ class SweepEngine:
             )(params_s)
 
             # 2. scalar-stat standardization handshake.
-            gbar_i, eps2_i = jax.vmap(S.per_worker_scalar_stats)(grads)
+            if strict:
+                # Barrier first: stats reduce from the materialized slab
+                # (needed by the combine anyway), bit-matching the strict
+                # flat-state path.
+                flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
+                flat = jax.lax.optimization_barrier(flat)
+                gbar_i, eps2_i = jax.vmap(
+                    lambda g: S.flat_scalar_stats(g, sizes))(flat)
+            else:
+                gbar_i, eps2_i = jax.vmap(S.per_worker_scalar_stats)(grads)
+                flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
+            num, dim = flat.shape[0], flat.shape[-1]
             gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
             eps = jnp.sqrt(eps2)
 
             # 3. channel draw + power control + attack, branchless per lane.
-            flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
-            dim = flat.shape[-1]
             ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)  # [S, 3, 2]
             h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
             coeff, bias_w, jam_std, noise_std = jax.vmap(
@@ -229,42 +374,112 @@ class SweepEngine:
             loss = jax.vmap(lambda p: loss_fn(p, batch))(new_params)
             return new_params, loss, gn
 
-        def eval_maybe(params_s, t, rounds):
-            """eval_fn on the FLTrainer.run schedule; NaN off-schedule.  The
-            lax.cond skips the eval compute entirely on off-schedule rounds.
-            Metrics are cast to f32 so the NaN sentinel is representable
-            (an integer metric would silently read as a plausible value)."""
-            if eval_fn is None:
-                return {}
+        return self._scan_driver(one_round, self.eval_fn)
 
-            def as_f32(p):
-                return jax.tree_util.tree_map(
-                    lambda x: x.astype(jnp.float32), jax.vmap(eval_fn)(p))
+    def _make_run_flat(self, unflatten_row, sizes):
+        """Flat-state warm path: the carry is one [S, D] f32 matrix.
 
-            shapes = jax.eval_shape(as_f32, params_s)
-            blank = jax.tree_util.tree_map(
-                lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes)
-            due = (t == rounds - 1)
-            if eval_every > 0:
-                due = due | (t % eval_every == 0)
-            return jax.lax.cond(due, as_f32, lambda _: blank, params_s)
+        The pytree boundary lives inside `flat_loss` only — its grad
+        transpose assembles the per-worker gradients straight into the
+        [S, U, D] block the combine consumes, and `batched_floa_step` fuses
+        the PS update into the same pass, so no per-round concat, unflatten,
+        or per-leaf update survives in the compiled scan body.
+        """
+        loss_fn, eval_fn = self.loss_fn, self.eval_fn
+        u = self._u
+        strict = self.strict_numerics
+        any_noise = self.spec.any_noise
+        any_jam = self.spec.any_jamming
 
-        def run(params_s, keys, batches):
-            rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        def flat_loss(w_row, batch):
+            return loss_fn(unflatten_row(w_row), batch)
 
-            def body(carry, batch):
-                params_s, keys, t = carry
-                split = jax.vmap(jax.random.split)(keys)    # [S, 2, 2]
-                keys, subs = split[:, 0], split[:, 1]
-                params_s, loss, gn = one_round(params_s, batch, subs, self._sp)
-                metrics = eval_maybe(params_s, t, rounds)
-                return (params_s, keys, t + 1), (loss, gn, metrics)
+        def one_round(w, batch, sub_s, sp: SC.ScenarioParams):
+            num, dim = w.shape
+            # 1. per-worker gradients, already flat: [S, U, D].
+            grads = jax.vmap(
+                lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
+            )(w)
 
-            (params_s, _, _), (loss, gn, metrics) = jax.lax.scan(
-                body, (params_s, keys, jnp.int32(0)), batches)
-            return params_s, loss, gn, metrics
+            # 2. standardization handshake.  strict_numerics pins the fp
+            # reduction tree to the tree-state path's (materialization
+            # barrier + leaf-segmented sums) so the two engines agree
+            # bitwise; the default lets XLA fuse the whole-row reduction
+            # into the gradient producer — one less pass over the slab, at
+            # the price of ulp-level stat differences.
+            if strict:
+                grads = jax.lax.optimization_barrier(grads)
+                gbar_i, eps2_i = jax.vmap(
+                    lambda g: S.flat_scalar_stats(g, sizes))(grads)
+            else:
+                gbar_i, eps2_i = jax.vmap(
+                    lambda g: S.flat_scalar_stats(g))(grads)
+            gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
+            eps = jnp.sqrt(eps2)
 
-        return run
+            # 3. channel draw + power control + attack, branchless per lane.
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)  # [S, 3, 2]
+            h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
+            coeff, bias_w, jam_std, noise_std = jax.vmap(
+                SC.scenario_coefficients
+            )(h_abs, sp, gbar, eps2)
+
+            if any_noise:
+                z = jax.vmap(
+                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                )(ks[:, 1])
+                noise_row = noise_std[:, None] * z
+            else:
+                noise_row = jnp.zeros((num, dim), jnp.float32)
+
+            # 4+5. OTA superposition + bias + AWGN + PS update, one fused
+            # pass over the [S, U, D] slab.  Jamming lands after the combine
+            # (it is not eps-scaled), so GAUSSIAN sweeps take the two-step
+            # route; every other attack uses the fused step.
+            bias_row = bias_w * gbar
+            if any_jam:
+                gagg = batched_floa_combine(
+                    coeff, grads, noise_row, bias_row, eps)
+                n2 = jax.vmap(
+                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                )(ks[:, 2])
+                gagg = gagg + jam_std[:, None] * n2
+                w_new = w - sp.alpha[:, None] * gagg
+            else:
+                w_new, gagg = batched_floa_step(
+                    w, sp.alpha, coeff, grads, noise_row, bias_row, eps)
+
+            gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
+            loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
+            return w_new, loss, gn
+
+        eval_lane = (None if eval_fn is None
+                     else lambda wr: eval_fn(unflatten_row(wr)))
+        # The only unflatten outside the loss closure: once, at the end.
+        return self._scan_driver(one_round, eval_lane,
+                                 finalize=jax.vmap(unflatten_row))
+
+    def _build(self, template):
+        """Compile-cache the run program (lazy: needs the params template)."""
+        self._template = template
+        unflatten_row, sizes = make_row_unflatten(template)
+        if self.flat_state:
+            run = self._make_run_flat(unflatten_row, sizes)
+        else:
+            run = self._make_run(sizes)
+        if self.mesh is not None:
+            lane, rep = P("data"), P()
+            # Prefix specs: lane axis 0 on state/keys/ScenarioParams, lane
+            # axis 1 on the [R, S]-stacked scan outputs, batches replicated.
+            run = shard_map(
+                run, mesh=self.mesh,
+                in_specs=(lane, lane, rep, lane),
+                out_specs=(lane, P(None, "data"), P(None, "data"),
+                           P(None, "data")),
+                check_rep=False)
+        self._run_jit = jax.jit(run)
+
+    # ----------------------------------------------------------------- run
 
     def run(self, params0, batches, keys: Optional[Array] = None,
             params_stacked: bool = False) -> SweepResult:
@@ -273,21 +488,52 @@ class SweepEngine:
         batches: pytree of [R, ...] arrays shared by every scenario."""
         if not params_stacked:
             params0 = stack_params(params0, self._num)
-        keys = self.spec.keys() if keys is None else keys
+        keys = self.spec.keys() if keys is None else jnp.asarray(keys)
         batches = jax.tree_util.tree_map(jnp.asarray, batches)
-        params, loss, gn, metrics = self._run_jit(params0, keys, batches)
+
+        template = jax.eval_shape(
+            lambda p: jax.tree_util.tree_map(lambda x: x[0], p), params0)
+        if self._run_jit is None or template != self._template:
+            self._build(template)
+
+        num, total = self._num, self._num + self._pad
+        if self.flat_state:
+            state, _ = flatten_worker_grads(params0, batch_dims=1)  # [S, D] f32
+            state = SC.pad_lanes(state, total)
+        else:
+            state = params0
+        keys = SC.pad_lanes(keys, total)
+        sp = self._sp_run
+
+        if self.mesh is not None:
+            lane = NamedSharding(self.mesh, P("data"))
+            rep = NamedSharding(self.mesh, P())
+            state = jax.device_put(state, lane)
+            keys = jax.device_put(keys, lane)
+            sp = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, lane), sp)
+            batches = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, rep), batches)
+
+        params, loss, gn, metrics = self._run_jit(state, keys, batches, sp)
+
+        def lanes(x):  # scan gives [R, S(+ghosts)]: drop the ghost lanes
+            return np.asarray(x).T[:num]
+
         return SweepResult(
             names=self.spec.names,
-            params=params,
-            loss=np.asarray(loss).T,            # scan gives [R, S]
-            grad_norm=np.asarray(gn).T,
-            metrics={k: np.asarray(v).T for k, v in metrics.items()},
+            params=jax.tree_util.tree_map(lambda x: x[:num], params),
+            loss=lanes(loss),
+            grad_norm=lanes(gn),
+            metrics={k: lanes(v) for k, v in metrics.items()},
         )
 
 
 def run_sweep(loss_fn: Callable, params0, batches, spec: SweepSpec,
               eval_fn: Optional[Callable] = None,
-              eval_every: int = 1) -> SweepResult:
+              eval_every: int = 1, flat_state: bool = True,
+              mesh: Optional[Mesh] = None) -> SweepResult:
     """One-shot convenience wrapper around SweepEngine."""
     return SweepEngine(loss_fn, spec, eval_fn=eval_fn,
-                       eval_every=eval_every).run(params0, batches)
+                       eval_every=eval_every, flat_state=flat_state,
+                       mesh=mesh).run(params0, batches)

@@ -91,6 +91,7 @@ class FLTrainer:
             return params, loss, gn, metrics
 
         self._scan_run = jax.jit(scan_run)
+        self._flat_engine = None  # lazy single-lane flat-state sweep engine
 
     def run(self, params, sampler, rounds: int, key: Array,
             eval_every: int = 25, log_every: int = 0) -> (object, List[RoundLog]):
@@ -114,7 +115,7 @@ class FLTrainer:
         return params, logs
 
     def run_scan(self, params, batches, key: Array,
-                 eval_every: int = 25) -> (object, List[RoundLog]):
+                 eval_every: int = 25, flat: bool = False) -> (object, List[RoundLog]):
         """`run` with the round loop compiled into one `jax.lax.scan`.
 
         batches: pytree of [R, ...] arrays — all rounds' batches stacked up
@@ -124,9 +125,19 @@ class FLTrainer:
         trajectories are bit-for-bit identical; only the log schedule
         changes: per-round loss/grad-norm come back as arrays and the final
         params get one eval, so RoundLogs carry the final accuracy only.
+
+        flat=True (FLOA mode only) reuses the sweep engine's flat-state warm
+        path as a single-lane sweep: params stay one [D] f32 row across the
+        scan and the combine + PS update fuse into `batched_floa_step`.
+        Trajectories match the sweep engine's lanes exactly; they match this
+        trainer's loop bit-for-bit on noiseless channels (the loop draws
+        receiver noise per parameter leaf, the flat path draws one [D] row).
         """
         rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
         batches = jax.tree_util.tree_map(jnp.asarray, batches)
+        if flat and self.mode == "floa":
+            return self._run_scan_flat(params, batches, key, eval_every,
+                                       rounds)
         t0 = time.perf_counter()
         params, loss, gn, metrics = self._scan_run(params, batches, key)
         loss, gn = np.asarray(loss), np.asarray(gn)
@@ -140,3 +151,28 @@ class FLTrainer:
             if eval_every and (t % eval_every == 0 or t == rounds - 1)
         ]
         return params, logs
+
+    def _run_scan_flat(self, params, batches, key, eval_every, rounds):
+        """Single-lane delegation to the sweep engine's flat-state scan."""
+        from repro.fl.sweep import ScenarioCase, SweepEngine, SweepSpec
+
+        if self._flat_engine is None:
+            spec = SweepSpec.build(
+                [ScenarioCase("scan", self.floa, self.alpha)])
+            # eval_every=0: final round only, the run_scan log schedule.
+            self._flat_engine = SweepEngine(
+                self.loss_fn, spec, eval_fn=self.eval_fn, eval_every=0)
+        t0 = time.perf_counter()
+        res = self._flat_engine.run(params, batches, keys=key[None])
+        wall = (time.perf_counter() - t0) / rounds
+        acc = res.metrics.get("accuracy")
+        final_acc = float(acc[0, -1]) if acc is not None else np.nan
+        logs = [
+            RoundLog(step=t, loss=float(res.loss[0, t]),
+                     accuracy=final_acc if t == rounds - 1 else float("nan"),
+                     grad_norm=float(res.grad_norm[0, t]), wall_s=wall)
+            for t in range(rounds)
+            if eval_every and (t % eval_every == 0 or t == rounds - 1)
+        ]
+        params_out = jax.tree_util.tree_map(lambda x: x[0], res.params)
+        return params_out, logs

@@ -1,15 +1,27 @@
-"""Fused FLOA aggregation kernel (the paper's hot spot, eq. 7).
+"""Fused FLOA aggregation kernels (the paper's hot spot, eq. 7-8).
 
-Computes out[d] = sum_u s[u] * G[u, d] + bias + eps * z[d] in one pass over
-the gradient: per-worker scale, over-the-air superposition, de-standardization
-bias, and receiver-noise injection are fused so the [U, D] gradient block is
-read exactly once from HBM (the op is bandwidth-bound: U*D reads, D writes,
-2*U*D flops -> arithmetic intensity ~1 flop/byte, so fusion is the whole win).
+`floa_aggregate` computes out[d] = sum_u s[u] * G[u, d] + bias + eps * z[d]
+in one pass over the gradient: per-worker scale, over-the-air superposition,
+de-standardization bias, and receiver-noise injection are fused so the [U, D]
+gradient block is read exactly once from HBM (the op is bandwidth-bound:
+U*D reads, D writes, 2*U*D flops -> arithmetic intensity ~1 flop/byte, so
+fusion is the whole win).
+
+`floa_step_batched` additionally fuses the PS update (eq. 8) into the same
+pass: w_new[s] = w[s] - alpha[s] * (coeffs[s] @ G[s] + bias[s] + eps[s] z[s]).
+The aggregate is emitted as a second output so callers can log grad norms;
+writes grow from D to 2*D per scenario but the U*D gradient reads still
+dominate, and the parameter row is read/written exactly once.
 
 Tiling: grid over D in TILE_D (=2048, a multiple of the 128-lane VPU width)
 steps; the [U, TILE_D] slab plus coefficient vector live in VMEM.  For
 U<=32, TILE_D=2048, bf16: 32*2048*2 = 128 KiB slab — comfortably inside the
 ~16 MiB VMEM budget with double-buffering.
+
+D-padding happens once, in the un-jitted public wrappers, before the jitted
+pallas_call core is entered (an earlier version recursed back into the jitted
+entry point with re-padded operands, re-entering the jit trace; see the
+non-multiple-of-TILE_D regression tests in tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -22,6 +34,14 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 TILE_D = 2048
+
+
+def _pad_last(x: Array, pad: int) -> Array:
+    """Zero-pad the last axis by `pad` entries (no-op when pad == 0)."""
+    if not pad:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
 
 
 def _kernel(scal_ref, coeff_ref, g_ref, z_ref, o_ref):
@@ -44,28 +64,26 @@ def _batched_kernel(scal_ref, coeff_ref, g_ref, z_ref, o_ref):
     o_ref[:] = (acc + bias + eps * z[0])[None].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
-def floa_aggregate_batched(coeffs: Array, grads: Array, noise: Array,
-                           bias: Array, eps: Array, interpret: bool = False,
-                           tile_d: int = TILE_D) -> Array:
-    """Batched scenario-sweep variant of `floa_aggregate`.
+def _batched_step_kernel(scal_ref, coeff_ref, w_ref, g_ref, z_ref,
+                         wo_ref, go_ref):
+    s = coeff_ref[:].astype(jnp.float32)            # [1, U] scenario row
+    w = w_ref[:].astype(jnp.float32)                # [1, TILE_D] params
+    g = g_ref[:].astype(jnp.float32)                # [1, U, TILE_D]
+    z = z_ref[:].astype(jnp.float32)                # [1, TILE_D]
+    bias = scal_ref[0, 0]
+    eps = scal_ref[0, 1]
+    alpha = scal_ref[0, 2]
+    gagg = jnp.sum(s[0, :, None] * g[0], axis=0) + bias + eps * z[0]
+    go_ref[:] = gagg[None].astype(go_ref.dtype)
+    wo_ref[:] = (w[0] - alpha * gagg)[None].astype(wo_ref.dtype)
 
-    coeffs [S, U] f32, grads [S, U, D], noise [S, D], bias/eps [S] -> [S, D].
-    Grid is (S, D // TILE_D): scenario-major so each scenario's coeff/bias/eps
-    row is loaded once and reused across its D tiles; the [U, TILE_D] gradient
-    slab per grid step is identical to the unbatched kernel, so the VMEM
-    budget does not grow with S.
-    """
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
+def _floa_aggregate_batched_core(coeffs: Array, grads: Array, noise: Array,
+                                 bias: Array, eps: Array, interpret: bool,
+                                 tile_d: int) -> Array:
     s_n, u, d = grads.shape
-    assert coeffs.shape == (s_n, u) and noise.shape == (s_n, d)
-    assert bias.shape == (s_n,) and eps.shape == (s_n,)
-    if d % tile_d:  # pad D to a tile multiple (cheap; D is huge in practice)
-        pad = tile_d - d % tile_d
-        grads = jnp.pad(grads, ((0, 0), (0, 0), (0, pad)))
-        noise = jnp.pad(noise, ((0, 0), (0, pad)))
-        return floa_aggregate_batched(coeffs, grads, noise, bias, eps,
-                                      interpret=interpret,
-                                      tile_d=tile_d)[:, :d]
+    assert d % tile_d == 0, "core requires pre-padded D (see public wrapper)"
     scal = jnp.stack([bias.astype(jnp.float32),
                       eps.astype(jnp.float32)], axis=1)  # [S, 2]
     return pl.pallas_call(
@@ -83,18 +101,91 @@ def floa_aggregate_batched(coeffs: Array, grads: Array, noise: Array,
     )(scal, coeffs.astype(jnp.float32), grads, noise)
 
 
+def floa_aggregate_batched(coeffs: Array, grads: Array, noise: Array,
+                           bias: Array, eps: Array, interpret: bool = False,
+                           tile_d: int = TILE_D) -> Array:
+    """Batched scenario-sweep variant of `floa_aggregate`.
+
+    coeffs [S, U] f32, grads [S, U, D], noise [S, D], bias/eps [S] -> [S, D].
+    Grid is (S, D // TILE_D): scenario-major so each scenario's coeff/bias/eps
+    row is loaded once and reused across its D tiles; the [U, TILE_D] gradient
+    slab per grid step is identical to the unbatched kernel, so the VMEM
+    budget does not grow with S.
+    """
+    s_n, u, d = grads.shape
+    assert coeffs.shape == (s_n, u) and noise.shape == (s_n, d)
+    assert bias.shape == (s_n,) and eps.shape == (s_n,)
+    pad = -d % tile_d  # single pad before the jitted core (D is huge anyway)
+    out = _floa_aggregate_batched_core(
+        coeffs, _pad_last(grads, pad), _pad_last(noise, pad), bias, eps,
+        interpret=interpret, tile_d=tile_d)
+    return out[:, :d] if pad else out
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
-def floa_aggregate(coeffs: Array, grads: Array, noise: Array, bias: Array,
-                   eps: Array, interpret: bool = False,
-                   tile_d: int = TILE_D) -> Array:
-    """coeffs [U] f32, grads [U, D], noise [D], bias/eps scalars -> [D]."""
+def _floa_step_batched_core(w: Array, coeffs: Array, grads: Array,
+                            noise: Array, bias: Array, eps: Array,
+                            alpha: Array, interpret: bool, tile_d: int):
+    s_n, u, d = grads.shape
+    assert d % tile_d == 0, "core requires pre-padded D (see public wrapper)"
+    scal = jnp.stack([bias.astype(jnp.float32),
+                      eps.astype(jnp.float32),
+                      alpha.astype(jnp.float32)], axis=1)  # [S, 3]
+    return pl.pallas_call(
+        _batched_step_kernel,
+        grid=(s_n, d // tile_d),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda s, i: (s, 0)),          # scalar row
+            pl.BlockSpec((1, u), lambda s, i: (s, 0)),          # coeff row
+            pl.BlockSpec((1, tile_d), lambda s, i: (s, i)),     # param row
+            pl.BlockSpec((1, u, tile_d), lambda s, i: (s, 0, i)),  # grad slab
+            pl.BlockSpec((1, tile_d), lambda s, i: (s, i)),     # noise row
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_d), lambda s, i: (s, i)),     # new params
+            pl.BlockSpec((1, tile_d), lambda s, i: (s, i)),     # aggregate
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_n, d), w.dtype),
+            jax.ShapeDtypeStruct((s_n, d), grads.dtype),
+        ],
+        interpret=interpret,
+    )(scal, coeffs.astype(jnp.float32), w, grads, noise)
+
+
+def floa_step_batched(w: Array, coeffs: Array, grads: Array, noise: Array,
+                      bias: Array, eps: Array, alpha: Array,
+                      interpret: bool = False, tile_d: int = TILE_D):
+    """Fused combine + PS update over the [S, U, D] slab (eq. 7 + eq. 8).
+
+    w [S, D], coeffs [S, U] f32, grads [S, U, D], noise [S, D],
+    bias/eps/alpha [S] -> (w_new [S, D], gagg [S, D]).
+
+    Same grid/VMEM layout as `floa_aggregate_batched` plus one parameter row
+    in and two rows out per tile; the parameter state never leaves flat [S, D]
+    form, which is what makes the sweep engine's flat-state scan one pass.
+    """
+    s_n, u, d = grads.shape
+    assert w.shape == (s_n, d) and coeffs.shape == (s_n, u)
+    assert noise.shape == (s_n, d)
+    assert bias.shape == (s_n,) and eps.shape == (s_n,)
+    assert alpha.shape == (s_n,)
+    pad = -d % tile_d  # single pad before the jitted core
+    w_new, gagg = _floa_step_batched_core(
+        _pad_last(w, pad), coeffs, _pad_last(grads, pad),
+        _pad_last(noise, pad), bias, eps, alpha,
+        interpret=interpret, tile_d=tile_d)
+    if pad:
+        w_new, gagg = w_new[:, :d], gagg[:, :d]
+    return w_new, gagg
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
+def _floa_aggregate_core(coeffs: Array, grads: Array, noise: Array,
+                         bias: Array, eps: Array, interpret: bool,
+                         tile_d: int) -> Array:
     u, d = grads.shape
-    if d % tile_d:  # pad D to a tile multiple (cheap; D is huge in practice)
-        pad = tile_d - d % tile_d
-        grads = jnp.pad(grads, ((0, 0), (0, pad)))
-        noise = jnp.pad(noise, (0, pad))
-        return floa_aggregate(coeffs, grads, noise, bias, eps,
-                              interpret=interpret, tile_d=tile_d)[:d]
+    assert d % tile_d == 0, "core requires pre-padded D (see public wrapper)"
     scal = jnp.stack([bias.astype(jnp.float32),
                       eps.astype(jnp.float32)]).reshape(1, 2)
     return pl.pallas_call(
@@ -110,3 +201,15 @@ def floa_aggregate(coeffs: Array, grads: Array, noise: Array, bias: Array,
         out_shape=jax.ShapeDtypeStruct((d,), grads.dtype),
         interpret=interpret,
     )(scal, coeffs, grads, noise)
+
+
+def floa_aggregate(coeffs: Array, grads: Array, noise: Array, bias: Array,
+                   eps: Array, interpret: bool = False,
+                   tile_d: int = TILE_D) -> Array:
+    """coeffs [U] f32, grads [U, D], noise [D], bias/eps scalars -> [D]."""
+    u, d = grads.shape
+    pad = -d % tile_d  # single pad before the jitted core
+    out = _floa_aggregate_core(
+        coeffs, _pad_last(grads, pad), _pad_last(noise, pad), bias, eps,
+        interpret=interpret, tile_d=tile_d)
+    return out[:d] if pad else out

@@ -14,6 +14,7 @@ from repro.kernels.floa_aggregate import floa_aggregate as _floa_aggregate
 from repro.kernels.floa_aggregate import (
     floa_aggregate_batched as _floa_aggregate_batched,
 )
+from repro.kernels.floa_aggregate import floa_step_batched as _floa_step_batched
 from repro.kernels.grad_stats import grad_stats as _grad_stats
 
 Array = jax.Array
@@ -36,6 +37,15 @@ def floa_aggregate_batched(coeffs, grads, noise, bias, eps,
                                    jnp.asarray(eps), interpret=interpret)
 
 
+def floa_step_batched(w, coeffs, grads, noise, bias, eps, alpha,
+                      interpret=None):
+    """Fused [S, U, D] combine + PS update; returns (w_new, gagg)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _floa_step_batched(w, coeffs, grads, noise, jnp.asarray(bias),
+                              jnp.asarray(eps), jnp.asarray(alpha),
+                              interpret=interpret)
+
+
 def grad_stats(grads, interpret=None) -> Array:
     interpret = _interpret_default() if interpret is None else interpret
     return _grad_stats(grads, interpret=interpret)
@@ -49,5 +59,6 @@ def decode_attention(q, k, v, pos, interpret=None) -> Array:
 # oracles re-exported for tests/benchmarks
 floa_aggregate_ref = ref.floa_aggregate_ref
 floa_aggregate_batched_ref = ref.floa_aggregate_batched_ref
+floa_step_batched_ref = ref.floa_step_batched_ref
 grad_stats_ref = ref.grad_stats_ref
 decode_attention_ref = ref.decode_attention_ref

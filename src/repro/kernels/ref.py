@@ -30,6 +30,23 @@ def floa_aggregate_batched_ref(coeffs: Array, grads: Array, noise: Array,
     return out.astype(grads.dtype)
 
 
+def floa_step_batched_ref(w: Array, coeffs: Array, grads: Array, noise: Array,
+                          bias: Array, eps: Array, alpha: Array):
+    """Fused combine + PS update for a scenario sweep.
+
+    gagg[s,d]  = sum_u coeffs[s,u] grads[s,u,d] + bias[s] + eps[s] noise[s,d]
+    w_new[s,d] = w[s,d] - alpha[s] * gagg[s,d]
+
+    w [S, D], coeffs [S, U], grads [S, U, D], noise [S, D], bias/eps/alpha [S].
+    Returns (w_new, gagg) — gagg is materialized so callers can log grad
+    norms without a second pass.  f32 accumulate, like the combine oracle.
+    """
+    gagg = floa_aggregate_batched_ref(coeffs, grads, noise, bias, eps)
+    w_new = (w.astype(jnp.float32)
+             - alpha[:, None].astype(jnp.float32) * gagg.astype(jnp.float32))
+    return w_new.astype(w.dtype), gagg
+
+
 def grad_stats_ref(grads: Array) -> Array:
     """Per-worker [U, 2] f32: (sum_d g, sum_d g^2) — the eq. (3) stats."""
     g = grads.astype(jnp.float32)

@@ -29,6 +29,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def make_sweep_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """1-D ("data",) mesh for sharding a sweep's scenario-lane axis.
+
+    num_devices=None uses every visible device.  On CPU hosts pair with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N (set before any jax
+    import) to fan the embarrassingly parallel lane axis over N fake devices.
+    """
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else num_devices
+    assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
+    return Mesh(np.asarray(devices[:n]), ("data",))
+
+
 def make_debug_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     n = math.prod(shape)
     devices = jax.devices()

@@ -24,6 +24,114 @@ def test_floa_aggregate_sweep(u, d, dtype):
         rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("s,u,d", [(1, 4, 512), (3, 10, 2048), (4, 8, 5000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_floa_step_batched_sweep(s, u, d, dtype):
+    """Fused combine+update kernel vs oracle across shapes/dtypes."""
+    ks = jax.random.split(jax.random.PRNGKey(s * u + d), 7)
+    w = jax.random.normal(ks[0], (s, d)).astype(dtype)
+    coeffs = jax.random.normal(ks[1], (s, u))
+    grads = jax.random.normal(ks[2], (s, u, d)).astype(dtype)
+    noise = jax.random.normal(ks[3], (s, d)).astype(dtype)
+    bias = jax.random.normal(ks[4], (s,))
+    eps = jax.random.normal(ks[5], (s,))
+    alpha = jax.random.uniform(ks[6], (s,), minval=0.01, maxval=0.2)
+    wn, gg = ops.floa_step_batched(w, coeffs, grads, noise, bias, eps, alpha,
+                                   interpret=True)
+    wr, gr = ops.floa_step_batched_ref(w, coeffs, grads, noise, bias, eps,
+                                       alpha)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(wn, np.float32),
+                               np.asarray(wr, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(gg, np.float32),
+                               np.asarray(gr, np.float32), rtol=tol, atol=tol)
+
+
+def test_floa_step_ref_is_combine_plus_update():
+    """The fused oracle decomposes exactly into combine oracle + PS update."""
+    s, u, d = 3, 6, 777
+    ks = jax.random.split(jax.random.PRNGKey(11), 7)
+    w = jax.random.normal(ks[0], (s, d))
+    coeffs = jax.random.normal(ks[1], (s, u))
+    grads = jax.random.normal(ks[2], (s, u, d))
+    noise = jax.random.normal(ks[3], (s, d))
+    bias = jax.random.normal(ks[4], (s,))
+    eps = jax.random.normal(ks[5], (s,))
+    alpha = jax.random.uniform(ks[6], (s,))
+    wn, gg = ops.floa_step_batched_ref(w, coeffs, grads, noise, bias, eps,
+                                       alpha)
+    want_g = ops.floa_aggregate_batched_ref(coeffs, grads, noise, bias, eps)
+    np.testing.assert_array_equal(np.asarray(gg), np.asarray(want_g))
+    np.testing.assert_array_equal(np.asarray(wn),
+                                  np.asarray(w - alpha[:, None] * want_g))
+
+
+@pytest.mark.parametrize("d,tile_d", [(300, 128), (5000, 2048), (129, 128),
+                                      (127, 128)])
+def test_batched_kernel_pads_non_multiple_d(d, tile_d):
+    """Regression: D not a multiple of TILE_D is padded ONCE outside the
+    jitted core (an earlier version recursed back into the jitted entry with
+    re-padded operands).  Interpret mode, kernel vs oracle."""
+    from repro.kernels.floa_aggregate import (floa_aggregate_batched,
+                                              floa_step_batched)
+    s, u = 2, 5
+    ks = jax.random.split(jax.random.PRNGKey(d), 7)
+    w = jax.random.normal(ks[0], (s, d))
+    coeffs = jax.random.normal(ks[1], (s, u))
+    grads = jax.random.normal(ks[2], (s, u, d))
+    noise = jax.random.normal(ks[3], (s, d))
+    bias = jax.random.normal(ks[4], (s,))
+    eps = jax.random.normal(ks[5], (s,))
+    alpha = jax.random.uniform(ks[6], (s,))
+    out = floa_aggregate_batched(coeffs, grads, noise, bias, eps,
+                                 interpret=True, tile_d=tile_d)
+    want = ops.floa_aggregate_batched_ref(coeffs, grads, noise, bias, eps)
+    assert out.shape == (s, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    wn, gg = floa_step_batched(w, coeffs, grads, noise, bias, eps, alpha,
+                               interpret=True, tile_d=tile_d)
+    wr, gr = ops.floa_step_batched_ref(w, coeffs, grads, noise, bias, eps,
+                                       alpha)
+    assert wn.shape == (s, d) and gg.shape == (s, d)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(wr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gg), np.asarray(gr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_floa_step_property_random_shapes():
+    """Hypothesis property: kernel == oracle for arbitrary small shapes and
+    tile sizes (including D < tile_d, D == tile_d, D % tile_d != 0)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from repro.kernels.floa_aggregate import floa_step_batched
+
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.integers(1, 4), u=st.integers(1, 8), d=st.integers(1, 600),
+           tile_p=st.integers(0, 2), seed=st.integers(0, 2**31 - 1))
+    def prop(s, u, d, tile_p, seed):
+        tile_d = 128 * (2 ** tile_p)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+        w = jax.random.normal(ks[0], (s, d))
+        coeffs = jax.random.normal(ks[1], (s, u))
+        grads = jax.random.normal(ks[2], (s, u, d))
+        noise = jax.random.normal(ks[3], (s, d))
+        bias = jax.random.normal(ks[4], (s,))
+        eps = jax.random.normal(ks[5], (s,))
+        alpha = jax.random.uniform(ks[6], (s,))
+        wn, gg = floa_step_batched(w, coeffs, grads, noise, bias, eps, alpha,
+                                   interpret=True, tile_d=tile_d)
+        wr, gr = ops.floa_step_batched_ref(w, coeffs, grads, noise, bias,
+                                           eps, alpha)
+        np.testing.assert_allclose(np.asarray(wn), np.asarray(wr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(gr),
+                                   rtol=1e-4, atol=1e-4)
+
+    prop()
+
+
 @pytest.mark.parametrize("u,d", [(4, 256), (10, 2048), (16, 5000)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_grad_stats_sweep(u, d, dtype):

@@ -277,6 +277,162 @@ def test_sweep_honors_power_accounting_dim():
                                res.loss[0], rtol=1e-6, atol=1e-7)
 
 
+def _grid_cases(dim):
+    """Policy x attack grid covering every branchless code path (noise,
+    jamming, EF early-return, truncated-CI) for the engine-equivalence tests."""
+    return [
+        ScenarioCase("ci0", _tiny_floa(dim, Policy.CI, 0), 0.05, seed=1),
+        ScenarioCase("bev2", _tiny_floa(dim, Policy.BEV, 2), 0.05, seed=2),
+        ScenarioCase("ef1", _tiny_floa(dim, Policy.EF, 1), 0.05, seed=3),
+        ScenarioCase("tci1", _tiny_floa(dim, Policy.TRUNCATED_CI, 1), 0.04,
+                     seed=4),
+        ScenarioCase("jam2", _tiny_floa(dim, Policy.BEV, 2,
+                                        attack=AttackType.GAUSSIAN), 0.05,
+                     seed=5),
+        ScenarioCase("sf1", _tiny_floa(
+            dim, Policy.CI, 1,
+            attack=AttackType.SIGN_FLIP_PROTOCOL_POWER), 0.05, seed=6),
+    ]
+
+
+def test_flat_state_strict_matches_tree_state_bitwise():
+    """Under strict_numerics (on BOTH engines) the flat-state scan replays
+    the tree-state engine bit-for-bit: same grads (the pytree boundary moves
+    inside the loss closure, which is exact), same stats (both reduce
+    leaf-segmented off the materialized slab), same combine/update ops.
+    Without the flag each path lets XLA fuse its stats reduction into a
+    different producer, so they only agree to fp rounding (next test)."""
+    loss, params, dim, batches = _tiny_problem(rounds=7)
+    spec = SweepSpec.build(_grid_cases(dim))
+    eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
+    tree = SweepEngine(loss, spec, eval_fn=eval_fn, flat_state=False,
+                       strict_numerics=True).run(params, batches)
+    flat = SweepEngine(loss, spec, eval_fn=eval_fn,
+                       strict_numerics=True).run(params, batches)
+    np.testing.assert_array_equal(tree.loss, flat.loss)
+    np.testing.assert_array_equal(tree.grad_norm, flat.grad_norm)
+    np.testing.assert_array_equal(
+        np.asarray(tree.metrics["accuracy"]),
+        np.asarray(flat.metrics["accuracy"]))
+    for k in tree.params:
+        np.testing.assert_array_equal(np.asarray(tree.params[k]),
+                                      np.asarray(flat.params[k]))
+
+
+def test_flat_state_default_matches_tree_state():
+    """Default (fast) flat mode lets XLA fuse the stats reduction into the
+    gradient producer, so it only agrees with the tree path to fp rounding."""
+    loss, params, dim, batches = _tiny_problem(rounds=7)
+    spec = SweepSpec.build(_grid_cases(dim))
+    tree = SweepEngine(loss, spec, flat_state=False).run(params, batches)
+    flat = SweepEngine(loss, spec).run(params, batches)
+    np.testing.assert_allclose(tree.loss, flat.loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(tree.grad_norm, flat.grad_norm,
+                               rtol=1e-5, atol=1e-6)
+    for k in tree.params:
+        np.testing.assert_allclose(np.asarray(tree.params[k]),
+                                   np.asarray(flat.params[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_make_row_unflatten_roundtrip():
+    from repro.core.aggregation import flatten_worker_grads
+    from repro.fl.sweep import make_row_unflatten
+
+    params = {"a": jnp.arange(6.0).reshape(2, 3),
+              "b": jnp.arange(4.0) + 10.0,
+              "c": jnp.float32(99.0).reshape(())}
+    unflatten_row, sizes = make_row_unflatten(params)
+    assert sum(sizes) == 11
+    flat, _ = flatten_worker_grads(
+        jax.tree_util.tree_map(lambda x: x[None], params), batch_dims=1)
+    back = unflatten_row(flat[0])
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(params[k]))
+
+
+def test_flat_scalar_stats_matches_tree_stats():
+    """Flat stats (segmented or whole-row) reproduce the pytree stats to fp
+    rounding.  (The engine-level bitwise guarantee — strict flat == tree —
+    is pinned end-to-end by test_flat_state_strict_matches_tree_state_bitwise;
+    eagerly, XLA may vectorize a slice-reduce and a leaf-reduce differently,
+    so this unit test only asks for tight closeness.)"""
+    import repro.core.standardize as STD
+
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(U, 7, 3)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(U, 5)).astype(np.float32))}
+    gbar_t, eps2_t = STD.per_worker_scalar_stats(grads)
+    from repro.core.aggregation import flatten_worker_grads
+    flat, _ = flatten_worker_grads(grads, batch_dims=1)
+    for sizes in ((21, 5), None):
+        gbar_f, eps2_f = STD.flat_scalar_stats(flat, sizes=sizes)
+        np.testing.assert_allclose(np.asarray(gbar_t), np.asarray(gbar_f),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(eps2_t), np.asarray(eps2_f),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_scenario_pad_lanes():
+    cfgs = [_floa(Policy.CI, AttackType.NONE, 0),
+            _floa(Policy.BEV, AttackType.STRONGEST, 2)]
+    stacked = SC.stack(tuple(SC.from_floa(c, alpha=0.1) for c in cfgs))
+    padded = SC.pad_lanes(stacked, 5)
+    for leaf_p, leaf_s in zip(jax.tree_util.tree_leaves(padded),
+                              jax.tree_util.tree_leaves(stacked)):
+        assert leaf_p.shape[0] == 5
+        np.testing.assert_array_equal(np.asarray(leaf_p[:2]),
+                                      np.asarray(leaf_s))
+        for g in range(2, 5):  # ghost lanes replicate the last real lane
+            np.testing.assert_array_equal(np.asarray(leaf_p[g]),
+                                          np.asarray(leaf_s[-1]))
+    assert SC.pad_lanes(stacked, 2) is stacked
+
+
+def test_run_scan_flat_matches_sweep_lane():
+    """FLTrainer.run_scan(flat=True) delegates to a single-lane flat-state
+    sweep; it must reproduce that engine's lane bit-for-bit."""
+    loss, params, dim, batches = _tiny_problem(rounds=6)
+    floa = _tiny_floa(dim, Policy.BEV, 1)
+    tr = FLTrainer(loss_fn=loss, floa=floa, alpha=0.05)
+    key = jax.random.PRNGKey(7)
+    p_flat, logs_flat = tr.run_scan(dict(params), batches, key, eval_every=1,
+                                    flat=True)
+    eng = SweepEngine(loss, SweepSpec.build(
+        [ScenarioCase("scan", floa, 0.05)]), eval_every=0)
+    res = eng.run(params, batches, keys=key[None])
+    np.testing.assert_array_equal(
+        np.asarray([l.loss for l in logs_flat]), res.loss[0])
+    np.testing.assert_array_equal(
+        np.asarray([l.grad_norm for l in logs_flat]), res.grad_norm[0])
+    for k in params:
+        np.testing.assert_array_equal(
+            np.asarray(p_flat[k]), np.asarray(res.params[k][0]))
+
+
+def test_run_scan_flat_matches_loop_noiseless():
+    """On noiseless channels (where the per-leaf vs flattened noise layouts
+    cannot differ) the flat run_scan replays the looped trainer to fp
+    rounding."""
+    loss, params, dim, batches = _tiny_problem(rounds=6)
+    floa = _tiny_floa(dim, Policy.BEV, 1, noise=0.0)
+    tr = FLTrainer(loss_fn=loss, floa=floa, alpha=0.05)
+    rounds = batches["x"].shape[0]
+    p_loop, logs_loop = tr.run(dict(params), _Replay(batches), rounds,
+                               jax.random.PRNGKey(9), eval_every=1)
+    p_flat, logs_flat = tr.run_scan(dict(params), batches,
+                                    jax.random.PRNGKey(9), eval_every=1,
+                                    flat=True)
+    np.testing.assert_allclose(
+        np.asarray([l.loss for l in logs_loop]),
+        np.asarray([l.loss for l in logs_flat]), rtol=1e-6, atol=1e-7)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p_loop[k]),
+                                   np.asarray(p_flat[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
 def test_sweep_metrics_and_logs_schedule():
     loss, params, dim, batches = _tiny_problem(rounds=6)
     spec = SweepSpec.build(

@@ -1,0 +1,143 @@
+"""Mesh-sharded sweep engine: sharded lanes == unsharded lanes.
+
+The lane axis is embarrassingly parallel, so `SweepEngine(mesh=...)` shard_maps
+the flat-state scan over a 1-D ("data",) mesh.  These tests pin the contract:
+every real lane's trajectory matches the unsharded engine (acceptance:
+allclose rtol=1e-6), including when S is not a multiple of the device count
+and ghost lanes are padded in and dropped.
+
+Multi-device cases need fake host devices; the CI `sweep-sharded` job runs
+this module with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+(set before any jax import).  Under plain tier-1 (1 device) those cases skip
+and only the single-device-mesh test runs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core.aggregation import FLOAConfig
+from repro.core.attacks import AttackConfig, AttackType, first_n_mask
+from repro.core.channel import ChannelConfig
+from repro.core.power_control import Policy, PowerConfig
+from repro.fl import ScenarioCase, SweepEngine, SweepSpec
+from repro.launch.mesh import make_sweep_mesh
+
+U = 4
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(see the CI sweep-sharded job)")
+
+
+def _tiny_problem(rounds=5, batch=8, d_in=6, d_h=5):
+    def loss(params, b):
+        pred = jax.nn.relu(b["x"] @ params["w1"]) @ params["w2"]
+        return jnp.mean((pred - b["y"]) ** 2)
+    k = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(k, (d_in, d_h)),
+              "w2": jax.random.normal(k, (d_h, 1))}
+    dim = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    rng = np.random.default_rng(0)
+    batches = {"x": rng.normal(size=(rounds, U * batch, d_in)).astype(np.float32),
+               "y": rng.normal(size=(rounds, U * batch, 1)).astype(np.float32)}
+    return loss, params, dim, batches
+
+
+def _floa(dim, policy, n_atk, noise=0.05, attack=AttackType.STRONGEST):
+    return FLOAConfig(
+        channel=ChannelConfig(num_workers=U, sigma=1.0,
+                              noise_std=0.0 if policy == Policy.EF else noise),
+        power=PowerConfig(num_workers=U, dim=dim, p_max=1.0, policy=policy),
+        attack=AttackConfig(attack=attack if n_atk else AttackType.NONE,
+                            byzantine_mask=first_n_mask(U, n_atk)),
+    )
+
+
+def _grid_cases(dim, num):
+    """CI/BEV x attacker-count grid, cycled to `num` lanes (fig-4 style)."""
+    cells = [(pol, n) for n in (0, 1, 2, 3) for pol in (Policy.CI, Policy.BEV)]
+    return [ScenarioCase(f"{cells[i % 8][0].value}@N{cells[i % 8][1]}#{i}",
+                         _floa(dim, cells[i % 8][0], cells[i % 8][1]),
+                         0.05, seed=100 + i)
+            for i in range(num)]
+
+
+def _assert_lanes_match(sharded, unsharded):
+    assert sharded.loss.shape == unsharded.loss.shape
+    np.testing.assert_allclose(sharded.loss, unsharded.loss,
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(sharded.grad_norm, unsharded.grad_norm,
+                               rtol=1e-6, atol=1e-7)
+    for k in unsharded.metrics:
+        np.testing.assert_allclose(sharded.metrics[k], unsharded.metrics[k],
+                                   rtol=1e-6, atol=1e-7)
+    for gleaf, sleaf in zip(jax.tree_util.tree_leaves(sharded.params),
+                            jax.tree_util.tree_leaves(unsharded.params)):
+        assert gleaf.shape == sleaf.shape
+        np.testing.assert_allclose(np.asarray(gleaf), np.asarray(sleaf),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_single_device_mesh_matches_unsharded():
+    """A 1-device ("data",) mesh is a degenerate shard_map; trajectories must
+    match the plain flat-state engine exactly.  Runs everywhere (tier-1)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 6))
+    eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
+    un = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
+    sh = SweepEngine(loss, spec, eval_fn=eval_fn,
+                     mesh=make_sweep_mesh(1)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_sharded_matches_unsharded_grid16():
+    """16-lane CI/BEV x attacker-count grid over 8 devices (2 lanes each)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 16))
+    eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
+    un = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
+    sh = SweepEngine(loss, spec, eval_fn=eval_fn,
+                     mesh=make_sweep_mesh(8)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_sharded_padded_s13_matches_unsharded():
+    """S=13 on 8 devices: padded to 16 with ghost lanes (replicas of the
+    last scenario) that must be dropped from the returned result."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 13))
+    un = SweepEngine(loss, spec).run(params, batches)
+    eng = SweepEngine(loss, spec, mesh=make_sweep_mesh(8))
+    assert eng._pad == 3
+    sh = eng.run(params, batches)
+    assert sh.loss.shape[0] == 13  # ghosts dropped
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_sharded_strict_and_custom_keys():
+    """Sharding composes with strict_numerics and caller-provided keys."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 8))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(8) + 42)
+    un = SweepEngine(loss, spec, strict_numerics=True).run(
+        params, batches, keys=keys)
+    sh = SweepEngine(loss, spec, strict_numerics=True,
+                     mesh=make_sweep_mesh(8)).run(params, batches, keys=keys)
+    _assert_lanes_match(sh, un)
+
+
+def test_mesh_requires_flat_state():
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 2))
+    with pytest.raises(AssertionError):
+        SweepEngine(loss, spec, flat_state=False, mesh=make_sweep_mesh(1))
