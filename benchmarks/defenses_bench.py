@@ -3,62 +3,54 @@ paper argues are incompatible with analog aggregation, run in digital mode
 against the same attack, next to FLOA-BEV.  Quantifies the robustness the
 analog scheme gives up vs the per-worker-gradient communication it saves.
 
+Execution: every row — the analog FLOA-BEV lane AND each digital defense —
+is one lane of a single compiled sweep (the defense-code lane axis), so the
+whole comparison is one XLA program.
+
 CSV: fig,experiment,round,loss,accuracy
 """
 from __future__ import annotations
 
-import jax
+from benchmarks.common import Experiment, Policy, experiment_floa, figure_setup
+from benchmarks.render_tables import print_sweep_csv
+from repro.core import (AttackConfig, AttackType, ChannelConfig, DefenseSpec,
+                        FLOAConfig, PowerConfig, first_n_mask)
+from repro.data import FederatedSampler
+from repro.fl import ScenarioCase, SweepEngine, SweepSpec
+from repro.models.mlp import mlp_loss
 
-from benchmarks.common import (
-    Experiment, Policy, print_csv, run_experiment,
-)
-from benchmarks import common as C
-from repro.fl import FLTrainer
-from repro.core import AttackType
-import jax.numpy as jnp
-
-from repro.configs.registry import PAPER_MLP
-from repro.core import (AttackConfig, ChannelConfig, FLOAConfig, PowerConfig,
-                        first_n_mask, noise_std_for_snr)
-from repro.data import FederatedSampler, make_dataset, worker_split
-from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
-
-
-def run_digital(defense: str, n_attackers: int, rounds: int = 150, **dkw):
-    mc = PAPER_MLP.full()
-    u, d = mc.num_workers, mc.dim
-    floa = FLOAConfig(
-        channel=ChannelConfig(num_workers=u, sigma=1.0, noise_std=0.0),
-        power=PowerConfig(num_workers=u, dim=d, p_max=1.0,
-                          policy=C.Policy.EF),
-        attack=AttackConfig(attack=AttackType.STRONGEST,
-                            byzantine_mask=first_n_mask(u, n_attackers)),
-    )
-    x, y = make_dataset(mc.train_samples, seed=0)
-    xt, yt = make_dataset(mc.test_samples, seed=99)
-    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
-    tr = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=0.1, mode="digital",
-                   defense=defense, defense_kwargs=dkw,
-                   eval_fn=lambda p: {"accuracy": mlp_accuracy(p, xt_j, yt_j)})
-    sampler = FederatedSampler(worker_split(x, y, u), mc.batch_per_worker, seed=1)
-    _, logs = tr.run(init_mlp(jax.random.PRNGKey(0)), sampler, rounds,
-                     jax.random.PRNGKey(7), eval_every=10)
-    return logs
+DEFENSES = [
+    ("mean", DefenseSpec(name="mean")),
+    ("median", DefenseSpec(name="median")),
+    ("trimmed_mean", DefenseSpec(name="trimmed_mean", trim=3)),
+    ("krum", DefenseSpec(name="krum", num_byzantine=3)),
+    ("geometric_median", DefenseSpec(name="geometric_median")),
+]
 
 
-def main(rounds: int = 120) -> None:
+def main(rounds: int = 120, eval_every: int = 10) -> None:
     n = 3
+    mc, shards, params, eval_fn = figure_setup()
+    u, d = mc.num_workers, mc.dim
+
     exp = Experiment(name=f"FLOA-BEV@N{n}", policy=Policy.BEV, n_attackers=n,
                      alpha_hat=0.1, rounds=rounds)
-    print_csv("defenses", exp, run_experiment(exp))
-    for defense, kw in [("mean", {}), ("median", {}),
-                        ("trimmed_mean", dict(trim=3)),
-                        ("krum", dict(num_byzantine=3)),
-                        ("geometric_median", {})]:
-        logs = run_digital(defense, n, rounds=rounds, **kw)
-        for lg in logs:
-            print(f"defenses,digital-{defense}@N{n},{lg.step},"
-                  f"{lg.loss:.5f},{lg.accuracy:.4f}")
+    cases = [ScenarioCase(exp.name, *experiment_floa(exp, mc), seed=exp.seed)]
+    digital_floa = FLOAConfig(
+        channel=ChannelConfig(num_workers=u, sigma=1.0, noise_std=0.0),
+        power=PowerConfig(num_workers=u, dim=d, p_max=mc.p_max,
+                          policy=Policy.EF),
+        attack=AttackConfig(attack=AttackType.STRONGEST,
+                            byzantine_mask=first_n_mask(u, n)))
+    for name, spec in DEFENSES:
+        cases.append(ScenarioCase(f"digital-{name}@N{n}", digital_floa, 0.1,
+                                  seed=7, defense=spec))
+
+    batches = FederatedSampler(shards, mc.batch_per_worker,
+                               seed=1).stack_rounds(rounds)
+    result = SweepEngine(mlp_loss, SweepSpec.build(cases), eval_fn=eval_fn,
+                         eval_every=eval_every).run(params, batches)
+    print_sweep_csv("defenses", result, eval_every)
 
 
 if __name__ == "__main__":

@@ -77,6 +77,20 @@ def sweep_bench_table(path: str = "BENCH_sweep.json") -> str:
             f"| {name} | {e['cold_rounds_per_sec']:.1f} | "
             f"{e['warm_rounds_per_sec']:.1f} | {e['cold_speedup']:.2f}x | "
             f"{e['warm_speedup']:.2f}x |")
+    if d.get("defenses"):
+        lines += [
+            "",
+            "Defense-code lanes (flat engine; lanes per row, rounds shared "
+            "within one bench run):",
+            "",
+            "| defense lane | lanes | rounds | cold rounds/s | warm rounds/s |",
+            "|---|---|---|---|---|",
+        ]
+        for name, e in d["defenses"].items():
+            lines.append(
+                f"| {name} | {e['lanes']} | {e['rounds']} | "
+                f"{e['cold_rounds_per_sec']:.1f} | "
+                f"{e['warm_rounds_per_sec']:.1f} |")
     return "\n".join(lines)
 
 

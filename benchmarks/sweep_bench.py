@@ -36,12 +36,21 @@ Two aggregate rounds/sec (S*R / wall) numbers per engine:
          per-round dispatch/batching efficiency (best of --reps reruns, since
          shared CI boxes are noisy).
 
+--defenses additionally benches the defense-code lane axis: one flat-state
+engine per defense family (analog FLOA reference, mean, median, trimmed-mean,
+(multi-)Krum, geometric median) plus the mixed all-families grid, each at
+--defense-scenarios lanes x --defense-rounds rounds (its own knobs — the
+screening kernels add sort/pairwise-distance work per round, so the defense
+section is sized explicitly rather than inheriting the headline shape), with
+per-defense cold/warm rounds-per-sec recorded under the JSON's "defenses" key.
+
 Results are printed as CSV and written to a machine-readable JSON
 (--out, default BENCH_sweep.json) so the perf trajectory is tracked across
 PRs; the CI sweep-sharded job uploads it as a workflow artifact.
 
   PYTHONPATH=src:. python benchmarks/sweep_bench.py [--rounds R] [--scenarios S]
-      [--sharded] [--reps N] [--skip-looped] [--out BENCH_sweep.json]
+      [--sharded] [--reps N] [--skip-looped] [--defenses]
+      [--defense-rounds R] [--defense-scenarios S] [--out BENCH_sweep.json]
 """
 from __future__ import annotations
 
@@ -57,9 +66,82 @@ from benchmarks.common import (
     experiment_floa,
     figure_setup,
 )
+from repro.core import AttackConfig, AttackType, ChannelConfig, FLOAConfig
+from repro.core import DefenseSpec, PowerConfig, first_n_mask
 from repro.data import FederatedSampler
 from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
 from repro.models.mlp import mlp_loss
+
+DEFENSE_FAMILIES = [
+    ("floa", None),  # analog reference lanes (BEV policy)
+    ("mean", DefenseSpec(name="mean")),
+    ("median", DefenseSpec(name="median")),
+    ("trimmed_mean", DefenseSpec(name="trimmed_mean", trim=3)),
+    ("krum", DefenseSpec(name="krum", num_byzantine=3)),
+    ("multi_krum", DefenseSpec(name="multi_krum", num_byzantine=3, multi=3)),
+    ("geometric_median", DefenseSpec(name="geometric_median")),
+]
+
+
+def defense_grid(mc, family: str, spec, num: int):
+    """`num` lanes of one defense family across attacker counts 0..4."""
+    u, d = mc.num_workers, mc.dim
+    cases = []
+    for i in range(num):
+        n = i % 5
+        floa = FLOAConfig(
+            channel=ChannelConfig(num_workers=u, sigma=1.0, noise_std=0.0),
+            power=PowerConfig(num_workers=u, dim=d, p_max=mc.p_max,
+                              policy=Policy.BEV if spec is None else Policy.EF),
+            attack=AttackConfig(
+                attack=AttackType.STRONGEST if n else AttackType.NONE,
+                byzantine_mask=first_n_mask(u, n)))
+        cases.append(ScenarioCase(
+            f"{family}@N{n}#{i}", floa, 0.05, seed=300 + i,
+            defense=spec if spec is not None else DefenseSpec()))
+    return cases
+
+
+def bench_defenses(mc, shards, params, rounds: int, scenarios: int,
+                   reps: int) -> dict:
+    """Per-defense-family engine throughput (cold + interleaved best-of warm),
+    plus the mixed grid with every family as lanes of ONE program."""
+    batches = FederatedSampler(shards, mc.batch_per_worker,
+                               seed=1).stack_rounds(rounds)
+    grids = [(name, defense_grid(mc, name, spec, scenarios))
+             for name, spec in DEFENSE_FAMILIES]
+    mixed = [c for _, cases in grids for c in cases[:max(1, scenarios // 2)]]
+    grids.append(("mixed", mixed))
+
+    cold, runners = {}, []
+    for name, cases in grids:
+        engine = SweepEngine(mlp_loss, SweepSpec.build(cases))
+        run_once = (lambda e=engine: e.run(params, batches))
+        t0 = time.perf_counter()
+        run_once()
+        cold[name] = time.perf_counter() - t0
+        runners.append((name, len(cases), run_once))
+
+    best = {name: float("inf") for name, _, _ in runners}
+    for _ in range(reps):
+        for name, _, run_once in runners:
+            t0 = time.perf_counter()
+            run_once()
+            best[name] = min(best[name], time.perf_counter() - t0)
+
+    print(f"# defense lanes: R={rounds} rounds x S={scenarios} lanes/family "
+          f"(mixed: {len(mixed)}), D={mc.dim}, U={mc.num_workers}")
+    print("defense,lanes,cold_rounds_per_sec,warm_rounds_per_sec")
+    out = {}
+    for name, lanes, _ in runners:
+        total = lanes * rounds
+        out[name] = dict(
+            lanes=lanes, rounds=rounds,
+            cold_rounds_per_sec=round(total / cold[name], 2),
+            warm_rounds_per_sec=round(total / best[name], 2))
+        print(f"{name},{lanes},{out[name]['cold_rounds_per_sec']:.1f},"
+              f"{out[name]['warm_rounds_per_sec']:.1f}")
+    return out
 
 
 def grid(num: int, rounds: int):
@@ -75,7 +157,8 @@ def grid(num: int, rounds: int):
 
 
 def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
-         reps: int = 3, skip_looped: bool = False,
+         reps: int = 3, skip_looped: bool = False, defenses: bool = False,
+         defense_rounds: int = 10, defense_scenarios: int = 6,
          out_path: str = "BENCH_sweep.json") -> dict:
     mc, shards, params, _ = figure_setup()
     exps = grid(scenarios, rounds)
@@ -191,6 +274,9 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
         if "flat+shmap" in engines:
             record["sharded_vs_pr1_warm_speedup"] = round(
                 warm["scan+vmap"] / warm["flat+shmap"], 3)
+    if defenses:
+        record["defenses"] = bench_defenses(
+            mc, shards, params, defense_rounds, defense_scenarios, reps)
     if out_path:
         with open(out_path, "w") as f:
             json.dump(record, f, indent=2)
@@ -210,8 +296,17 @@ if __name__ == "__main__":
                     help="warm reruns per engine (best-of, for noisy boxes)")
     ap.add_argument("--skip-looped", action="store_true",
                     help="skip the per-scenario looped/scan baselines")
+    ap.add_argument("--defenses", action="store_true",
+                    help="also bench the defense-code lane axis (one engine "
+                         "per defense family + the mixed grid)")
+    ap.add_argument("--defense-rounds", type=int, default=10,
+                    help="rounds per defense-family engine (--defenses)")
+    ap.add_argument("--defense-scenarios", type=int, default=6,
+                    help="lanes per defense-family engine (--defenses)")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="machine-readable output path ('' to disable)")
     args = ap.parse_args()
     main(rounds=args.rounds, scenarios=args.scenarios, sharded=args.sharded,
-         reps=args.reps, skip_looped=args.skip_looped, out_path=args.out)
+         reps=args.reps, skip_looped=args.skip_looped, defenses=args.defenses,
+         defense_rounds=args.defense_rounds,
+         defense_scenarios=args.defense_scenarios, out_path=args.out)

@@ -1,36 +1,50 @@
 """Byzantine showdown (beyond paper): FLOA-BEV vs FLOA-CI vs digital
-screening defenses (median / trimmed-mean / Krum / geometric median) under
-increasing attacker counts.  One table, every defense philosophy.
+screening defenses (median / trimmed-mean / Krum / multi-Krum / geometric
+median) under increasing attacker counts.  One table, every defense
+philosophy.
 
-Digital defenses see per-worker gradients (U x uplink cost, no privacy);
-FLOA sees only the analog superposition (1 x uplink, gradient-private) —
-the paper's whole trade-off, quantified.
+Digital defenses see per-worker gradients (U x uplink cost via an
+all-gather, no privacy); FLOA sees only the analog superposition (1 x
+uplink all-reduce, gradient-private) — the paper's whole trade-off,
+quantified.
 
-Execution: every FLOA cell (policy x attacker count) is one lane of a single
-compiled sweep (fl.sweep) — one compile, one dispatch for the whole analog
-half of the table.  Digital cells go through FLTrainer.run_scan (defense
-screening needs per-worker gradients and per-defense code paths, so each
-defense is its own scanned program, still with zero per-round dispatch).
+Execution: EVERY cell — analog (policy x attacker count) and digital
+(defense x attacker count) — is one lane of a single compiled sweep: the
+defense-code lane axis (core.scenario.DEFENSE_CODES) selects per lane
+between the OTA `floa_step` combine and a screening defense on the same
+[S, U, D] gradient slab, so the whole table is one XLA program, one
+compile, one dispatch.  Zero per-defense programs.
 
   PYTHONPATH=src python examples/byzantine_showdown.py
 """
 import jax
-import jax.numpy as jnp
 
 jax.config.update("jax_threefry_partitionable", True)
 
+import jax.numpy as jnp
+
 from repro.configs.registry import PAPER_MLP
 from repro.core import (
-    AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
-    first_n_mask, noise_std_for_snr,
+    AttackConfig, AttackType, ChannelConfig, DefenseSpec, FLOAConfig, Policy,
+    PowerConfig, first_n_mask, noise_std_for_snr,
 )
 from repro.core import theory
 from repro.data import FederatedSampler, make_dataset, worker_split
-from repro.fl import FLTrainer, ScenarioCase, SweepSpec, run_sweep
+from repro.fl import ScenarioCase, SweepSpec, run_sweep
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 
 ROUNDS = 100
 NS = [0, 1, 3, 4]
+
+DIGITAL = [
+    ("digital mean (no defense)", DefenseSpec(name="mean")),
+    ("digital median", DefenseSpec(name="median")),
+    ("digital trimmed-mean(3)", DefenseSpec(name="trimmed_mean", trim=3)),
+    ("digital Krum(f=3)", DefenseSpec(name="krum", num_byzantine=3)),
+    ("digital multi-Krum(f=3,m=3)",
+     DefenseSpec(name="multi_krum", num_byzantine=3, multi=3)),
+    ("digital geometric-median", DefenseSpec(name="geometric_median")),
+]
 
 
 def setup():
@@ -52,9 +66,11 @@ def floa_config(mc, n_atk: int, policy: Policy, noise: float) -> FLOAConfig:
     )
 
 
-def run_floa_grid(mc, batches, params, eval_fn):
-    """All FLOA (policy x N) cells as one compiled sweep; returns
-    {(policy, n): final accuracy}."""
+def build_cases(mc):
+    """The whole showdown grid — analog policies AND digital defenses — as
+    lanes of one sweep.  Digital lanes ride an EF/noiseless channel config
+    (their defense code ignores the channel; attackers are modelled as
+    sign-flipped reported gradients, the digital-FL threat model)."""
     u, d = mc.num_workers, mc.dim
     noise = noise_std_for_snr(mc.p_max, d, mc.snr_db)
     cases = []
@@ -65,23 +81,12 @@ def run_floa_grid(mc, batches, params, eval_fn):
             cases.append(ScenarioCase(f"{policy.value}@N{n}",
                                       floa_config(mc, n, policy, noise),
                                       alpha, seed=5))
-    result = run_sweep(mlp_loss, params, batches, SweepSpec.build(cases),
-                       eval_fn=eval_fn, eval_every=ROUNDS)  # final acc only
-    return {name: float(result.metrics["accuracy"][i, -1])
-            for i, name in enumerate(result.names)}
-
-
-def run_digital(mc, batches, params, eval_fn, n_atk: int, defense: str,
-                **dkw) -> float:
-    """One digital cell: gathered per-worker gradients + screening defense,
-    rounds scanned (run_scan) so there is no per-round Python dispatch."""
-    floa = floa_config(mc, n_atk, Policy.EF, 0.0)
-    tr = FLTrainer(loss_fn=mlp_loss, floa=floa, alpha=0.1, mode="digital",
-                   defense=defense, defense_kwargs=dkw,
-                   eval_fn=eval_fn)
-    _, logs = tr.run_scan(params, batches, jax.random.PRNGKey(5),
-                          eval_every=ROUNDS - 1)
-    return logs[-1].accuracy
+    for label, defense in DIGITAL:
+        for n in NS:
+            cases.append(ScenarioCase(f"{label}@N{n}",
+                                      floa_config(mc, n, Policy.EF, 0.0),
+                                      0.1, seed=5, defense=defense))
+    return cases
 
 
 def main() -> None:
@@ -91,25 +96,19 @@ def main() -> None:
     batches = FederatedSampler(shards, mc.batch_per_worker,
                                seed=1).stack_rounds(ROUNDS)
 
-    floa_accs = run_floa_grid(mc, batches, params, eval_fn)
-    digital = [
-        ("digital mean (no defense)", dict(defense="mean")),
-        ("digital median", dict(defense="median")),
-        ("digital trimmed-mean(3)", dict(defense="trimmed_mean", trim=3)),
-        ("digital Krum(f=3)", dict(defense="krum", num_byzantine=3)),
-        ("digital geometric-median", dict(defense="geometric_median")),
-    ]
+    cases = build_cases(mc)
+    result = run_sweep(mlp_loss, params, batches, SweepSpec.build(cases),
+                       eval_fn=eval_fn, eval_every=ROUNDS)  # final acc only
+    acc = {name: float(result.metrics["accuracy"][i, -1])
+           for i, name in enumerate(result.names)}
 
     print(f"{'defense':30s} " + " ".join(f"N={n:<4d}" for n in NS))
-    for policy, label in [(Policy.BEV, "FLOA-BEV (analog, private)"),
-                          (Policy.CI, "FLOA-CI  (analog, private)")]:
-        accs = [floa_accs[f"{policy.value}@N{n}"] for n in NS]
+    rows = [("FLOA-BEV (analog, private)", f"{Policy.BEV.value}@N"),
+            ("FLOA-CI  (analog, private)", f"{Policy.CI.value}@N")]
+    rows += [(label, f"{label}@N") for label, _ in DIGITAL]
+    for label, prefix in rows:
+        accs = [acc[f"{prefix}{n}"] for n in NS]
         print(f"{label:30s} " + " ".join(f"{a:.3f}" for a in accs))
-    for name, kw in digital:
-        extra = {k: v for k, v in kw.items() if k != "defense"}
-        accs = [run_digital(mc, batches, params, eval_fn, n,
-                            kw["defense"], **extra) for n in NS]
-        print(f"{name:30s} " + " ".join(f"{a:.3f}" for a in accs))
 
 
 if __name__ == "__main__":

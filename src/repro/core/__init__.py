@@ -11,7 +11,13 @@ from repro.core.aggregation import (
 from repro.core.attacks import AttackConfig, AttackType, first_n_mask
 from repro.core.channel import ChannelConfig, noise_std_for_snr, sample_channel_gains
 from repro.core.power_control import Policy, PowerConfig
-from repro.core.scenario import ScenarioParams, scenario_coefficients
+from repro.core.scenario import (
+    DEFENSE_CODES,
+    DefenseSpec,
+    ScenarioParams,
+    scenario_coefficients,
+)
+from repro.core.defenses import digital_aggregate, make_flat_defense_selector
 
 __all__ = [
     "FLOAConfig", "aggregate", "floa_grad", "mean_aggregate", "per_worker_grads",
@@ -20,4 +26,6 @@ __all__ = [
     "ChannelConfig", "noise_std_for_snr", "sample_channel_gains",
     "Policy", "PowerConfig",
     "ScenarioParams", "scenario_coefficients",
+    "DEFENSE_CODES", "DefenseSpec",
+    "digital_aggregate", "make_flat_defense_selector",
 ]

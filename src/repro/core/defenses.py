@@ -11,7 +11,20 @@ communication-cost trade-off the paper argues about:
   Krum / Multi-Krum                [Blanchard et al. 2017]
   geometric median (Weiszfeld)     [Minsker 2015 / RFA]
 
-All operate on stacked per-worker gradient pytrees [U, ...] and are jit-safe.
+The matrix-native `flat_*` kernels are the single implementation: they map one
+[U, D] per-worker gradient slab to a [D] aggregate, take their hyper-params
+(trim, f, multi) as TRACED scalars so one trace serves every lane of a sweep
+(masked sorted-prefix reductions instead of Python slicing), and are what the
+sweep engine's defense-code lane axis dispatches over (`DEFENSE_CODES` in
+core/scenario.py, `make_flat_defense_selector` below).  Hyper-param bounds are
+validated in the config layer (`scenario.DefenseSpec.validate`) because
+`assert`s on traced values vanish under jit; the kernels only re-check
+concrete Python ints.
+
+The pytree API (`digital_aggregate` and the named wrappers) flattens to the
+slab, runs the flat kernel, and unravels — the legacy entry point the digital
+`FLTrainer` uses.
+
 NOTE: in digital mode the [U, ...] stack must be gathered (an all-gather over
 "data" instead of FLOA's all-reduce) — exactly the communication overhead the
 paper's analog scheme avoids; the roofline benchmarks expose the difference.
@@ -19,10 +32,13 @@ paper's analog scheme avoids; the roofline benchmarks expose the difference.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scenario import DEFENSE_CODES
 
 Array = jax.Array
 
@@ -44,37 +60,71 @@ def _flatten_u(grads_u):
     return flat, unravel
 
 
-def coordinate_median(grads_u):
-    flat, unravel = _flatten_u(grads_u)
-    return unravel(jnp.median(flat, axis=0))
+# --------------------------------------------------------- flat [U, D] kernels
 
 
-def trimmed_mean(grads_u, trim: int = 1):
-    """Remove the `trim` largest and smallest per coordinate, then mean."""
-    flat, unravel = _flatten_u(grads_u)
+def flat_mean(flat: Array) -> Array:
+    return jnp.mean(flat, axis=0)
+
+
+def flat_median(flat: Array) -> Array:
+    return jnp.median(flat, axis=0)
+
+
+def flat_trimmed_mean(flat: Array, trim) -> Array:
+    """Drop the `trim` largest and smallest per coordinate, then mean.
+
+    trim may be a traced int32 scalar (sweep lanes): the sorted column is
+    reduced under an index mask instead of a Python slice, so the same trace
+    serves every lane.  Concrete ints are range-checked here; traced values
+    are the config layer's job (`DefenseSpec.validate`).
+    """
     u = flat.shape[0]
-    assert 2 * trim < u, "trim too large"
+    if isinstance(trim, (int, np.integer)) and not 0 <= 2 * int(trim) < u:
+        raise ValueError(
+            f"trimmed_mean trim={trim} invalid for U={u}: need 0 <= 2*trim < U")
     srt = jnp.sort(flat, axis=0)
-    return unravel(jnp.mean(srt[trim : u - trim], axis=0))
+    idx = jnp.arange(u)
+    keep = (idx >= trim) & (idx < u - trim)
+    kept = jnp.sum(jnp.where(keep[:, None], srt, 0.0), axis=0)
+    return kept / (u - 2 * trim)
 
 
-def krum(grads_u, num_byzantine: int, multi: int = 1):
-    """(Multi-)Krum: score_i = sum of the U-f-2 smallest sq-distances to others;
-    average the `multi` lowest-scoring workers' gradients."""
-    flat, unravel = _flatten_u(grads_u)
+def _krum_scores(flat: Array, num_byzantine) -> Array:
+    """score_i = sum of the max(U-f-2, 1) smallest sq-distances to others.
+
+    Exposed for the property-test suite (permutation equivariance of the
+    scores is checkable even when near-ties make the selection itself
+    fp-fragile).
+    """
     u = flat.shape[0]
-    closest = max(u - num_byzantine - 2, 1)
+    closest = jnp.maximum(u - num_byzantine - 2, 1)
     d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)  # [U,U]
-    d2 = d2 + jnp.eye(u) * jnp.inf  # exclude self
-    nearest = jnp.sort(d2, axis=1)[:, :closest]
-    scores = jnp.sum(nearest, axis=1)
-    sel = jnp.argsort(scores)[:multi]
-    return unravel(jnp.mean(flat[sel], axis=0))
+    # Exclude self via a boolean mask: the seed's `d2 + eye * inf` poisoned
+    # every OFF-diagonal entry with 0*inf = NaN, collapsing all scores to NaN
+    # (and Krum to "always pick worker 0").  Pinned by the property suite.
+    d2 = jnp.where(jnp.eye(u, dtype=bool), jnp.inf, d2)
+    srt = jnp.sort(d2, axis=1)  # self-distance inf lands in the final column
+    # closest <= U-2, so the masked prefix never touches the inf column.
+    j = jnp.arange(u)
+    return jnp.sum(jnp.where(j[None, :] < closest, srt, 0.0), axis=1)
 
 
-def geometric_median(grads_u, iters: int = 8, eps: float = 1e-8):
-    """Weiszfeld iterations for the geometric median."""
-    flat, unravel = _flatten_u(grads_u)
+def flat_krum(flat: Array, num_byzantine, multi=1) -> Array:
+    """(Multi-)Krum: average the `multi` lowest-scoring workers' gradients.
+    num_byzantine and multi may be traced scalars (masked rank selection)."""
+    u = flat.shape[0]
+    scores = _krum_scores(flat, num_byzantine)
+    ranked = flat[jnp.argsort(scores)]                 # [U, D], best first
+    keep = jnp.arange(u) < multi
+    sel = jnp.sum(jnp.where(keep[:, None], ranked, 0.0), axis=0)
+    return sel / jnp.asarray(multi, flat.dtype)
+
+
+def flat_geometric_median(flat: Array, iters: int = 8,
+                          eps: float = 1e-8) -> Array:
+    """Weiszfeld iterations for the geometric median (iters is static — a
+    lax.scan length)."""
 
     def body(z, _):
         w = 1.0 / jnp.maximum(jnp.linalg.norm(flat - z, axis=1), eps)  # [U]
@@ -83,7 +133,83 @@ def geometric_median(grads_u, iters: int = 8, eps: float = 1e-8):
 
     z0 = jnp.mean(flat, axis=0)
     z, _ = jax.lax.scan(body, z0, None, length=iters)
-    return unravel(z)
+    return z
+
+
+# ------------------------------------------------ branchless lane dispatch
+
+# code -> flat kernel taking the uniform operand tuple (flat, trim, f, multi).
+# Code 0 (analog FLOA) falls back to the mean: the sweep engine discards that
+# branch's output for analog lanes (they take the OTA combine), but under a
+# vmapped lax.switch every branch must still produce a [D] row.
+_FLAT_KERNELS_BY_CODE: Dict[int, Callable] = {
+    DEFENSE_CODES["floa"]: lambda op, it: flat_mean(op[0]),
+    DEFENSE_CODES["mean"]: lambda op, it: flat_mean(op[0]),
+    DEFENSE_CODES["median"]: lambda op, it: flat_median(op[0]),
+    DEFENSE_CODES["trimmed_mean"]: lambda op, it: flat_trimmed_mean(op[0], op[1]),
+    DEFENSE_CODES["krum"]: lambda op, it: flat_krum(op[0], op[2], op[3]),
+    DEFENSE_CODES["multi_krum"]: lambda op, it: flat_krum(op[0], op[2], op[3]),
+    DEFENSE_CODES["geometric_median"]:
+        lambda op, it: flat_geometric_median(op[0], iters=it),
+}
+
+
+def make_flat_defense_selector(codes: Optional[Sequence[int]] = None,
+                               gm_iters: int = 8) -> Callable:
+    """Branchless defense dispatch for one lane: a `lax.switch` over the
+    defense codes present in a sweep.
+
+    Returns fn(code, flat, trim, num_byzantine, multi) -> [D].  Under `vmap`
+    (code varying across lanes) the switch lowers to computing every listed
+    branch and selecting per lane — which is why `codes` should be the codes
+    a sweep actually contains (the default is all of DEFENSE_CODES): absent
+    defenses then cost nothing.  Codes outside the list (e.g. analog lanes'
+    0 in a digital-only list) are remapped to the first branch; the caller
+    overrides those lanes' output anyway.
+    """
+    if codes is None:
+        codes = sorted(DEFENSE_CODES.values())
+    codes = sorted({int(c) for c in codes})
+    assert codes, "empty defense-code set"
+    lookup = np.zeros(max(DEFENSE_CODES.values()) + 1, np.int32)
+    for i, c in enumerate(codes):
+        lookup[c] = i
+    lookup_j = jnp.asarray(lookup)
+    branches = [functools.partial(_FLAT_KERNELS_BY_CODE[c], it=gm_iters)
+                for c in codes]
+
+    def select(code, flat, trim, num_byzantine, multi):
+        return jax.lax.switch(lookup_j[code], branches,
+                              (flat, trim, num_byzantine, multi))
+
+    return select
+
+
+# ----------------------------------------------------------- pytree wrappers
+
+
+def coordinate_median(grads_u):
+    flat, unravel = _flatten_u(grads_u)
+    return unravel(flat_median(flat))
+
+
+def trimmed_mean(grads_u, trim: int = 1):
+    """Remove the `trim` largest and smallest per coordinate, then mean."""
+    flat, unravel = _flatten_u(grads_u)
+    return unravel(flat_trimmed_mean(flat, trim))
+
+
+def krum(grads_u, num_byzantine: int, multi: int = 1):
+    """(Multi-)Krum: score_i = sum of the U-f-2 smallest sq-distances to others;
+    average the `multi` lowest-scoring workers' gradients."""
+    flat, unravel = _flatten_u(grads_u)
+    return unravel(flat_krum(flat, num_byzantine, multi))
+
+
+def geometric_median(grads_u, iters: int = 8, eps: float = 1e-8):
+    """Weiszfeld iterations for the geometric median."""
+    flat, unravel = _flatten_u(grads_u)
+    return unravel(flat_geometric_median(flat, iters=iters, eps=eps))
 
 
 DEFENSES: Dict[str, Callable] = {

@@ -21,7 +21,8 @@ per-combination equivalence test in tests/test_sweep.py is the contract.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +48,102 @@ ATTACK_CODES = {
 _CI, _BEV, _EF, _TCI = 0, 1, 2, 3
 _NONE, _STRONGEST, _SIGN_FLIP, _GAUSSIAN = 0, 1, 2, 3
 
+# Defense-code lane axis: 0 selects the analog FLOA combine (the paper's
+# scheme); every other code selects a digital screening defense applied to
+# the gathered [U, D] per-worker gradient slab (core/defenses.py).  "krum"
+# and "multi_krum" share a kernel (multi=1 vs multi=m) but keep distinct
+# codes so sweep tables name the defense family they ran.
+DEFENSE_CODES = {
+    "floa": 0,
+    "mean": 1,
+    "median": 2,
+    "trimmed_mean": 3,
+    "krum": 4,
+    "multi_krum": 5,
+    "geometric_median": 6,
+}
+_FLOA_CODE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseSpec:
+    """Per-lane aggregation rule: analog FLOA (name="floa") or a digital
+    screening defense with its hyper-parameters.
+
+    This is the validation layer for the defense kernels: trim / Krum bounds
+    are checked HERE, on concrete Python ints, because `assert`s on traced
+    values silently vanish under jit (and a bare `assert 2 * trim < u` says
+    nothing useful about a negative trim anyway).
+
+    gm_iters is a static Weiszfeld iteration count (a lax.scan length), so it
+    cannot vary across the lanes of one compiled sweep — SweepSpec enforces
+    that all geometric-median lanes agree.
+    """
+
+    name: str = "floa"
+    trim: int = 1           # trimmed_mean: drop `trim` largest+smallest/coord
+    num_byzantine: int = 0  # krum / multi_krum: assumed attacker count f
+    multi: int = 1          # multi_krum: average the m best-scored workers
+    gm_iters: int = 8       # geometric_median: Weiszfeld iterations
+
+    @property
+    def code(self) -> int:
+        return DEFENSE_CODES[self.name]
+
+    @property
+    def is_digital(self) -> bool:
+        return self.name != "floa"
+
+    def validate(self, num_workers: int) -> "DefenseSpec":
+        if self.name not in DEFENSE_CODES:
+            raise ValueError(
+                f"unknown defense {self.name!r}; one of {sorted(DEFENSE_CODES)}")
+        u = num_workers
+        if self.name == "trimmed_mean" and not 0 <= 2 * self.trim < u:
+            raise ValueError(
+                f"trimmed_mean trim={self.trim} invalid for U={u}: "
+                f"need 0 <= 2*trim < U")
+        if self.name in ("krum", "multi_krum"):
+            if not 0 <= self.num_byzantine < u:
+                raise ValueError(
+                    f"krum num_byzantine={self.num_byzantine} invalid for "
+                    f"U={u}: need 0 <= f < U")
+            if not 1 <= self.multi <= u:
+                raise ValueError(
+                    f"krum multi={self.multi} invalid for U={u}: "
+                    f"need 1 <= multi <= U")
+        if self.name == "geometric_median" and self.gm_iters < 1:
+            raise ValueError(f"geometric_median gm_iters={self.gm_iters} < 1")
+        return self
+
+    _KWARGS_BY_DEFENSE = {
+        "trimmed_mean": frozenset({"trim"}),
+        "krum": frozenset({"num_byzantine", "multi"}),
+        "multi_krum": frozenset({"num_byzantine", "multi"}),
+        "geometric_median": frozenset({"iters", "gm_iters"}),
+    }
+
+    @classmethod
+    def from_kwargs(cls, name: str, **kw) -> "DefenseSpec":
+        """Build from `FLTrainer`-style (defense, **defense_kwargs).
+
+        Kwargs irrelevant to `name` are rejected, matching the pytree path
+        (where e.g. coordinate_median(trim=...) is a TypeError) — silently
+        dropping them would run a different defense than the caller asked
+        for.
+        """
+        extra = set(kw) - cls._KWARGS_BY_DEFENSE.get(name, frozenset())
+        if extra:
+            raise ValueError(
+                f"defense {name!r} does not accept kwargs {sorted(extra)}")
+        fields = dict(trim=kw.get("trim", 1),
+                      num_byzantine=kw.get("num_byzantine", 0),
+                      multi=kw.get("multi", 1),
+                      gm_iters=kw.get("iters", kw.get("gm_iters", 8)))
+        if name == "krum" and fields["multi"] > 1:
+            name = "multi_krum"
+        return cls(name=name, **fields)
+
 
 class ScenarioParams(NamedTuple):
     """One scenario's FLOA knobs as arrays (NamedTuple == pytree, so a list of
@@ -60,21 +157,32 @@ class ScenarioParams(NamedTuple):
     dim: Array         # f32   []  power-accounting gradient dim D (eq. 4)
     noise_std: Array   # f32   []  receiver AWGN std (0 under EF)
     alpha: Array       # f32   []  raw learning rate (eq. 8)
+    defense: Array     # int32 [] — DEFENSE_CODES (0 = analog FLOA combine)
+    def_trim: Array    # int32 []  trimmed_mean trim count
+    def_f: Array       # int32 []  (multi-)Krum assumed attacker count f
+    def_multi: Array   # int32 []  multi-Krum average count m
 
     @property
     def num_workers(self) -> int:
         return self.byz_mask.shape[-1]
 
 
-def from_floa(cfg, alpha: float) -> ScenarioParams:
+def from_floa(cfg, alpha: float,
+              defense: Optional[DefenseSpec] = None) -> ScenarioParams:
     """FLOAConfig (frozen dataclass) -> traceable ScenarioParams.
 
     EF scenarios get noise_std forced to 0 here (the dataclass path simply
     never reaches the noise branch under EF; the branchless path always adds
     the noise term, so the std itself must be zero).
+
+    defense: optional DefenseSpec; omitted means the analog FLOA combine.
+    Digital lanes keep the full channel/power params (their branchless floa
+    half still traces) but the lane's update consumes the screening defense
+    output instead.
     """
     cfg.validate()
     u = cfg.num_workers
+    defense = (defense or DefenseSpec()).validate(u)
     mask = (jnp.asarray(cfg.attack.byzantine_mask, dtype=bool)
             if cfg.attack.byzantine_mask else jnp.zeros((u,), dtype=bool))
     is_ef = cfg.power.policy == Policy.EF
@@ -87,6 +195,10 @@ def from_floa(cfg, alpha: float) -> ScenarioParams:
         dim=jnp.float32(cfg.power.dim),
         noise_std=jnp.float32(0.0 if is_ef else cfg.channel.noise_std),
         alpha=jnp.float32(alpha),
+        defense=jnp.int32(defense.code),
+        def_trim=jnp.int32(defense.trim),
+        def_f=jnp.int32(defense.num_byzantine),
+        def_multi=jnp.int32(defense.multi),
     )
 
 

@@ -9,6 +9,17 @@ Python overhead:
   scenarios  -> a vmapped stacked-`ScenarioParams` axis (one trace, S lanes),
                 built by `SweepSpec` from ordinary frozen `FLOAConfig`s.
 
+The lane axis also carries a **defense code** (core.scenario.DEFENSE_CODES):
+code 0 lanes take the analog FLOA combine, any other code applies a digital
+screening defense (median / trimmed-mean / (multi-)Krum / geometric median)
+to the same [S, U, D] per-worker gradient slab via a vmapped `lax.switch`
+built over exactly the codes the spec contains — so the full
+policy x defense x attack x attacker-count showdown grid is ONE compiled
+program, and pure-FLOA sweeps trace no defense kernels at all.  Digital lanes
+model Byzantine workers as sign-flipped reported gradients (FLTrainer
+mode="digital" semantics) and ignore the channel; their per-worker slab is
+the gathered all-gather payload the paper's analog scheme avoids.
+
 The warm path operates on **flat state end-to-end**: parameters are flattened
 once to a [S, D] matrix before the scan and stay flat across all rounds.  The
 pytree boundary is crossed only inside the loss/grad closure (via a cached
@@ -50,6 +61,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import defenses as DEF
 from repro.core import scenario as SC
 from repro.core import standardize as S
 from repro.core.aggregation import (
@@ -61,6 +73,7 @@ from repro.core.aggregation import (
 )
 from repro.core.attacks import AttackType
 from repro.core.power_control import Policy
+from repro.core.scenario import DefenseSpec
 from repro.fl.trainer import RoundLog
 
 Array = jax.Array
@@ -68,12 +81,20 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioCase:
-    """One lane of the sweep: a frozen FLOAConfig plus its lr and PRNG seed."""
+    """One lane of the sweep: a frozen FLOAConfig plus its lr and PRNG seed.
+
+    defense selects the lane's aggregation rule: the default analog FLOA
+    combine ("floa"), or a digital screening defense (median / trimmed-mean /
+    Krum / ... — see core.scenario.DEFENSE_CODES) applied to the gathered
+    [U, D] gradient slab, with digital attackers modelled as sign-flipped
+    reported gradients (the FLTrainer mode="digital" semantics).
+    """
 
     name: str
     floa: FLOAConfig
     alpha: float
     seed: int = 0
+    defense: DefenseSpec = dataclasses.field(default_factory=DefenseSpec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +119,15 @@ class SweepSpec:
         for c in self.cases:
             c.floa.validate()
             assert c.floa.num_workers == u, "sweep scenarios must share U"
+            c.defense.validate(u)
+        gm_iters = {c.defense.gm_iters for c in self.cases
+                    if c.defense.name == "geometric_median"}
+        if len(gm_iters) > 1:  # ValueError like every other defense bound:
+            # a bare assert vanishes under -O and a wrong Weiszfeld depth
+            # would run silently
+            raise ValueError(
+                "geometric_median lanes must share gm_iters (it is a static "
+                f"scan length, one per compiled sweep); got {sorted(gm_iters)}")
 
     def __len__(self) -> int:
         return len(self.cases)
@@ -112,7 +142,7 @@ class SweepSpec:
 
     def stacked_params(self) -> SC.ScenarioParams:
         """Frozen dataclass configs -> traceable struct-of-arrays, [S, ...]."""
-        return SC.stack(tuple(SC.from_floa(c.floa, c.alpha)
+        return SC.stack(tuple(SC.from_floa(c.floa, c.alpha, c.defense)
                               for c in self.cases))
 
     def keys(self) -> Array:
@@ -130,6 +160,29 @@ class SweepSpec:
         return any(c.floa.attack.attack == AttackType.GAUSSIAN
                    and c.floa.attack.num_attackers > 0
                    and c.floa.power.policy != Policy.EF for c in self.cases)
+
+    # Defense-code lane axis (also static trace decisions): a sweep with no
+    # digital lanes skips the screening kernels entirely, and a mixed sweep
+    # builds its lax.switch over exactly the defense codes present — absent
+    # defenses cost nothing under the vmapped select.
+    @property
+    def any_digital(self) -> bool:
+        return any(c.defense.is_digital for c in self.cases)
+
+    @property
+    def all_digital(self) -> bool:
+        return all(c.defense.is_digital for c in self.cases)
+
+    @property
+    def digital_codes(self) -> Tuple[int, ...]:
+        return tuple(sorted({c.defense.code for c in self.cases
+                             if c.defense.is_digital}))
+
+    @property
+    def gm_iters(self) -> int:
+        its = {c.defense.gm_iters for c in self.cases
+               if c.defense.name == "geometric_median"}
+        return its.pop() if its else 8
 
 
 @dataclasses.dataclass
@@ -252,6 +305,32 @@ class SweepEngine:
 
     # ------------------------------------------------------------ builders
 
+    def _make_digital_select(self):
+        """Defense-code lane axis: [S, U, D] slab -> per-lane aggregate select.
+
+        Returns apply(gagg_floa, flat, sp) -> [S, D]: digital attackers'
+        rows are sign-flipped (the FLTrainer mode="digital" semantics — a
+        digital Byzantine worker reports -g, it has no channel to cheat on),
+        the lane's screening defense runs on the flipped slab via a vmapped
+        `lax.switch` over the codes present in the spec, and analog lanes
+        (code 0) keep their OTA combine output.  Both state paths share this
+        helper so strict_numerics stays bitwise across them.
+        """
+        selector = DEF.make_flat_defense_selector(
+            self.spec.digital_codes, gm_iters=self.spec.gm_iters)
+
+        def apply(gagg_floa, flat, sp: SC.ScenarioParams):
+            sign = jnp.where((sp.attack != 0)[:, None] & sp.byz_mask,
+                             jnp.float32(-1.0), jnp.float32(1.0))
+            flipped = flat * sign[:, :, None]
+            dig = jax.vmap(selector)(sp.defense, flipped, sp.def_trim,
+                                     sp.def_f, sp.def_multi)
+            if gagg_floa is None:  # all-digital sweep: no analog leg at all
+                return dig
+            return jnp.where((sp.defense == 0)[:, None], gagg_floa, dig)
+
+        return apply
+
     def _scan_driver(self, one_round, eval_lane, finalize=None):
         """Shared scan-over-rounds driver for both state representations.
 
@@ -317,6 +396,9 @@ class SweepEngine:
         strict = self.strict_numerics
         any_noise = self.spec.any_noise
         any_jam = self.spec.any_jamming
+        all_digital = self.spec.all_digital
+        digital_select = (self._make_digital_select()
+                          if self.spec.any_digital else None)
 
         def one_round(params_s, batch, sub_s, sp: SC.ScenarioParams):
             # 1. per-worker local SGD gradients, per scenario: leaves [S, U, ...]
@@ -324,44 +406,55 @@ class SweepEngine:
                 lambda p: per_worker_grads(loss_fn, p, batch, u)[0]
             )(params_s)
 
-            # 2. scalar-stat standardization handshake.
-            if strict:
-                # Barrier first: stats reduce from the materialized slab
-                # (needed by the combine anyway), bit-matching the strict
-                # flat-state path.
+            if all_digital:
+                # No analog leg to trace (mirrors the flat-state path, so
+                # strict_numerics stays bitwise across representations).
                 flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
-                flat = jax.lax.optimization_barrier(flat)
-                gbar_i, eps2_i = jax.vmap(
-                    lambda g: S.flat_scalar_stats(g, sizes))(flat)
+                num = flat.shape[0]
+                gagg_flat = digital_select(None, flat, sp)
             else:
-                gbar_i, eps2_i = jax.vmap(S.per_worker_scalar_stats)(grads)
-                flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
-            num, dim = flat.shape[0], flat.shape[-1]
-            gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
-            eps = jnp.sqrt(eps2)
+                # 2. scalar-stat standardization handshake.
+                if strict:
+                    # Barrier first: stats reduce from the materialized slab
+                    # (needed by the combine anyway), bit-matching the strict
+                    # flat-state path.
+                    flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
+                    flat = jax.lax.optimization_barrier(flat)
+                    gbar_i, eps2_i = jax.vmap(
+                        lambda g: S.flat_scalar_stats(g, sizes))(flat)
+                else:
+                    gbar_i, eps2_i = jax.vmap(S.per_worker_scalar_stats)(grads)
+                    flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
+                num, dim = flat.shape[0], flat.shape[-1]
+                gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
+                eps = jnp.sqrt(eps2)
 
-            # 3. channel draw + power control + attack, branchless per lane.
-            ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)  # [S, 3, 2]
-            h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
-            coeff, bias_w, jam_std, noise_std = jax.vmap(
-                SC.scenario_coefficients
-            )(h_abs, sp, gbar, eps2)
+                # 3. channel draw + power control + attack, branchless per lane.
+                ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)  # [S, 3, 2]
+                h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
+                coeff, bias_w, jam_std, noise_std = jax.vmap(
+                    SC.scenario_coefficients
+                )(h_abs, sp, gbar, eps2)
 
-            # 4. OTA superposition + bias + receiver AWGN, one fused combine.
-            if any_noise:
-                z = jax.vmap(
-                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
-                )(ks[:, 1])
-                noise_row = noise_std[:, None] * z
-            else:
-                noise_row = jnp.zeros((num, dim), jnp.float32)
-            gagg_flat = batched_floa_combine(
-                coeff, flat, noise_row, bias_w * gbar, eps)
-            if any_jam:  # GAUSSIAN ablation: unstructured max-power jamming
-                n2 = jax.vmap(
-                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
-                )(ks[:, 2])
-                gagg_flat = gagg_flat + jam_std[:, None] * n2
+                # 4. OTA superposition + bias + receiver AWGN, one fused combine.
+                if any_noise:
+                    z = jax.vmap(
+                        lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                    )(ks[:, 1])
+                    noise_row = noise_std[:, None] * z
+                else:
+                    noise_row = jnp.zeros((num, dim), jnp.float32)
+                gagg_flat = batched_floa_combine(
+                    coeff, flat, noise_row, bias_w * gbar, eps)
+                if any_jam:  # GAUSSIAN ablation: unstructured max-power jamming
+                    n2 = jax.vmap(
+                        lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                    )(ks[:, 2])
+                    gagg_flat = gagg_flat + jam_std[:, None] * n2
+                if digital_select is not None:
+                    # Defense lanes override the analog combine with their
+                    # screening defense on the same (already materialized) slab.
+                    gagg_flat = digital_select(gagg_flat, flat, sp)
 
             # 5. PS update w <- w - alpha * gagg (per-scenario alpha).
             gagg = unflatten(gagg_flat)
@@ -390,6 +483,9 @@ class SweepEngine:
         strict = self.strict_numerics
         any_noise = self.spec.any_noise
         any_jam = self.spec.any_jamming
+        all_digital = self.spec.all_digital
+        digital_select = (self._make_digital_select()
+                          if self.spec.any_digital else None)
 
         def flat_loss(w_row, batch):
             return loss_fn(unflatten_row(w_row), batch)
@@ -400,6 +496,17 @@ class SweepEngine:
             grads = jax.vmap(
                 lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
             )(w)
+
+            # All-digital sweeps skip the analog leg entirely (stats,
+            # channel draw, coefficients, combine — their outputs would be
+            # discarded by the defense select anyway, and XLA cannot DCE
+            # through the per-lane jnp.where).
+            if all_digital:
+                gagg = digital_select(None, grads, sp)
+                w_new = w - sp.alpha[:, None] * gagg
+                gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
+                loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
+                return w_new, loss, gn
 
             # 2. standardization handshake.  strict_numerics pins the fp
             # reduction tree to the tree-state path's (materialization
@@ -434,16 +541,21 @@ class SweepEngine:
 
             # 4+5. OTA superposition + bias + AWGN + PS update, one fused
             # pass over the [S, U, D] slab.  Jamming lands after the combine
-            # (it is not eps-scaled), so GAUSSIAN sweeps take the two-step
-            # route; every other attack uses the fused step.
+            # (it is not eps-scaled) and defense lanes select their screening
+            # aggregate before the update, so GAUSSIAN or defense-carrying
+            # sweeps take the two-step route; pure-FLOA sweeps use the fused
+            # step.
             bias_row = bias_w * gbar
-            if any_jam:
+            if any_jam or digital_select is not None:
                 gagg = batched_floa_combine(
                     coeff, grads, noise_row, bias_row, eps)
-                n2 = jax.vmap(
-                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
-                )(ks[:, 2])
-                gagg = gagg + jam_std[:, None] * n2
+                if any_jam:
+                    n2 = jax.vmap(
+                        lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                    )(ks[:, 2])
+                    gagg = gagg + jam_std[:, None] * n2
+                if digital_select is not None:
+                    gagg = digital_select(gagg, grads, sp)
                 w_new = w - sp.alpha[:, None] * gagg
             else:
                 w_new, gagg = batched_floa_step(

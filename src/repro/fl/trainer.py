@@ -126,18 +126,25 @@ class FLTrainer:
         changes: per-round loss/grad-norm come back as arrays and the final
         params get one eval, so RoundLogs carry the final accuracy only.
 
-        flat=True (FLOA mode only) reuses the sweep engine's flat-state warm
-        path as a single-lane sweep: params stay one [D] f32 row across the
-        scan and the combine + PS update fuse into `batched_floa_step`.
-        Trajectories match the sweep engine's lanes exactly; they match this
-        trainer's loop bit-for-bit on noiseless channels (the loop draws
-        receiver noise per parameter leaf, the flat path draws one [D] row).
+        flat=True reuses the sweep engine's flat-state warm path as a
+        single-lane sweep: params stay one [D] f32 row across the scan and
+        (in FLOA mode) the combine + PS update fuse into `batched_floa_step`.
+        In digital mode the lane carries the trainer's screening defense as
+        its defense code (core.scenario.DEFENSE_CODES), so the same compiled
+        path covers both aggregation families.  Trajectories match the sweep
+        engine's lanes exactly; they match this trainer's loop bit-for-bit on
+        noiseless channels (the loop draws receiver noise per parameter leaf,
+        the flat path draws one [D] row).
         """
         rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
         batches = jax.tree_util.tree_map(jnp.asarray, batches)
-        if flat and self.mode == "floa":
-            return self._run_scan_flat(params, batches, key, eval_every,
-                                       rounds)
+        if flat:
+            defense = self._flat_defense()
+            if defense is not None:
+                return self._run_scan_flat(params, batches, key, eval_every,
+                                           rounds, defense)
+            # digital kwargs not expressible as a defense lane (e.g. a
+            # custom geometric_median eps): the tree scan below handles them.
         t0 = time.perf_counter()
         params, loss, gn, metrics = self._scan_run(params, batches, key)
         loss, gn = np.asarray(loss), np.asarray(gn)
@@ -152,13 +159,29 @@ class FLTrainer:
         ]
         return params, logs
 
-    def _run_scan_flat(self, params, batches, key, eval_every, rounds):
+    def _flat_defense(self):
+        """DefenseSpec for the flat-scan delegation, or None when the digital
+        defense_kwargs cannot be expressed as a sweep lane (e.g. the legacy
+        geometric_median eps=... passthrough) — callers then keep the tree
+        scan, which forwards arbitrary kwargs to the pytree defense."""
+        from repro.core.scenario import DefenseSpec
+
+        if self.mode != "digital":
+            return DefenseSpec()
+        try:
+            return DefenseSpec.from_kwargs(self.defense, **self.defense_kwargs)
+        except ValueError:
+            return None
+
+    def _run_scan_flat(self, params, batches, key, eval_every, rounds,
+                       defense):
         """Single-lane delegation to the sweep engine's flat-state scan."""
         from repro.fl.sweep import ScenarioCase, SweepEngine, SweepSpec
 
         if self._flat_engine is None:
             spec = SweepSpec.build(
-                [ScenarioCase("scan", self.floa, self.alpha)])
+                [ScenarioCase("scan", self.floa, self.alpha,
+                              defense=defense)])
             # eval_every=0: final round only, the run_scan log schedule.
             self._flat_engine = SweepEngine(
                 self.loss_fn, spec, eval_fn=self.eval_fn, eval_every=0)

@@ -1,0 +1,367 @@
+"""Defense-code lane axis contracts.
+
+  - the matrix-native [U, D] kernels reproduce the pytree
+    `digital_aggregate` path (rtol 1e-6) on multi-leaf gradient pytrees;
+  - `trimmed_mean(trim=0)` degrades to the mean (the traced-safe validation
+    regression: the old `assert 2*trim < u` vanished under jit and said
+    nothing about invalid trims anyway — bounds now live in
+    `DefenseSpec.validate` / concrete-int kernel checks);
+  - a defense-lane sweep reproduces the per-defense `FLTrainer.run_scan`
+    digital baseline lane-for-lane (rtol 1e-6) on a showdown-style mixed
+    grid, in tree-state and flat-state engines, strict mode bit-identical;
+  - the `lax.switch` selector built over a code subset routes correctly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core import defenses as DEF
+from repro.core.aggregation import FLOAConfig
+from repro.core.attacks import AttackConfig, AttackType, first_n_mask
+from repro.core.channel import ChannelConfig
+from repro.core.power_control import Policy, PowerConfig
+from repro.core.scenario import DEFENSE_CODES, DefenseSpec
+from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
+
+U = 4
+
+
+def _grads_tree(seed=0, u=6):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(u, 7, 3)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(u, 5)).astype(np.float32))}
+
+
+def _flatten(tree):
+    flat, _ = DEF._flatten_u(tree)
+    return flat
+
+
+# ------------------------------------------------- flat kernels vs pytree API
+
+
+@pytest.mark.parametrize("defense,kw,flat_fn", [
+    ("mean", {}, lambda f: DEF.flat_mean(f)),
+    ("median", {}, lambda f: DEF.flat_median(f)),
+    ("trimmed_mean", dict(trim=2), lambda f: DEF.flat_trimmed_mean(f, 2)),
+    ("krum", dict(num_byzantine=1), lambda f: DEF.flat_krum(f, 1)),
+    ("krum", dict(num_byzantine=1, multi=3), lambda f: DEF.flat_krum(f, 1, 3)),
+    ("geometric_median", {}, lambda f: DEF.flat_geometric_median(f)),
+])
+def test_flat_kernel_matches_pytree_digital_aggregate(defense, kw, flat_fn):
+    tree = _grads_tree()
+    flat = _flatten(tree)
+    got = flat_fn(flat)
+    want_tree = DEF.digital_aggregate(tree, defense, **kw)
+    want = jnp.concatenate([np.asarray(x, np.float32).reshape(-1)
+                            for x in jax.tree_util.tree_leaves(want_tree)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_trimmed_mean_trim0_is_mean():
+    """trim=0 must degrade to the plain mean (the edge the old assert's
+    error message misdescribed)."""
+    flat = _flatten(_grads_tree(3))
+    got = DEF.flat_trimmed_mean(flat, 0)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(DEF.flat_mean(flat)),
+                               rtol=1e-6, atol=1e-7)
+    tree = _grads_tree(3)
+    got_tree = DEF.digital_aggregate(tree, "trimmed_mean", trim=0)
+    want_tree = DEF.digital_aggregate(tree, "mean")
+    for g, w in zip(jax.tree_util.tree_leaves(got_tree),
+                    jax.tree_util.tree_leaves(want_tree)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_trimmed_mean_concrete_bounds_raise():
+    flat = _flatten(_grads_tree())  # U=6
+    for bad in (-1, 3, 7):
+        with pytest.raises(ValueError, match="trim"):
+            DEF.flat_trimmed_mean(flat, bad)
+
+
+def test_trimmed_mean_traced_trim_jits():
+    """The kernel must accept a TRACED trim (the sweep's per-lane int32):
+    under jit there is no concrete value to assert on — bounds live in the
+    config layer."""
+    flat = _flatten(_grads_tree())
+    f = jax.jit(DEF.flat_trimmed_mean)
+    got = f(flat, jnp.int32(2))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(DEF.flat_trimmed_mean(flat, 2)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_defense_spec_validation():
+    DefenseSpec(name="trimmed_mean", trim=1).validate(4)
+    with pytest.raises(ValueError, match="trim"):
+        DefenseSpec(name="trimmed_mean", trim=2).validate(4)
+    with pytest.raises(ValueError, match="trim"):
+        DefenseSpec(name="trimmed_mean", trim=-1).validate(4)
+    with pytest.raises(ValueError, match="num_byzantine"):
+        DefenseSpec(name="krum", num_byzantine=4).validate(4)
+    with pytest.raises(ValueError, match="multi"):
+        DefenseSpec(name="multi_krum", multi=9).validate(4)
+    with pytest.raises(ValueError, match="unknown defense"):
+        DefenseSpec(name="bulyan").validate(4)
+    assert DefenseSpec.from_kwargs("krum", num_byzantine=1,
+                                   multi=3).name == "multi_krum"
+    assert DefenseSpec.from_kwargs("geometric_median", iters=16).gm_iters == 16
+    with pytest.raises(ValueError, match="does not accept"):
+        DefenseSpec.from_kwargs("median", bogus=1)
+    with pytest.raises(ValueError, match="does not accept"):
+        # an irrelevant-but-valid-elsewhere kwarg must not be silently
+        # dropped: the caller meant a different defense
+        DefenseSpec.from_kwargs("median", trim=2)
+
+
+def test_krum_scores_finite():
+    """Regression: the seed's `d2 + eye*inf` poisoned every off-diagonal
+    distance with 0*inf = NaN, so all Krum scores were NaN and Krum silently
+    returned worker 0."""
+    flat = _flatten(_grads_tree())
+    scores = np.asarray(DEF._krum_scores(flat, 1))
+    assert np.all(np.isfinite(scores))
+
+
+def test_selector_subset_routes_correctly():
+    """A selector built over a code subset must route each listed code to its
+    kernel and remap unlisted codes (analog lanes) to SOME valid branch."""
+    flat = _flatten(_grads_tree())
+    trim, f, multi = jnp.int32(1), jnp.int32(1), jnp.int32(2)
+    sel = DEF.make_flat_defense_selector(
+        [DEFENSE_CODES["median"], DEFENSE_CODES["multi_krum"]])
+    np.testing.assert_allclose(
+        np.asarray(sel(jnp.int32(DEFENSE_CODES["median"]), flat, trim, f, multi)),
+        np.asarray(DEF.flat_median(flat)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(sel(jnp.int32(DEFENSE_CODES["multi_krum"]), flat, trim, f, multi)),
+        np.asarray(DEF.flat_krum(flat, 1, 2)), rtol=1e-6)
+    out = sel(jnp.int32(0), flat, trim, f, multi)  # analog code: any branch
+    assert np.all(np.isfinite(np.asarray(out)))
+    # the full-default selector routes every named defense
+    sel_all = DEF.make_flat_defense_selector()
+    np.testing.assert_allclose(
+        np.asarray(sel_all(jnp.int32(DEFENSE_CODES["trimmed_mean"]),
+                           flat, trim, f, multi)),
+        np.asarray(DEF.flat_trimmed_mean(flat, 1)), rtol=1e-6)
+
+
+def test_selector_vmaps_over_lane_codes():
+    flat = _flatten(_grads_tree())
+    s = 4
+    flats = jnp.stack([flat * (i + 1) for i in range(s)])
+    codes = jnp.asarray([DEFENSE_CODES["mean"], DEFENSE_CODES["median"],
+                         DEFENSE_CODES["krum"], DEFENSE_CODES["geometric_median"]],
+                        jnp.int32)
+    trims = jnp.ones((s,), jnp.int32)
+    fs = jnp.ones((s,), jnp.int32)
+    multis = jnp.ones((s,), jnp.int32)
+    sel = DEF.make_flat_defense_selector()
+    out = jax.vmap(sel)(codes, flats, trims, fs, multis)
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               np.asarray(DEF.flat_median(flats[1])),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(out[3]),
+                               np.asarray(DEF.flat_geometric_median(flats[3])),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ----------------------------------------------- sweep lanes vs run_scan
+
+
+def _tiny_problem(rounds=6, batch=8, d_in=6, d_h=5):
+    def loss(params, b):
+        pred = jax.nn.relu(b["x"] @ params["w1"]) @ params["w2"]
+        return jnp.mean((pred - b["y"]) ** 2)
+    k = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(k, (d_in, d_h)),
+              "w2": jax.random.normal(k, (d_h, 1))}
+    dim = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    rng = np.random.default_rng(0)
+    batches = {"x": rng.normal(size=(rounds, U * batch, d_in)).astype(np.float32),
+               "y": rng.normal(size=(rounds, U * batch, 1)).astype(np.float32)}
+    return loss, params, dim, batches
+
+
+def _floa(dim, policy, n_atk, noise=0.05, attack=AttackType.STRONGEST):
+    return FLOAConfig(
+        channel=ChannelConfig(num_workers=U, sigma=1.0,
+                              noise_std=0.0 if policy == Policy.EF else noise),
+        power=PowerConfig(num_workers=U, dim=dim, p_max=1.0, policy=policy),
+        attack=AttackConfig(attack=attack if n_atk else AttackType.NONE,
+                            byzantine_mask=first_n_mask(U, n_atk)),
+    )
+
+
+DIGITAL_GRID = [
+    ("mean", DefenseSpec(name="mean")),
+    ("median", DefenseSpec(name="median")),
+    ("trimmed_mean", DefenseSpec(name="trimmed_mean", trim=1)),
+    ("krum", DefenseSpec(name="krum", num_byzantine=1)),
+    ("multi_krum", DefenseSpec(name="multi_krum", num_byzantine=1, multi=2)),
+    ("geometric_median", DefenseSpec(name="geometric_median")),
+]
+
+
+def _showdown_cases(dim, n_atk=1):
+    """Mixed analog + digital grid: the showdown table in miniature."""
+    cases = [ScenarioCase("bev", _floa(dim, Policy.BEV, n_atk), 0.05, seed=5),
+             ScenarioCase("ci", _floa(dim, Policy.CI, n_atk), 0.05, seed=5)]
+    for name, spec in DIGITAL_GRID:
+        cases.append(ScenarioCase(name, _floa(dim, Policy.EF, n_atk, 0.0),
+                                  0.05, seed=5, defense=spec))
+    return cases
+
+
+def _trainer_kwargs(spec: DefenseSpec):
+    if spec.name in ("krum", "multi_krum"):
+        return "krum", dict(num_byzantine=spec.num_byzantine,
+                            multi=spec.multi)
+    if spec.name == "trimmed_mean":
+        return "trimmed_mean", dict(trim=spec.trim)
+    return spec.name, {}
+
+
+@pytest.mark.parametrize("flat_state", [True, False])
+def test_defense_lanes_match_per_defense_run_scan(flat_state):
+    """Every digital lane of a mixed showdown sweep reproduces the standalone
+    per-defense FLTrainer.run_scan digital baseline (rtol 1e-6) — the
+    acceptance contract for folding the showdown's digital half into the
+    compiled sweep."""
+    loss, params, dim, batches = _tiny_problem(rounds=6)
+    cases = _showdown_cases(dim)
+    res = SweepEngine(loss, SweepSpec.build(cases),
+                      flat_state=flat_state).run(params, batches)
+    for i, case in enumerate(cases):
+        if not case.defense.is_digital:
+            continue
+        defense, dkw = _trainer_kwargs(case.defense)
+        tr = FLTrainer(loss_fn=loss, floa=case.floa, alpha=case.alpha,
+                       mode="digital", defense=defense, defense_kwargs=dkw)
+        p_scan, logs = tr.run_scan(dict(params), batches,
+                                   jax.random.PRNGKey(case.seed), eval_every=1)
+        np.testing.assert_allclose(
+            res.loss[i], np.asarray([l.loss for l in logs]),
+            rtol=1e-6, atol=1e-7, err_msg=case.name)
+        np.testing.assert_allclose(
+            res.grad_norm[i], np.asarray([l.grad_norm for l in logs]),
+            rtol=1e-5, atol=1e-6, err_msg=case.name)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(res.params[k][i]), np.asarray(p_scan[k]),
+                rtol=1e-6, atol=1e-7, err_msg=f"{case.name}.{k}")
+
+
+def test_defense_lanes_strict_flat_matches_tree_bitwise():
+    """strict_numerics stays bit-exact across the state representations with
+    defense lanes in the grid (the digital select is shared by both paths)."""
+    loss, params, dim, batches = _tiny_problem(rounds=6)
+    spec = SweepSpec.build(_showdown_cases(dim))
+    tree = SweepEngine(loss, spec, flat_state=False,
+                       strict_numerics=True).run(params, batches)
+    flat = SweepEngine(loss, spec, strict_numerics=True).run(params, batches)
+    np.testing.assert_array_equal(tree.loss, flat.loss)
+    np.testing.assert_array_equal(tree.grad_norm, flat.grad_norm)
+    for k in tree.params:
+        np.testing.assert_array_equal(np.asarray(tree.params[k]),
+                                      np.asarray(flat.params[k]))
+
+
+def test_digital_run_scan_flat_matches_nonflat():
+    """FLTrainer.run_scan(flat=True) now covers digital mode by delegating to
+    a single defense lane; it must match the tree-state digital scan."""
+    loss, params, dim, batches = _tiny_problem(rounds=5)
+    tr = FLTrainer(loss_fn=loss, floa=_floa(dim, Policy.EF, 1, 0.0),
+                   alpha=0.05, mode="digital", defense="krum",
+                   defense_kwargs=dict(num_byzantine=1))
+    key = jax.random.PRNGKey(2)
+    p_tree, logs_tree = tr.run_scan(dict(params), batches, key, eval_every=1)
+    p_flat, logs_flat = tr.run_scan(dict(params), batches, key, eval_every=1,
+                                    flat=True)
+    np.testing.assert_allclose(
+        np.asarray([l.loss for l in logs_tree]),
+        np.asarray([l.loss for l in logs_flat]), rtol=1e-6, atol=1e-7)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p_tree[k]),
+                                   np.asarray(p_flat[k]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_digital_run_scan_flat_falls_back_on_unsupported_kwargs():
+    """defense_kwargs the lane axis cannot express (legacy geometric_median
+    eps=...) must not break run_scan(flat=True): it silently keeps the tree
+    scan, which forwards arbitrary kwargs to the pytree defense."""
+    loss, params, dim, batches = _tiny_problem(rounds=4)
+    tr = FLTrainer(loss_fn=loss, floa=_floa(dim, Policy.EF, 1, 0.0),
+                   alpha=0.05, mode="digital", defense="geometric_median",
+                   defense_kwargs=dict(eps=1e-6))
+    assert tr._flat_defense() is None
+    key = jax.random.PRNGKey(4)
+    p_tree, logs_tree = tr.run_scan(dict(params), batches, key, eval_every=1)
+    p_flat, logs_flat = tr.run_scan(dict(params), batches, key, eval_every=1,
+                                    flat=True)
+    np.testing.assert_array_equal(
+        np.asarray([l.loss for l in logs_tree]),
+        np.asarray([l.loss for l in logs_flat]))
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(p_tree[k]),
+                                      np.asarray(p_flat[k]))
+
+
+def test_pure_floa_sweep_unchanged_by_defense_axis():
+    """A spec with no digital lanes must trace the fused pure-FLOA path:
+    trajectories are bit-identical whether or not the defense axis exists in
+    the engine (guards the any_digital static routing)."""
+    loss, params, dim, batches = _tiny_problem(rounds=5)
+    cases = [ScenarioCase("bev", _floa(dim, Policy.BEV, 1), 0.05, seed=5),
+             ScenarioCase("ci", _floa(dim, Policy.CI, 0), 0.05, seed=6)]
+    spec = SweepSpec.build(cases)
+    assert not spec.any_digital and spec.digital_codes == ()
+    res = SweepEngine(loss, spec).run(params, batches)
+    # an explicit all-floa DefenseSpec is the same sweep
+    cases2 = [ScenarioCase(c.name, c.floa, c.alpha, c.seed,
+                           defense=DefenseSpec(name="floa")) for c in cases]
+    res2 = SweepEngine(loss, SweepSpec.build(cases2)).run(params, batches)
+    np.testing.assert_array_equal(res.loss, res2.loss)
+
+
+@pytest.mark.parametrize("flat_state", [True, False])
+def test_all_digital_shortcut_matches_mixed_lanes(flat_state):
+    """An all-digital spec takes the no-analog-leg shortcut (no stats /
+    channel draw / combine traced); its trajectories must be bit-identical
+    to the same digital lanes inside a mixed sweep, where the analog leg IS
+    traced and discarded per lane (digital lanes never consume it)."""
+    loss, params, dim, batches = _tiny_problem(rounds=5)
+    mixed_cases = _showdown_cases(dim)
+    digital_cases = [c for c in mixed_cases if c.defense.is_digital]
+    spec = SweepSpec.build(digital_cases)
+    assert spec.all_digital
+    dig = SweepEngine(loss, spec, flat_state=flat_state).run(params, batches)
+    mixed = SweepEngine(loss, SweepSpec.build(mixed_cases),
+                        flat_state=flat_state).run(params, batches)
+    for i, case in enumerate(digital_cases):
+        j = mixed.index(case.name)
+        np.testing.assert_array_equal(dig.loss[i], mixed.loss[j],
+                                      err_msg=case.name)
+        np.testing.assert_array_equal(dig.grad_norm[i], mixed.grad_norm[j],
+                                      err_msg=case.name)
+
+
+def test_gm_iters_must_agree_across_lanes():
+    loss, params, dim, batches = _tiny_problem(rounds=2)
+    with pytest.raises(ValueError, match="gm_iters"):
+        SweepSpec.build([
+            ScenarioCase("a", _floa(dim, Policy.EF, 0, 0.0), 0.05,
+                         defense=DefenseSpec(name="geometric_median",
+                                             gm_iters=4)),
+            ScenarioCase("b", _floa(dim, Policy.EF, 0, 0.0), 0.05,
+                         defense=DefenseSpec(name="geometric_median",
+                                             gm_iters=8)),
+        ])

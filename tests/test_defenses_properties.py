@@ -1,0 +1,188 @@
+"""Hypothesis property suite for the digital screening defenses.
+
+Pins the invariants the defense-code lane axis relies on, on the
+matrix-native [U, D] kernels (core/defenses.py):
+
+  - permutation invariance over the worker axis (screening must not care
+    which uplink slot a gradient arrived in);
+  - translation equivariance (aggregate(G + c) == aggregate(G) + c);
+  - breakdown-point boxes: median / trimmed-mean stay inside the honest
+    per-coordinate range whenever 2f < U;
+  - Krum picks an honest worker under a large-norm attacker cluster (this
+    property is the regression net for the seed's `eye * inf` NaN-score bug,
+    which made Krum silently return worker 0);
+  - geometric median: Weiszfeld is a descent method (objective no worse than
+    the mean's) and converges to an approximate fixed point.
+
+Selection-based defenses (Krum) are fp-fragile under near-tied scores, so
+those properties `assume()` a score margin instead of chasing ulps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -e '.[test]'; CI's tier-1 job has it)")
+from hypothesis import assume, given, settings, strategies as st
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core.defenses import (
+    _krum_scores,
+    flat_geometric_median,
+    flat_krum,
+    flat_mean,
+    flat_median,
+    flat_trimmed_mean,
+)
+
+COORDWISE = {
+    "mean": lambda f: flat_mean(f),
+    "median": lambda f: flat_median(f),
+    "trimmed_mean": lambda f: flat_trimmed_mean(f, 1),
+    "geometric_median": lambda f: flat_geometric_median(f),
+}
+
+
+def _flat(seed: int, u: int, d: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(u, d)) * 0.7 + 0.1).astype(np.float32)
+
+
+# ------------------------------------------------------ permutation invariance
+
+
+@pytest.mark.parametrize("name", sorted(COORDWISE))
+@given(u=st.integers(3, 10), d=st.integers(2, 64), seed=st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_property_permutation_invariant(name, u, d, seed):
+    flat = _flat(seed, u, d)
+    perm = np.random.default_rng(seed + 1).permutation(u)
+    base = np.asarray(COORDWISE[name](jnp.asarray(flat)))
+    permuted = np.asarray(COORDWISE[name](jnp.asarray(flat[perm])))
+    np.testing.assert_allclose(permuted, base, rtol=1e-3, atol=1e-4)
+
+
+@given(u=st.integers(4, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6),
+       f=st.integers(0, 2))
+@settings(max_examples=20, deadline=None)
+def test_property_krum_permutation_invariant(u, d, seed, f):
+    """Krum scores permute with the workers; the selected aggregate is
+    permutation-invariant whenever the winner is decided by a clear margin
+    (near-ties are legitimately fp-order dependent)."""
+    f = min(f, u - 3)
+    flat = _flat(seed, u, d)
+    perm = np.random.default_rng(seed + 1).permutation(u)
+    scores = np.asarray(_krum_scores(jnp.asarray(flat), f))
+    scores_p = np.asarray(_krum_scores(jnp.asarray(flat[perm]), f))
+    np.testing.assert_allclose(scores_p, scores[perm], rtol=1e-4, atol=1e-5)
+    srt = np.sort(scores)
+    assume(srt[1] - srt[0] > 1e-3 * (1.0 + srt[0]))  # unique winner
+    base = np.asarray(flat_krum(jnp.asarray(flat), f))
+    permuted = np.asarray(flat_krum(jnp.asarray(flat[perm]), f))
+    np.testing.assert_allclose(permuted, base, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------- translation equivariance
+
+
+@pytest.mark.parametrize("name", sorted(COORDWISE))
+@given(u=st.integers(3, 10), d=st.integers(2, 64), seed=st.integers(0, 10**6),
+       c=st.floats(-5.0, 5.0))
+@settings(max_examples=20, deadline=None)
+def test_property_translation_equivariant(name, u, d, seed, c):
+    flat = _flat(seed, u, d)
+    base = np.asarray(COORDWISE[name](jnp.asarray(flat)))
+    shifted = np.asarray(COORDWISE[name](jnp.asarray(flat + np.float32(c))))
+    np.testing.assert_allclose(shifted, base + np.float32(c),
+                               rtol=1e-3, atol=1e-3 * (1.0 + abs(c)))
+
+
+@given(u=st.integers(4, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6),
+       c=st.floats(-5.0, 5.0))
+@settings(max_examples=20, deadline=None)
+def test_property_krum_translation_equivariant(u, d, seed, c):
+    f = 1
+    flat = _flat(seed, u, d)
+    scores = np.sort(np.asarray(_krum_scores(jnp.asarray(flat), f)))
+    assume(scores[1] - scores[0] > 1e-3 * (1.0 + scores[0]))
+    base = np.asarray(flat_krum(jnp.asarray(flat), f))
+    shifted = np.asarray(flat_krum(jnp.asarray(flat + np.float32(c)), f))
+    np.testing.assert_allclose(shifted, base + np.float32(c),
+                               rtol=1e-3, atol=1e-3 * (1.0 + abs(c)))
+
+
+# ----------------------------------------------------- breakdown-point boxes
+
+
+@pytest.mark.parametrize("name", ["median", "trimmed_mean"])
+@given(u=st.integers(3, 12), d=st.integers(2, 32), seed=st.integers(0, 10**6),
+       f=st.integers(1, 5), scale=st.floats(1e2, 1e6))
+@settings(max_examples=25, deadline=None)
+def test_property_breakdown_box(name, u, d, seed, f, scale):
+    """With 2f < U, coordinate-wise median and trimmed-mean(trim=f) stay
+    inside the honest per-coordinate range no matter what the f Byzantine
+    rows contain (the Yin et al. breakdown-point guarantee)."""
+    f = min(f, (u - 1) // 2)
+    rng = np.random.default_rng(seed)
+    flat = _flat(seed, u, d)
+    flat[:f] = rng.choice([-1.0, 1.0], size=(f, d)) * scale  # arbitrary junk
+    honest = flat[f:]
+    if name == "median":
+        out = np.asarray(flat_median(jnp.asarray(flat)))
+    else:
+        out = np.asarray(flat_trimmed_mean(jnp.asarray(flat), f))
+    lo, hi = honest.min(axis=0), honest.max(axis=0)
+    pad = 1e-5 * (1.0 + np.abs(lo) + np.abs(hi))
+    assert np.all(out >= lo - pad) and np.all(out <= hi + pad)
+
+
+@given(u=st.integers(4, 12), d=st.integers(2, 32), seed=st.integers(0, 10**6),
+       f=st.integers(1, 4), scale=st.floats(1e2, 1e4))
+@settings(max_examples=25, deadline=None)
+def test_property_krum_selects_honest_under_large_norm_attacker(u, d, seed, f,
+                                                                scale):
+    """Krum(f) with U >= 2f+3 returns (one of) the honest workers' gradients
+    when the f attackers transmit a far-away large-norm cluster.  Fails on
+    the seed's NaN-score Krum, which always returned row 0 == an attacker."""
+    assume(u >= 2 * f + 3)
+    flat = _flat(seed, u, d) * 0.1
+    flat[:f] = flat[:f] + scale  # attackers: huge offset cluster
+    out = np.asarray(flat_krum(jnp.asarray(flat), f))
+    honest = flat[f:]
+    d2 = np.sum((honest - out[None, :]) ** 2, axis=1)
+    assert float(d2.min()) < 1e-6  # out IS an honest row
+    assert np.abs(out).max() < scale / 2  # and nowhere near the attackers
+
+
+# ------------------------------------------------------- geometric median
+
+
+@given(u=st.integers(3, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_property_geometric_median_descends_from_mean(u, d, seed):
+    """Weiszfeld is a descent method on sum_i ||g_i - z||, started at the
+    mean — the objective can only improve."""
+    flat = _flat(seed, u, d)
+    z = np.asarray(flat_geometric_median(jnp.asarray(flat)))
+    obj = lambda p: float(np.linalg.norm(flat - p[None, :], axis=1).sum())
+    assert obj(z) <= obj(flat.mean(axis=0)) * (1 + 1e-5) + 1e-6
+
+
+@given(u=st.integers(3, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_property_geometric_median_weiszfeld_fixed_point(u, d, seed):
+    """Enough Weiszfeld iterations reach an approximate fixed point: one more
+    application of the Weiszfeld map barely moves z.  The tolerance is loose
+    (1e-2 of the data scale) because Weiszfeld converges sublinearly when the
+    median lands near a data point."""
+    flat = _flat(seed, u, d)
+    z = np.asarray(flat_geometric_median(jnp.asarray(flat), iters=64),
+                   dtype=np.float64)
+    dist = np.maximum(np.linalg.norm(flat.astype(np.float64) - z, axis=1),
+                      1e-8)
+    w = 1.0 / dist
+    z_next = (w[:, None] * flat).sum(axis=0) / w.sum()
+    scale = float(np.linalg.norm(flat, axis=1).mean())
+    assert float(np.linalg.norm(z_next - z)) <= 1e-2 * scale + 1e-6

@@ -25,7 +25,8 @@ from repro.core.aggregation import FLOAConfig
 from repro.core.attacks import AttackConfig, AttackType, first_n_mask
 from repro.core.channel import ChannelConfig
 from repro.core.power_control import Policy, PowerConfig
-from repro.fl import ScenarioCase, SweepEngine, SweepSpec
+from repro.core.scenario import DefenseSpec
+from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
 from repro.launch.mesh import make_sweep_mesh
 
 U = 4
@@ -134,6 +135,86 @@ def test_sharded_strict_and_custom_keys():
     sh = SweepEngine(loss, spec, strict_numerics=True,
                      mesh=make_sweep_mesh(8)).run(params, batches, keys=keys)
     _assert_lanes_match(sh, un)
+
+
+_DEFENSES = [
+    DefenseSpec(name="mean"),
+    DefenseSpec(name="median"),
+    DefenseSpec(name="trimmed_mean", trim=1),
+    DefenseSpec(name="krum", num_byzantine=1),
+    DefenseSpec(name="multi_krum", num_byzantine=1, multi=2),
+    DefenseSpec(name="geometric_median"),
+]
+
+
+def _defense_grid_cases(dim, num):
+    """Mixed analog + digital lanes cycled to `num` (the showdown grid in
+    miniature): lanes 0/1 of each period are FLOA BEV/CI, the rest walk the
+    defense families."""
+    period = 2 + len(_DEFENSES)
+    cases = []
+    for i in range(num):
+        j, n_atk = i % period, (i // period) % 3
+        if j < 2:
+            pol = (Policy.BEV, Policy.CI)[j]
+            cases.append(ScenarioCase(f"{pol.value}@N{n_atk}#{i}",
+                                      _floa(dim, pol, n_atk), 0.05,
+                                      seed=200 + i))
+        else:
+            spec = _DEFENSES[j - 2]
+            cases.append(ScenarioCase(f"{spec.name}@N{n_atk}#{i}",
+                                      _floa(dim, Policy.EF, n_atk, 0.0), 0.05,
+                                      seed=200 + i, defense=spec))
+    return cases
+
+
+def test_single_device_mesh_defense_lanes_match_unsharded():
+    """Defense-code lanes through a degenerate 1-device mesh == the plain
+    flat-state engine.  Runs everywhere (tier-1)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_defense_grid_cases(dim, 8))
+    un = SweepEngine(loss, spec).run(params, batches)
+    sh = SweepEngine(loss, spec, mesh=make_sweep_mesh(1)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_sharded_defense_lanes_match_unsharded():
+    """16-lane mixed analog+defense grid over 8 devices (2 lanes each): the
+    digital screening kernels are lane-local, so sharding cannot move them."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_defense_grid_cases(dim, 16))
+    un = SweepEngine(loss, spec).run(params, batches)
+    sh = SweepEngine(loss, spec, mesh=make_sweep_mesh(8)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_sharded_defense_lane_matches_run_scan_baseline():
+    """Acceptance: a sharded (8 fake devices, ghost-padded S=13) defense lane
+    reproduces the standalone per-defense FLTrainer.run_scan digital baseline
+    at rtol 1e-6 — the same contract the unsharded engine pins in
+    tests/test_defense_lanes.py."""
+    loss, params, dim, batches = _tiny_problem()
+    cases = _defense_grid_cases(dim, 13)
+    eng = SweepEngine(loss, SweepSpec.build(cases), mesh=make_sweep_mesh(8))
+    assert eng._pad == 3
+    sh = eng.run(params, batches)
+    for i, case in enumerate(cases):
+        if not case.defense.is_digital:
+            continue
+        name = ("krum" if case.defense.name == "multi_krum"
+                else case.defense.name)
+        dkw = dict(trim=case.defense.trim) if name == "trimmed_mean" else (
+            dict(num_byzantine=case.defense.num_byzantine,
+                 multi=case.defense.multi) if name == "krum" else {})
+        tr = FLTrainer(loss_fn=loss, floa=case.floa, alpha=case.alpha,
+                       mode="digital", defense=name, defense_kwargs=dkw)
+        _, logs = tr.run_scan(dict(params), batches,
+                              jax.random.PRNGKey(case.seed), eval_every=1)
+        np.testing.assert_allclose(
+            sh.loss[i], np.asarray([l.loss for l in logs]),
+            rtol=1e-6, atol=1e-7, err_msg=case.name)
 
 
 def test_mesh_requires_flat_state():
