@@ -5,11 +5,17 @@ analog scheme gives up vs the per-worker-gradient communication it saves.
 
 Execution: every row — the analog FLOA-BEV lane AND each digital defense —
 is one lane of a single compiled sweep (the defense-code lane axis), so the
-whole comparison is one XLA program.
+whole comparison is one XLA program.  Dispatch is grouped by default (each
+defense family's kernel runs once over its own contiguous lane group);
+--dispatch switch keeps the per-lane vmapped lax.switch reference, which
+computes every family for every lane — useful for eyeballing the wall-time
+difference on this exact grid.
 
 CSV: fig,experiment,round,loss,accuracy
 """
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import Experiment, Policy, experiment_floa, figure_setup
 from benchmarks.render_tables import print_sweep_csv
@@ -28,7 +34,8 @@ DEFENSES = [
 ]
 
 
-def main(rounds: int = 120, eval_every: int = 10) -> None:
+def main(rounds: int = 120, eval_every: int = 10,
+         dispatch: str = "grouped") -> None:
     n = 3
     mc, shards, params, eval_fn = figure_setup()
     u, d = mc.num_workers, mc.dim
@@ -49,9 +56,20 @@ def main(rounds: int = 120, eval_every: int = 10) -> None:
     batches = FederatedSampler(shards, mc.batch_per_worker,
                                seed=1).stack_rounds(rounds)
     result = SweepEngine(mlp_loss, SweepSpec.build(cases), eval_fn=eval_fn,
-                         eval_every=eval_every).run(params, batches)
+                         eval_every=eval_every,
+                         grouped_dispatch=(dispatch == "grouped")
+                         ).run(params, batches)
     print_sweep_csv("defenses", result, eval_every)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--dispatch", choices=("grouped", "switch"),
+                    default="grouped",
+                    help="defense-lane dispatch: static grouped partition "
+                         "(default) or the per-lane lax.switch reference")
+    args = ap.parse_args()
+    main(rounds=args.rounds, eval_every=args.eval_every,
+         dispatch=args.dispatch)

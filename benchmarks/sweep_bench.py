@@ -38,19 +38,28 @@ Two aggregate rounds/sec (S*R / wall) numbers per engine:
 
 --defenses additionally benches the defense-code lane axis: one flat-state
 engine per defense family (analog FLOA reference, mean, median, trimmed-mean,
-(multi-)Krum, geometric median) plus the mixed all-families grid, each at
---defense-scenarios lanes x --defense-rounds rounds (its own knobs — the
-screening kernels add sort/pairwise-distance work per round, so the defense
-section is sized explicitly rather than inheriting the headline shape), with
-per-defense cold/warm rounds-per-sec recorded under the JSON's "defenses" key.
+(multi-)Krum, geometric median) plus the mixed all-families grid — under the
+default GROUPED dispatch ("mixed": static lane partition by defense code,
+each family's kernel runs once over its own sub-slab) and the PR-3 per-lane
+lax.switch reference ("mixed_switch": every family computed for every lane) —
+each at --defense-scenarios lanes x --defense-rounds rounds (its own knobs —
+the screening kernels add sort/pairwise-distance work per round, so the
+defense section is sized explicitly rather than inheriting the headline
+shape), with per-defense cold/warm rounds-per-sec recorded under the JSON's
+"defenses" key and the grouped-vs-switch warm speedup at the top level.
 
 Results are printed as CSV and written to a machine-readable JSON
 (--out, default BENCH_sweep.json) so the perf trajectory is tracked across
-PRs; the CI sweep-sharded job uploads it as a workflow artifact.
+PRs; the CI sweep-sharded job uploads it as a workflow artifact AND gates on
+it: --check-against BASELINE.json --tolerance 0.5 compares every fresh warm
+rounds/sec row against the committed baseline and exits non-zero when a row
+drops below baseline * (1 - tolerance) — silent throughput regressions in
+the defense hot path fail the build instead of landing.
 
   PYTHONPATH=src:. python benchmarks/sweep_bench.py [--rounds R] [--scenarios S]
       [--sharded] [--reps N] [--skip-looped] [--defenses]
       [--defense-rounds R] [--defense-scenarios S] [--out BENCH_sweep.json]
+      [--check-against BENCH_sweep.json] [--tolerance 0.5]
 """
 from __future__ import annotations
 
@@ -105,17 +114,21 @@ def defense_grid(mc, family: str, spec, num: int):
 def bench_defenses(mc, shards, params, rounds: int, scenarios: int,
                    reps: int) -> dict:
     """Per-defense-family engine throughput (cold + interleaved best-of warm),
-    plus the mixed grid with every family as lanes of ONE program."""
+    plus the mixed grid with every family as lanes of ONE program — under the
+    default grouped dispatch ("mixed") and the PR-3 per-lane lax.switch
+    reference ("mixed_switch"), so BENCH_sweep.json records the grouped-
+    dispatch speedup on the grid where it matters."""
     batches = FederatedSampler(shards, mc.batch_per_worker,
                                seed=1).stack_rounds(rounds)
-    grids = [(name, defense_grid(mc, name, spec, scenarios))
+    grids = [(name, defense_grid(mc, name, spec, scenarios), {})
              for name, spec in DEFENSE_FAMILIES]
-    mixed = [c for _, cases in grids for c in cases[:max(1, scenarios // 2)]]
-    grids.append(("mixed", mixed))
+    mixed = [c for _, cases, _ in grids for c in cases[:max(1, scenarios // 2)]]
+    grids.append(("mixed", mixed, {}))
+    grids.append(("mixed_switch", mixed, dict(grouped_dispatch=False)))
 
     cold, runners = {}, []
-    for name, cases in grids:
-        engine = SweepEngine(mlp_loss, SweepSpec.build(cases))
+    for name, cases, kw in grids:
+        engine = SweepEngine(mlp_loss, SweepSpec.build(cases), **kw)
         run_once = (lambda e=engine: e.run(params, batches))
         t0 = time.perf_counter()
         run_once()
@@ -144,6 +157,53 @@ def bench_defenses(mc, shards, params, rounds: int, scenarios: int,
     return out
 
 
+def check_regressions(fresh: dict, baseline: dict,
+                      tolerance: float) -> (list, list):
+    """Per-row warm-throughput regression gate (the CI perf check).
+
+    Compares fresh warm rounds/sec against a committed baseline record for
+    every engine and defense row present in BOTH; a row fails when
+
+        fresh_warm < baseline_warm * (1 - tolerance)
+
+    (tolerance is generous — CI boxes are shared and the committed baseline
+    may come from different hardware; the gate catches structural collapses
+    like the grouped dispatch silently falling back to the switch path, not
+    single-digit noise).  Rows whose shape parameters differ between the
+    records are skipped, not failed.  Returns (failures, notes).
+    """
+    fails, notes = [], []
+
+    def gate(section, name, f_row, b_row):
+        f_w, b_w = f_row["warm_rounds_per_sec"], b_row["warm_rounds_per_sec"]
+        floor = b_w * (1.0 - tolerance)
+        if f_w < floor:
+            fails.append(f"{section}/{name}: warm {f_w:.1f} r/s < floor "
+                         f"{floor:.1f} (baseline {b_w:.1f}, "
+                         f"tolerance {tolerance})")
+
+    if all(fresh.get(k) == baseline.get(k) for k in ("scenarios", "rounds")):
+        for name, b_row in (baseline.get("engines") or {}).items():
+            f_row = (fresh.get("engines") or {}).get(name)
+            if f_row is None:
+                notes.append(f"engines/{name}: not in fresh run, skipped")
+            else:
+                gate("engines", name, f_row, b_row)
+    else:
+        notes.append("engine rows skipped: scenarios/rounds differ from "
+                     "baseline")
+    for name, b_row in (baseline.get("defenses") or {}).items():
+        f_row = (fresh.get("defenses") or {}).get(name)
+        if f_row is None:
+            notes.append(f"defenses/{name}: not in fresh run, skipped")
+        elif (f_row.get("lanes"), f_row.get("rounds")) != (
+                b_row.get("lanes"), b_row.get("rounds")):
+            notes.append(f"defenses/{name}: lane/round shape differs, skipped")
+        else:
+            gate("defenses", name, f_row, b_row)
+    return fails, notes
+
+
 def grid(num: int, rounds: int):
     """CI/BEV x attacker-count grid, fig-4 style, cycled to `num` lanes."""
     cells = [(pol, n) for n in (0, 1, 2, 3, 4)
@@ -159,7 +219,14 @@ def grid(num: int, rounds: int):
 def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
          reps: int = 3, skip_looped: bool = False, defenses: bool = False,
          defense_rounds: int = 10, defense_scenarios: int = 6,
-         out_path: str = "BENCH_sweep.json") -> dict:
+         out_path: str = "BENCH_sweep.json",
+         check_against: str = "", tolerance: float = 0.5) -> dict:
+    base_record = None
+    if check_against:
+        # Load BEFORE running: --out may point at the same file (the CI job
+        # regenerates the committed BENCH_sweep.json it gates against).
+        with open(check_against) as f:
+            base_record = json.load(f)
     mc, shards, params, _ = figure_setup()
     exps = grid(scenarios, rounds)
     cfgs = [experiment_floa(e, mc) for e in exps]
@@ -277,6 +344,30 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
     if defenses:
         record["defenses"] = bench_defenses(
             mc, shards, params, defense_rounds, defense_scenarios, reps)
+        d = record["defenses"]
+        if "mixed" in d and "mixed_switch" in d:
+            # The tentpole number: grouped dispatch vs the per-lane switch
+            # on the mixed all-families grid.
+            record["mixed_grouped_vs_switch_warm_speedup"] = round(
+                d["mixed"]["warm_rounds_per_sec"]
+                / d["mixed_switch"]["warm_rounds_per_sec"], 3)
+            print(f"# mixed grid grouped vs switch warm speedup: "
+                  f"{record['mixed_grouped_vs_switch_warm_speedup']:.2f}x")
+    # Gate BEFORE writing --out so the persisted record (the CI artifact)
+    # carries the regression verdict, not just the raw numbers.
+    if base_record is not None:
+        fails, notes = check_regressions(record, base_record, tolerance)
+        for n in notes:
+            print(f"# check: {n}")
+        if fails:
+            print(f"# PERF REGRESSION vs {check_against} "
+                  f"(tolerance {tolerance}):")
+            for msg in fails:
+                print(f"#   {msg}")
+            record["regressions"] = fails
+        else:
+            print(f"# perf check vs {check_against}: OK "
+                  f"(tolerance {tolerance})")
     if out_path:
         with open(out_path, "w") as f:
             json.dump(record, f, indent=2)
@@ -305,8 +396,20 @@ if __name__ == "__main__":
                     help="lanes per defense-family engine (--defenses)")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="machine-readable output path ('' to disable)")
+    ap.add_argument("--check-against", default="",
+                    help="baseline BENCH_sweep.json to gate against: exits "
+                         "non-zero if any engine/defense row's fresh warm "
+                         "rounds/sec falls below baseline * (1 - tolerance)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional warm-throughput drop vs the "
+                         "--check-against baseline (generous by default: "
+                         "shared CI runners are noisy)")
     args = ap.parse_args()
-    main(rounds=args.rounds, scenarios=args.scenarios, sharded=args.sharded,
-         reps=args.reps, skip_looped=args.skip_looped, defenses=args.defenses,
-         defense_rounds=args.defense_rounds,
-         defense_scenarios=args.defense_scenarios, out_path=args.out)
+    rec = main(rounds=args.rounds, scenarios=args.scenarios,
+               sharded=args.sharded, reps=args.reps,
+               skip_looped=args.skip_looped, defenses=args.defenses,
+               defense_rounds=args.defense_rounds,
+               defense_scenarios=args.defense_scenarios, out_path=args.out,
+               check_against=args.check_against, tolerance=args.tolerance)
+    if rec.get("regressions"):
+        raise SystemExit(1)

@@ -16,7 +16,10 @@ between the OTA `floa_step` combine and a screening defense on the same
 compile, one dispatch.  Zero per-defense programs.
 
   PYTHONPATH=src python examples/byzantine_showdown.py
+  REPRO_SMOKE=1 PYTHONPATH=src python examples/byzantine_showdown.py  # tiny CI
 """
+import os
+
 import jax
 
 jax.config.update("jax_threefry_partitionable", True)
@@ -33,7 +36,12 @@ from repro.data import FederatedSampler, make_dataset, worker_split
 from repro.fl import ScenarioCase, SweepSpec, run_sweep
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 
-ROUNDS = 100
+# Smoke mode (CI): the same policy x defense x attacker-count grid — every
+# defense family, mixed with the analog lanes, through the grouped dispatch —
+# on the tiny config with a handful of rounds.
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
+ROUNDS = 6 if SMOKE else 100
 NS = [0, 1, 3, 4]
 
 DIGITAL = [
@@ -48,7 +56,7 @@ DIGITAL = [
 
 
 def setup():
-    mc = PAPER_MLP.full()
+    mc = PAPER_MLP.smoke() if SMOKE else PAPER_MLP.full()
     x, y = make_dataset(mc.train_samples, seed=0)
     xt, yt = make_dataset(mc.test_samples, seed=99)
     return (mc, worker_split(x, y, mc.num_workers),

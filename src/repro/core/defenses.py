@@ -62,13 +62,38 @@ def _flatten_u(grads_u):
 
 # --------------------------------------------------------- flat [U, D] kernels
 
+# Below this flat size (or off-TPU, where Pallas only interprets) jnp.sort's
+# generic lowering is fine; above it the unrolled odd-even transposition
+# network (kernels/defense_sort.py) sorts the [U, TILE_D] block in one VMEM
+# pass — U is tiny and static, which is the whole trick.
+SORT_KERNEL_MIN_D = 1 << 14
+
+
+def sorted_columns(flat: Array, use_kernel: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> Array:
+    """Ascending per-coordinate sort over the worker axis — the screening
+    primitive coordinate-median and trimmed-mean share.  Routed to the Pallas
+    sorting-network kernel on TPU at large D (same routing contract as
+    `core.aggregation.batched_floa_combine`), `jnp.sort` elsewhere."""
+    if use_kernel is None:
+        use_kernel = (jax.default_backend() == "tpu"
+                      and flat.shape[-1] >= SORT_KERNEL_MIN_D)
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.sort_columns(flat, interpret=interpret)
+    return jnp.sort(flat, axis=0)
+
 
 def flat_mean(flat: Array) -> Array:
     return jnp.mean(flat, axis=0)
 
 
 def flat_median(flat: Array) -> Array:
-    return jnp.median(flat, axis=0)
+    # (srt[(u-1)//2] + srt[u//2]) / 2 == jnp.median: the middle element for
+    # odd U ((x + x) / 2 is exact), the two-middle average for even U.
+    u = flat.shape[0]
+    srt = sorted_columns(flat)
+    return (srt[(u - 1) // 2] + srt[u // 2]) / 2
 
 
 def flat_trimmed_mean(flat: Array, trim) -> Array:
@@ -83,7 +108,7 @@ def flat_trimmed_mean(flat: Array, trim) -> Array:
     if isinstance(trim, (int, np.integer)) and not 0 <= 2 * int(trim) < u:
         raise ValueError(
             f"trimmed_mean trim={trim} invalid for U={u}: need 0 <= 2*trim < U")
-    srt = jnp.sort(flat, axis=0)
+    srt = sorted_columns(flat)
     idx = jnp.arange(u)
     keep = (idx >= trim) & (idx < u - trim)
     kept = jnp.sum(jnp.where(keep[:, None], srt, 0.0), axis=0)
@@ -183,6 +208,23 @@ def make_flat_defense_selector(codes: Optional[Sequence[int]] = None,
                               (flat, trim, num_byzantine, multi))
 
     return select
+
+
+def make_group_defense_kernel(code: int, gm_iters: int = 8) -> Callable:
+    """Static single-family dispatch for a grouped lane partition
+    (`scenario.build_lane_groups`): `code` is a concrete Python int, so the
+    returned fn(flat [S_g, U, D], trim, f, multi each [S_g]) -> [S_g, D] is
+    ONE family's kernel vmapped over its contiguous group — no `lax.switch`,
+    no other family traced.  Per-lane math is identical to the switch
+    selector's branch for `code` (same `_FLAT_KERNELS_BY_CODE` entry), which
+    is what makes grouped == switch dispatch exact."""
+    fn = functools.partial(_FLAT_KERNELS_BY_CODE[int(code)], it=gm_iters)
+
+    def apply(flat, trim, num_byzantine, multi):
+        return jax.vmap(lambda f, t, nb, m: fn((f, t, nb, m)))(
+            flat, trim, num_byzantine, multi)
+
+    return apply
 
 
 # ----------------------------------------------------------- pytree wrappers

@@ -208,6 +208,97 @@ def stack(params: Tuple[ScenarioParams, ...]) -> ScenarioParams:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
 
 
+@dataclasses.dataclass(frozen=True)
+class LaneGroups:
+    """Static partition of a sweep's lane axis by defense code.
+
+    Defense codes are concrete config (DefenseSpec / ScenarioParams.defense is
+    filled from Python ints), so the partition is known at ENGINE BUILD time —
+    the grouped dispatch in fl/sweep.py uses it to run each defense family's
+    kernel once over a contiguous sub-slab instead of paying every family for
+    every lane under a vmapped `lax.switch`.
+
+    The execution order is shard-uniform: each group is ghost-padded to a
+    multiple of `shards` (replicating its LAST member, the same trick as
+    `pad_lanes`) and laid out device-major, so after a shard_map over
+    ("data",) every device's local lane block has the IDENTICAL static group
+    layout `local_slices` — grouped dispatch then works inside the one shared
+    trace with purely static slicing.  shards=1 is the unsharded engine.
+
+      codes         group defense codes, ascending (one entry per group)
+      perm          [S_exec] execution row -> source lane index (ghost rows
+                    repeat their group's last real lane)
+      inverse       [S] source lane -> an execution row carrying its
+                    trajectory (ghosts are replicas, any occurrence is valid)
+      local_slices  ((code, start, end), ...) group boundaries in LOCAL
+                    (per-shard) lane coordinates
+      shards        device count the layout was built for
+    """
+
+    codes: Tuple[int, ...]
+    perm: Tuple[int, ...]
+    inverse: Tuple[int, ...]
+    local_slices: Tuple[Tuple[int, int, int], ...]
+    shards: int
+
+    @property
+    def exec_lanes(self) -> int:
+        return len(self.perm)
+
+    @property
+    def lanes_per_shard(self) -> int:
+        return len(self.perm) // self.shards
+
+    @property
+    def num_ghosts(self) -> int:
+        return len(self.perm) - len(self.inverse)
+
+
+def build_lane_groups(codes, shards: int = 1) -> LaneGroups:
+    """Lane defense codes (concrete ints, lane order) -> LaneGroups.
+
+    Within a group the original lane order is preserved (stable partition);
+    groups are ordered by ascending code so the analog FLOA group (code 0),
+    when present, is always the first slice.
+    """
+    codes = [int(c) for c in codes]
+    assert codes, "empty lane-code list"
+    assert shards >= 1, shards
+    group_codes = sorted(set(codes))
+    padded = {}
+    for c in group_codes:
+        members = [i for i, ci in enumerate(codes) if ci == c]
+        members += [members[-1]] * (-len(members) % shards)
+        padded[c] = members
+    per_shard = {c: len(padded[c]) // shards for c in group_codes}
+    perm = []
+    for d in range(shards):
+        for c in group_codes:
+            k = per_shard[c]
+            perm.extend(padded[c][d * k:(d + 1) * k])
+    first_row = {}
+    for row, lane in enumerate(perm):
+        first_row.setdefault(lane, row)
+    local_slices, off = [], 0
+    for c in group_codes:
+        local_slices.append((c, off, off + per_shard[c]))
+        off += per_shard[c]
+    return LaneGroups(
+        codes=tuple(group_codes), perm=tuple(perm),
+        inverse=tuple(first_row[i] for i in range(len(codes))),
+        local_slices=tuple(local_slices), shards=shards)
+
+
+def permute_lanes(sp, perm):
+    """Gather a lane-stacked pytree (ScenarioParams, key array, flat [S, D]
+    state, ...) into LaneGroups execution order.  `perm` may repeat source
+    lanes (per-group ghost padding), so this subsumes `pad_lanes` for the
+    grouped engine: ghosts replicate a real lane of the SAME defense family
+    and run a real, discarded scenario."""
+    idx = jnp.asarray(perm, dtype=jnp.int32)
+    return jax.tree_util.tree_map(lambda x: x[idx], sp)
+
+
 def pad_lanes(sp, total: int):
     """Pad a lane-stacked pytree (ScenarioParams, key array, flat [S, D]
     state, ...) to `total` lanes by replicating the last real lane.  The

@@ -12,10 +12,16 @@ Python overhead:
 The lane axis also carries a **defense code** (core.scenario.DEFENSE_CODES):
 code 0 lanes take the analog FLOA combine, any other code applies a digital
 screening defense (median / trimmed-mean / (multi-)Krum / geometric median)
-to the same [S, U, D] per-worker gradient slab via a vmapped `lax.switch`
-built over exactly the codes the spec contains — so the full
+to the same [S, U, D] per-worker gradient slab — so the full
 policy x defense x attack x attacker-count showdown grid is ONE compiled
-program, and pure-FLOA sweeps trace no defense kernels at all.  Digital lanes
+program, and pure-FLOA sweeps trace no defense kernels at all.  Dispatch is
+**grouped** by default: defense codes are concrete config, so the engine
+statically partitions the lanes by code (`scenario.build_lane_groups`),
+runs each family's kernel once over its contiguous sub-slab, and scatters
+results back to lane order — a mixed grid pays only for the families it
+contains.  `grouped_dispatch=False` keeps the PR-3 per-lane vmapped
+`lax.switch` (which computes every family present for every lane) as the
+equivalence reference.  Digital lanes
 model Byzantine workers as sign-flipped reported gradients (FLTrainer
 mode="digital" semantics) and ignore the channel; their per-worker slab is
 the gathered all-gather payload the paper's analog scheme avoids.
@@ -53,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -179,6 +186,30 @@ class SweepSpec:
                              if c.defense.is_digital}))
 
     @property
+    def lane_codes(self) -> Tuple[int, ...]:
+        """Per-lane defense codes in lane order — concrete config, which is
+        what makes the grouped dispatch a static (build-time) partition."""
+        return tuple(c.defense.code for c in self.cases)
+
+    # analog_noise / analog_jamming restrict the any_* trace decisions to the
+    # lanes that actually consume the draws: the grouped engine's analog
+    # group.  (A digital lane's channel config is dead weight — under the
+    # switch dispatch its noise row multiplies into a discarded combine, and
+    # an all-zero noise_std row is bitwise inert anyway.)
+    @property
+    def analog_noise(self) -> bool:
+        return any(c.floa.channel.noise_std > 0.0
+                   and c.floa.power.policy != Policy.EF
+                   and not c.defense.is_digital for c in self.cases)
+
+    @property
+    def analog_jamming(self) -> bool:
+        return any(c.floa.attack.attack == AttackType.GAUSSIAN
+                   and c.floa.attack.num_attackers > 0
+                   and c.floa.power.policy != Policy.EF
+                   and not c.defense.is_digital for c in self.cases)
+
+    @property
     def gm_iters(self) -> int:
         its = {c.defense.gm_iters for c in self.cases
                if c.defense.name == "geometric_median"}
@@ -216,6 +247,16 @@ class SweepResult:
                               else float("nan")),
                     grad_norm=float(self.grad_norm[i, t])))
         return out
+
+
+def _digital_flip(flat: Array, sp: SC.ScenarioParams) -> Array:
+    """Digital attackers report -g (the FLTrainer mode="digital" threat
+    model — there is no channel to cheat on): sign-flip Byzantine rows of
+    the [S, U, D] slab.  Shared by the switch and grouped dispatch paths so
+    their per-lane math is identical."""
+    sign = jnp.where((sp.attack != 0)[:, None] & sp.byz_mask,
+                     jnp.float32(-1.0), jnp.float32(1.0))
+    return flat * sign[:, :, None]
 
 
 def stack_params(params, num: int):
@@ -269,12 +310,26 @@ class SweepEngine:
     the lane axis; S is padded up to a multiple of the device count with
     ghost lanes (replicas of the last scenario) that are dropped from the
     returned SweepResult.  Requires flat_state=True.
+
+    grouped_dispatch=True (default) partitions the lanes of a defense-
+    carrying sweep by defense code at BUILD time (codes are concrete config):
+    lanes are gathered into per-family contiguous groups
+    (`scenario.build_lane_groups`), each group's kernel runs once over its
+    [S_g, U, D] sub-slab — the analog group keeps the fused
+    `batched_floa_step` route, digital groups run exactly their own family —
+    and results scatter back to lane order host-side.  A mixed grid thus pays
+    only for the families it contains, where the per-lane `lax.switch`
+    (grouped_dispatch=False, the PR-3 reference path) computes EVERY family
+    present for EVERY lane under vmap.  Under a mesh each group is ghost-
+    padded to a multiple of the device count so every shard traces the same
+    static group layout.  Pure-FLOA sweeps are untouched by the flag.
     """
 
     def __init__(self, loss_fn: Callable, spec: SweepSpec,
                  eval_fn: Optional[Callable] = None, eval_every: int = 1,
                  flat_state: bool = True, mesh: Optional[Mesh] = None,
-                 strict_numerics: bool = False):
+                 strict_numerics: bool = False,
+                 grouped_dispatch: bool = True):
         """eval_every: run eval_fn only on rounds t with t % eval_every == 0
         plus the final round (the FLTrainer.run schedule); other rounds carry
         NaN in the metrics arrays.  eval_every <= 0 means final round only.
@@ -287,16 +342,40 @@ class SweepEngine:
         self.flat_state = flat_state
         self.mesh = mesh
         self.strict_numerics = strict_numerics
+        self.grouped_dispatch = grouped_dispatch
         self._num = len(spec)
         self._u = spec.num_workers
         self._sp = spec.stacked_params()
-        self._pad = 0
+        shards = 1
         if mesh is not None:
             assert flat_state, "mesh-sharded sweeps require the flat-state path"
             assert mesh.axis_names == ("data",), (
                 f'sweep mesh must be 1-D ("data",), got {mesh.axis_names}')
-            self._pad = -self._num % mesh.shape["data"]
-        self._sp_run = SC.pad_lanes(self._sp, self._num + self._pad)
+            shards = mesh.shape["data"]
+        # Grouped dispatch only matters when a screening defense shares the
+        # grid with other families; pure-FLOA sweeps keep the untouched
+        # (unpermuted) fused path regardless of the flag.
+        self._groups = (SC.build_lane_groups(spec.lane_codes, shards)
+                        if grouped_dispatch and spec.any_digital else None)
+        if self._groups is not None:
+            self._pad = self._groups.exec_lanes - self._num
+            if self._groups.num_ghosts > self._num:
+                # Per-group padding to the device count blew the executed
+                # lane axis up past 2x: every ghost lane runs (discarded)
+                # grads/loss/eval each round, so grouped dispatch can LOSE
+                # to the switch path here — say so instead of silently
+                # inverting the default's advantage.
+                warnings.warn(
+                    f"grouped dispatch executes {self._groups.exec_lanes} "
+                    f"lanes for {self._num} scenarios ({self._groups.num_ghosts}"
+                    f" ghosts: {len(self._groups.codes)} defense-code groups "
+                    f"each padded to a multiple of {shards} devices); with "
+                    f"groups this small relative to the mesh, "
+                    f"grouped_dispatch=False may be faster")
+            self._sp_run = SC.permute_lanes(self._sp, self._groups.perm)
+        else:
+            self._pad = -self._num % shards
+            self._sp_run = SC.pad_lanes(self._sp, self._num + self._pad)
         # The compiled program is built lazily on the first run: the flat
         # path needs the params template (leaf shapes/dtypes) to cache its
         # row unflatten, and that only arrives with params0.
@@ -320,9 +399,7 @@ class SweepEngine:
             self.spec.digital_codes, gm_iters=self.spec.gm_iters)
 
         def apply(gagg_floa, flat, sp: SC.ScenarioParams):
-            sign = jnp.where((sp.attack != 0)[:, None] & sp.byz_mask,
-                             jnp.float32(-1.0), jnp.float32(1.0))
-            flipped = flat * sign[:, :, None]
+            flipped = _digital_flip(flat, sp)
             dig = jax.vmap(selector)(sp.defense, flipped, sp.def_trim,
                                      sp.def_f, sp.def_multi)
             if gagg_floa is None:  # all-digital sweep: no analog leg at all
@@ -330,6 +407,64 @@ class SweepEngine:
             return jnp.where((sp.defense == 0)[:, None], gagg_floa, dig)
 
         return apply
+
+    # ----- grouped dispatch (static lane partition by defense code) -----
+
+    def _digital_group_kernels(self) -> Dict[int, Callable]:
+        """code -> single-family [S_g, U, D] kernel, for each digital group
+        in the partition (codes are concrete build-time config)."""
+        return {code: DEF.make_group_defense_kernel(
+                    code, gm_iters=self.spec.gm_iters)
+                for code, _, _ in self._groups.local_slices
+                if code != SC._FLOA_CODE}
+
+    def _make_analog_group_step(self):
+        """The analog (code 0) group's leg of a grouped round.
+
+        (w_g | None, flat_g, sub_g, sp_g, gbar_i, eps2_i) ->
+        (w_new_g | None, gagg_g): channel draw + power/attack coefficients +
+        receiver noise + OTA combine on the group's [S_g, U, D] sub-slab
+        only.  With w_g given and no jamming lane in the spec the combine
+        and PS update stay fused (`batched_floa_step`) — the grouped engine
+        restores the pure-FLOA fast route to the analog lanes of MIXED
+        grids, which the switch path's shared two-step route gives up.  The
+        per-lane math is the ungrouped round's exactly (same key-split
+        schedule, same coefficient derivation); only which lanes trace it
+        changes.
+        """
+        any_noise = self.spec.analog_noise
+        any_jam = self.spec.analog_jamming
+
+        def step(wg, fg, sub_g, spg, gbar_i, eps2_i):
+            n_g, _, dim = fg.shape
+            gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
+            eps = jnp.sqrt(eps2)
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_g)  # [Sg,3,2]
+            h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], spg)
+            coeff, bias_w, jam_std, noise_std = jax.vmap(
+                SC.scenario_coefficients
+            )(h_abs, spg, gbar, eps2)
+            if any_noise:
+                z = jax.vmap(
+                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                )(ks[:, 1])
+                noise_row = noise_std[:, None] * z
+            else:
+                noise_row = jnp.zeros((n_g, dim), jnp.float32)
+            bias_row = bias_w * gbar
+            if wg is not None and not any_jam:
+                return batched_floa_step(
+                    wg, spg.alpha, coeff, fg, noise_row, bias_row, eps)
+            gagg = batched_floa_combine(coeff, fg, noise_row, bias_row, eps)
+            if any_jam:
+                n2 = jax.vmap(
+                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
+                )(ks[:, 2])
+                gagg = gagg + jam_std[:, None] * n2
+            w_new = None if wg is None else wg - spg.alpha[:, None] * gagg
+            return w_new, gagg
+
+        return step
 
     def _scan_driver(self, one_round, eval_lane, finalize=None):
         """Shared scan-over-rounds driver for both state representations.
@@ -381,6 +516,124 @@ class SweepEngine:
             return state, loss, gn, metrics
 
         return run
+
+    def _make_run_grouped(self, sizes):
+        """Tree-state path with grouped defense dispatch: the per-round
+        structure of `_make_run`, but the [S, U, D] slab is processed as
+        static per-family groups (lanes pre-gathered into LaneGroups
+        execution order) — the analog group's combine and each digital
+        family's kernel trace once over their own contiguous sub-slab, and
+        the per-lane aggregates concatenate back in group order.  No
+        `lax.switch`, no family traced for lanes that don't run it."""
+        loss_fn = self.loss_fn
+        u = self._u
+        strict = self.strict_numerics
+        local_slices = self._groups.local_slices
+        analog_step = self._make_analog_group_step()
+        kernels = self._digital_group_kernels()
+
+        def one_round(params_s, batch, sub_s, sp: SC.ScenarioParams):
+            grads = jax.vmap(
+                lambda p: per_worker_grads(loss_fn, p, batch, u)[0]
+            )(params_s)
+            flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
+            if strict:
+                flat = jax.lax.optimization_barrier(flat)
+            num = flat.shape[0]
+            parts = []
+            for code, start, end in local_slices:
+                sl = slice(start, end)
+                fg = flat[sl]
+                spg = jax.tree_util.tree_map(lambda x: x[sl], sp)
+                if code == SC._FLOA_CODE:
+                    if strict:
+                        gbar_i, eps2_i = jax.vmap(
+                            lambda g: S.flat_scalar_stats(g, sizes))(fg)
+                    else:
+                        grads_g = jax.tree_util.tree_map(
+                            lambda x: x[sl], grads)
+                        gbar_i, eps2_i = jax.vmap(
+                            S.per_worker_scalar_stats)(grads_g)
+                    _, gagg_g = analog_step(None, fg, sub_s[sl], spg,
+                                            gbar_i, eps2_i)
+                else:
+                    gagg_g = kernels[code](_digital_flip(fg, spg),
+                                           spg.def_trim, spg.def_f,
+                                           spg.def_multi)
+                parts.append(gagg_g)
+            gagg_flat = jnp.concatenate(parts, axis=0)
+
+            gagg = unflatten(gagg_flat)
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: p - (sp.alpha.reshape((num,) + (1,) * (p.ndim - 1))
+                                  * g).astype(p.dtype),
+                params_s, gagg)
+            gn = jnp.sqrt(jnp.sum(jnp.square(gagg_flat), axis=-1))
+            loss = jax.vmap(lambda p: loss_fn(p, batch))(new_params)
+            return new_params, loss, gn
+
+        return self._scan_driver(one_round, self.eval_fn)
+
+    def _make_run_flat_grouped(self, unflatten_row, sizes):
+        """Flat-state warm path with grouped defense dispatch.
+
+        The carry stays one [S, D] matrix; per round, each group's lanes
+        take exactly their family's compute on a contiguous sub-slab of the
+        [S, U, D] gradient block — the analog group keeps the fused
+        `batched_floa_step`, digital groups run their kernel and the plain
+        PS update — and the per-group (w_new, gagg) slices concatenate back
+        in the (static) group order.  Under a mesh the group layout is
+        shard-uniform (`build_lane_groups(shards=...)`), so the same static
+        slicing serves every device of the shard_mapped scan.
+        """
+        loss_fn, eval_fn = self.loss_fn, self.eval_fn
+        u = self._u
+        strict = self.strict_numerics
+        local_slices = self._groups.local_slices
+        has_analog = any(c == SC._FLOA_CODE for c, _, _ in local_slices)
+        analog_step = self._make_analog_group_step()
+        kernels = self._digital_group_kernels()
+
+        def flat_loss(w_row, batch):
+            return loss_fn(unflatten_row(w_row), batch)
+
+        def one_round(w, batch, sub_s, sp: SC.ScenarioParams):
+            grads = jax.vmap(
+                lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
+            )(w)  # [S, U, D]
+            if strict and has_analog:
+                grads = jax.lax.optimization_barrier(grads)
+            w_parts, g_parts = [], []
+            for code, start, end in local_slices:
+                sl = slice(start, end)
+                wg, fg = w[sl], grads[sl]
+                spg = jax.tree_util.tree_map(lambda x: x[sl], sp)
+                if code == SC._FLOA_CODE:
+                    if strict:
+                        gbar_i, eps2_i = jax.vmap(
+                            lambda g: S.flat_scalar_stats(g, sizes))(fg)
+                    else:
+                        gbar_i, eps2_i = jax.vmap(
+                            lambda g: S.flat_scalar_stats(g))(fg)
+                    w_new_g, gagg_g = analog_step(wg, fg, sub_s[sl], spg,
+                                                  gbar_i, eps2_i)
+                else:
+                    gagg_g = kernels[code](_digital_flip(fg, spg),
+                                           spg.def_trim, spg.def_f,
+                                           spg.def_multi)
+                    w_new_g = wg - spg.alpha[:, None] * gagg_g
+                w_parts.append(w_new_g)
+                g_parts.append(gagg_g)
+            w_new = jnp.concatenate(w_parts, axis=0)
+            gagg = jnp.concatenate(g_parts, axis=0)
+            gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
+            loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
+            return w_new, loss, gn
+
+        eval_lane = (None if eval_fn is None
+                     else lambda wr: eval_fn(unflatten_row(wr)))
+        return self._scan_driver(one_round, eval_lane,
+                                 finalize=jax.vmap(unflatten_row))
 
     def _make_run(self, sizes):
         """PR-1 tree-state path: params stay a pytree; every round pays the
@@ -576,9 +829,12 @@ class SweepEngine:
         self._template = template
         unflatten_row, sizes = make_row_unflatten(template)
         if self.flat_state:
-            run = self._make_run_flat(unflatten_row, sizes)
+            run = (self._make_run_flat_grouped(unflatten_row, sizes)
+                   if self._groups is not None
+                   else self._make_run_flat(unflatten_row, sizes))
         else:
-            run = self._make_run(sizes)
+            run = (self._make_run_grouped(sizes)
+                   if self._groups is not None else self._make_run(sizes))
         if self.mesh is not None:
             lane, rep = P("data"), P()
             # Prefix specs: lane axis 0 on state/keys/ScenarioParams, lane
@@ -611,10 +867,17 @@ class SweepEngine:
         num, total = self._num, self._num + self._pad
         if self.flat_state:
             state, _ = flatten_worker_grads(params0, batch_dims=1)  # [S, D] f32
-            state = SC.pad_lanes(state, total)
         else:
             state = params0
-        keys = SC.pad_lanes(keys, total)
+        if self._groups is not None:
+            # Grouped dispatch: gather lanes (and their per-group ghosts)
+            # into LaneGroups execution order; results un-permute below.
+            state = SC.permute_lanes(state, self._groups.perm)
+            keys = SC.permute_lanes(keys, self._groups.perm)
+        else:
+            if self.flat_state:
+                state = SC.pad_lanes(state, total)
+            keys = SC.pad_lanes(keys, total)
         sp = self._sp_run
 
         if self.mesh is not None:
@@ -629,12 +892,25 @@ class SweepEngine:
 
         params, loss, gn, metrics = self._run_jit(state, keys, batches, sp)
 
-        def lanes(x):  # scan gives [R, S(+ghosts)]: drop the ghost lanes
-            return np.asarray(x).T[:num]
+        if self._groups is not None:
+            # Scatter back to lane order: pick each source lane's execution
+            # row (ghosts are exact replicas; the first occurrence serves).
+            inv = np.asarray(self._groups.inverse)
+            inv_j = jnp.asarray(inv)
+
+            def lanes(x):  # scan gives [R, S_exec]
+                return np.asarray(x).T[inv]
+
+            params_out = jax.tree_util.tree_map(lambda x: x[inv_j], params)
+        else:
+            def lanes(x):  # scan gives [R, S(+ghosts)]: drop the ghost lanes
+                return np.asarray(x).T[:num]
+
+            params_out = jax.tree_util.tree_map(lambda x: x[:num], params)
 
         return SweepResult(
             names=self.spec.names,
-            params=jax.tree_util.tree_map(lambda x: x[:num], params),
+            params=params_out,
             loss=lanes(loss),
             grad_norm=lanes(gn),
             metrics={k: lanes(v) for k, v in metrics.items()},

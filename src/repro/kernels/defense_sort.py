@@ -1,0 +1,100 @@
+"""Pallas coordinate-sort kernel for the digital screening defenses.
+
+Coordinate-wise median and trimmed-mean both reduce a sorted-per-coordinate
+view of the gathered [U, D] gradient slab (core/defenses.py).  `jnp.sort`
+along the worker axis lowers to a generic variadic sort that moves the slab
+through HBM more than once at large D; but U is tiny (the paper runs U=10)
+and STATIC, so the sort is better expressed as a fixed odd-even transposition
+network over the worker axis — U compare-exchange passes of `minimum`/
+`maximum` on [TILE_D]-wide rows, fully unrolled at trace time, one pass over
+the slab in VMEM.
+
+Shape contract and tiling mirror `floa_aggregate`:
+
+  sort_columns  [U, D] -> [U, D]  ascending along axis 0
+
+Grid is (D // TILE_D); the [U, TILE_D] block lives in VMEM (U<=32,
+TILE_D=2048, f32: 256 KiB — comfortably inside the VMEM budget).  D is
+padded to the tile once, in the un-jitted public wrapper, before the jitted
+pallas_call core (columns sort independently, so zero-padded columns cannot
+perturb real ones; see the D-padding recursion note in floa_aggregate.py).
+The sweep engine's defense kernels call this per lane under `jax.vmap`
+(grouped dispatch vmaps one family over its lane group); Pallas's batching
+rule lifts the vmap into a leading grid dimension, so there is no separate
+hand-written [S, U, D] kernel to keep in lockstep — the vmap route is
+pinned against the batched `jnp.sort` oracle in tests/test_defense_sort.py.
+
+The network uses `jnp.minimum`/`jnp.maximum` compare-exchanges: on finite
+inputs it agrees with the `jnp.sort` oracle exactly (ties keep values, not
+worker identity — coordinate-wise reductions never look at identity).  NaN
+ordering is NOT the oracle's (sort places NaNs last; min/max propagate them
+everywhere) — gradient slabs are finite, and the oracle contract in
+tests/test_defense_sort.py is pinned on finite values only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+TILE_D = 2048
+
+
+def _pad_last(x: Array, pad: int) -> Array:
+    """Zero-pad the last axis by `pad` entries (no-op when pad == 0)."""
+    if not pad:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
+
+
+def _odd_even_sort(x: Array) -> Array:
+    """Odd-even transposition network over axis 0 of a [U, T] block.
+
+    U passes of adjacent compare-exchanges (even pairs, then odd pairs,
+    alternating) sort any input of length U — the classic transposition-sort
+    bound.  U is static, so the whole network unrolls at trace time into
+    O(U^2 / 2) vectorized min/max pairs on [1, T] rows; there is no data-
+    dependent control flow, which is exactly what the VPU wants.
+    """
+    u = x.shape[0]
+    rows = [x[i:i + 1] for i in range(u)]  # [1, T] each (2-D for Mosaic)
+    for p in range(u):
+        for i in range(p % 2, u - 1, 2):
+            lo = jnp.minimum(rows[i], rows[i + 1])
+            hi = jnp.maximum(rows[i], rows[i + 1])
+            rows[i], rows[i + 1] = lo, hi
+    return jnp.concatenate(rows, axis=0) if u > 1 else rows[0]
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[:].astype(jnp.float32)                # [U, TILE_D]
+    o_ref[:] = _odd_even_sort(x).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
+def _sort_columns_core(x: Array, interpret: bool, tile_d: int) -> Array:
+    u, d = x.shape
+    assert d % tile_d == 0, "core requires pre-padded D (see public wrapper)"
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // tile_d,),
+        in_specs=[pl.BlockSpec((u, tile_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((u, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((u, d), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def sort_columns(x: Array, interpret: bool = False,
+                 tile_d: int = TILE_D) -> Array:
+    """[U, D] -> [U, D], ascending along the worker axis (axis 0)."""
+    u, d = x.shape
+    pad = -d % tile_d  # single pad before the jitted core
+    out = _sort_columns_core(_pad_last(x, pad), interpret=interpret,
+                             tile_d=tile_d)
+    return out[:, :d] if pad else out

@@ -15,6 +15,7 @@ from repro.kernels.floa_aggregate import (
     floa_aggregate_batched as _floa_aggregate_batched,
 )
 from repro.kernels.floa_aggregate import floa_step_batched as _floa_step_batched
+from repro.kernels.defense_sort import sort_columns as _sort_columns
 from repro.kernels.grad_stats import grad_stats as _grad_stats
 
 Array = jax.Array
@@ -46,6 +47,14 @@ def floa_step_batched(w, coeffs, grads, noise, bias, eps, alpha,
                               interpret=interpret)
 
 
+def sort_columns(x, interpret=None) -> Array:
+    """[U, D] ascending sort along the worker axis (odd-even network).
+    Batched use goes through `jax.vmap` (Pallas lifts it into a leading
+    grid dimension); `sort_columns_batched_ref` is that route's oracle."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _sort_columns(x, interpret=interpret)
+
+
 def grad_stats(grads, interpret=None) -> Array:
     interpret = _interpret_default() if interpret is None else interpret
     return _grad_stats(grads, interpret=interpret)
@@ -60,5 +69,7 @@ def decode_attention(q, k, v, pos, interpret=None) -> Array:
 floa_aggregate_ref = ref.floa_aggregate_ref
 floa_aggregate_batched_ref = ref.floa_aggregate_batched_ref
 floa_step_batched_ref = ref.floa_step_batched_ref
+sort_columns_ref = ref.sort_columns_ref
+sort_columns_batched_ref = ref.sort_columns_batched_ref
 grad_stats_ref = ref.grad_stats_ref
 decode_attention_ref = ref.decode_attention_ref

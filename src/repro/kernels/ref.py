@@ -47,6 +47,19 @@ def floa_step_batched_ref(w: Array, coeffs: Array, grads: Array, noise: Array,
     return w_new.astype(w.dtype), gagg
 
 
+def sort_columns_ref(x: Array) -> Array:
+    """[U, D] -> [U, D] ascending along the worker axis (axis 0) — the
+    oracle for the odd-even transposition-network kernel (finite inputs;
+    the network's min/max compare-exchanges do not reproduce sort's
+    NaNs-last ordering)."""
+    return jnp.sort(x, axis=0)
+
+
+def sort_columns_batched_ref(x: Array) -> Array:
+    """[S, U, D] -> [S, U, D] ascending along the worker axis (axis 1)."""
+    return jnp.sort(x, axis=1)
+
+
 def grad_stats_ref(grads: Array) -> Array:
     """Per-worker [U, 2] f32: (sum_d g, sum_d g^2) — the eq. (3) stats."""
     g = grads.astype(jnp.float32)

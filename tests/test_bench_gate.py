@@ -1,0 +1,62 @@
+"""The sweep-bench perf-regression gate (`sweep_bench.check_regressions`)
+is pure record-vs-record logic, so its contract is pinned here without
+running the bench: rows regress only below baseline * (1 - tolerance),
+shape-mismatched rows are skipped (reported), and missing rows never fail.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+pytest.importorskip("benchmarks.sweep_bench")
+from benchmarks.sweep_bench import check_regressions
+
+
+def _rec(engines=None, defenses=None, scenarios=16, rounds=25):
+    rec = {"scenarios": scenarios, "rounds": rounds}
+    if engines:
+        rec["engines"] = {k: {"warm_rounds_per_sec": v}
+                          for k, v in engines.items()}
+    if defenses:
+        rec["defenses"] = {k: {"warm_rounds_per_sec": v, "lanes": 6,
+                               "rounds": 10} for k, v in defenses.items()}
+    return rec
+
+
+def test_gate_passes_within_tolerance():
+    base = _rec(engines={"flat": 100.0}, defenses={"mixed": 40.0})
+    fresh = _rec(engines={"flat": 51.0}, defenses={"mixed": 20.1})
+    fails, notes = check_regressions(fresh, base, tolerance=0.5)
+    assert fails == [] and notes == []
+
+
+def test_gate_fails_below_floor():
+    base = _rec(engines={"flat": 100.0}, defenses={"mixed": 40.0})
+    fresh = _rec(engines={"flat": 49.0}, defenses={"mixed": 41.0})
+    fails, _ = check_regressions(fresh, base, tolerance=0.5)
+    assert len(fails) == 1 and "engines/flat" in fails[0]
+
+
+def test_gate_skips_shape_mismatches():
+    base = _rec(engines={"flat": 100.0}, defenses={"mixed": 40.0})
+    # different headline grid shape: engine rows must be skipped, not failed
+    fresh = _rec(engines={"flat": 1.0}, defenses={"mixed": 40.0}, scenarios=4)
+    fails, notes = check_regressions(fresh, base, tolerance=0.5)
+    assert fails == [] and any("engine rows skipped" in n for n in notes)
+    # per-defense lane/round mismatch: that row is skipped
+    fresh2 = _rec(engines={"flat": 100.0}, defenses={"mixed": 1.0})
+    fresh2["defenses"]["mixed"]["lanes"] = 3
+    fails2, notes2 = check_regressions(fresh2, base, tolerance=0.5)
+    assert fails2 == [] and any("defenses/mixed" in n for n in notes2)
+
+
+def test_gate_skips_missing_rows():
+    base = _rec(engines={"flat": 100.0, "looped": 10.0},
+                defenses={"mixed": 40.0, "krum": 70.0})
+    fresh = _rec(engines={"flat": 100.0}, defenses={"mixed": 40.0})
+    fails, notes = check_regressions(fresh, base, tolerance=0.5)
+    assert fails == []
+    assert any("engines/looped" in n for n in notes)
+    assert any("defenses/krum" in n for n in notes)

@@ -354,6 +354,120 @@ def test_all_digital_shortcut_matches_mixed_lanes(flat_state):
                                       err_msg=case.name)
 
 
+# ----------------------------------------------- grouped vs switch dispatch
+
+
+def test_lane_groups_metadata():
+    """build_lane_groups: stable within-group order, ascending group codes,
+    per-group ghost padding to the shard count, and a perm/inverse pair that
+    round-trips every real lane."""
+    from repro.core.scenario import build_lane_groups
+
+    codes = [0, 4, 2, 0, 2, 4, 4]
+    g = build_lane_groups(codes, shards=1)
+    assert g.codes == (0, 2, 4)
+    assert g.perm == (0, 3, 2, 4, 1, 5, 6)  # stable partition, no ghosts
+    assert g.num_ghosts == 0
+    assert [g.perm[r] for _, s, e in g.local_slices for r in range(s, e)
+            ] == list(g.perm)
+    for i, row in enumerate(g.inverse):
+        assert g.perm[row] == i
+
+    g2 = build_lane_groups(codes, shards=2)
+    assert g2.exec_lanes % 2 == 0 and g2.lanes_per_shard * 2 == g2.exec_lanes
+    # group sizes 2/2/3 pad to 2/2/4 on 2 shards -> one ghost
+    assert g2.num_ghosts == 1
+    # every shard's local block carries the IDENTICAL static group layout,
+    # and ghosts replicate a lane of the SAME group (valid family inputs)
+    for code, s, e in g2.local_slices:
+        for shard in range(2):
+            off = shard * g2.lanes_per_shard
+            assert all(codes[i] == code for i in g2.perm[off + s:off + e])
+    for i, row in enumerate(g2.inverse):
+        assert g2.perm[row] == i
+
+
+@pytest.mark.parametrize("flat_state", [True, False])
+def test_grouped_matches_switch_dispatch(flat_state):
+    """The grouped (default) dispatch must reproduce the PR-3 per-lane
+    lax.switch path (grouped_dispatch=False) lane-for-lane on the mixed
+    showdown grid — the acceptance contract for the static lane partition."""
+    loss, params, dim, batches = _tiny_problem(rounds=6)
+    spec = SweepSpec.build(_showdown_cases(dim))
+    grouped = SweepEngine(loss, spec, flat_state=flat_state).run(
+        params, batches)
+    assert SweepEngine(loss, spec, flat_state=flat_state)._groups is not None
+    switch = SweepEngine(loss, spec, flat_state=flat_state,
+                         grouped_dispatch=False).run(params, batches)
+    np.testing.assert_allclose(grouped.loss, switch.loss,
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(grouped.grad_norm, switch.grad_norm,
+                               rtol=1e-5, atol=1e-6)
+    for k in switch.params:
+        np.testing.assert_allclose(np.asarray(grouped.params[k]),
+                                   np.asarray(switch.params[k]),
+                                   rtol=1e-6, atol=1e-7, err_msg=k)
+
+
+@pytest.mark.parametrize("flat_state", [True, False])
+def test_grouped_matches_switch_bitwise_strict(flat_state):
+    """Under strict_numerics the grouped rewrite is BITWISE identical to the
+    switch path: per-lane math is shared (same kernels, same key-split
+    schedule), only which lanes trace which family changes."""
+    loss, params, dim, batches = _tiny_problem(rounds=6)
+    spec = SweepSpec.build(_showdown_cases(dim))
+    grouped = SweepEngine(loss, spec, flat_state=flat_state,
+                          strict_numerics=True).run(params, batches)
+    switch = SweepEngine(loss, spec, flat_state=flat_state,
+                         grouped_dispatch=False,
+                         strict_numerics=True).run(params, batches)
+    np.testing.assert_array_equal(grouped.loss, switch.loss)
+    np.testing.assert_array_equal(grouped.grad_norm, switch.grad_norm)
+    for k in switch.params:
+        np.testing.assert_array_equal(np.asarray(grouped.params[k]),
+                                      np.asarray(switch.params[k]))
+
+
+def test_grouped_all_digital_and_analog_fused_route():
+    """Grouping engages for all-digital sweeps (several families, no analog
+    group) and leaves pure-FLOA sweeps untouched (no permutation at all)."""
+    loss, params, dim, batches = _tiny_problem(rounds=4)
+    digital = [c for c in _showdown_cases(dim) if c.defense.is_digital]
+    eng = SweepEngine(loss, SweepSpec.build(digital))
+    assert eng._groups is not None
+    assert all(code != 0 for code, _, _ in eng._groups.local_slices)
+    grouped = eng.run(params, batches)
+    switch = SweepEngine(loss, SweepSpec.build(digital),
+                         grouped_dispatch=False).run(params, batches)
+    np.testing.assert_array_equal(grouped.loss, switch.loss)
+    # pure-FLOA: the defense axis (and the grouped flag) must not touch it
+    floa_cases = [ScenarioCase("bev", _floa(dim, Policy.BEV, 1), 0.05, seed=5)]
+    eng2 = SweepEngine(loss, SweepSpec.build(floa_cases))
+    assert eng2._groups is None
+
+
+def test_grouped_preserves_lane_order_and_logs():
+    """SweepResult rows come back in SPEC order (the engine permutes lanes
+    into group order internally and un-permutes host-side)."""
+    loss, params, dim, batches = _tiny_problem(rounds=5)
+    cases = _showdown_cases(dim)
+    spec = SweepSpec.build(cases)
+    res = SweepEngine(loss, spec).run(params, batches)
+    assert res.names == spec.names
+    # per-lane check against the standalone digital baseline for a lane in
+    # the MIDDLE of the grid (order bugs would misattribute trajectories)
+    i = res.index("krum")
+    case = cases[i]
+    tr = FLTrainer(loss_fn=loss, floa=case.floa, alpha=case.alpha,
+                   mode="digital", defense="krum",
+                   defense_kwargs=dict(num_byzantine=1, multi=1))
+    _, logs = tr.run_scan(dict(params), batches,
+                          jax.random.PRNGKey(case.seed), eval_every=1)
+    np.testing.assert_allclose(res.loss[i],
+                               np.asarray([l.loss for l in logs]),
+                               rtol=1e-6, atol=1e-7)
+
+
 def test_gm_iters_must_agree_across_lanes():
     loss, params, dim, batches = _tiny_problem(rounds=2)
     with pytest.raises(ValueError, match="gm_iters"):

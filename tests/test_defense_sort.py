@@ -1,0 +1,123 @@
+"""Coordinate-sort kernel contract: the odd-even transposition network
+(kernels/defense_sort.py, interpret mode) must reproduce the `jnp.sort`
+oracle exactly on finite inputs — it is a pure rewrite of an already-pinned
+numerical path (the median / trimmed-mean screening sort), so the bar is
+array_equal, not allclose.
+
+Fixed-shape sweeps run everywhere; the hypothesis property suite (odd/even
+U, D not a multiple of the tile, duplicated values) runs wherever the test
+extra is installed (CI tier-1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import defenses as DEF
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("u", [1, 2, 7, 10, 16])
+@pytest.mark.parametrize("d", [128, 2048, 2049, 5000])
+def test_sort_columns_matches_oracle(u, d):
+    x = jax.random.normal(jax.random.PRNGKey(u * d), (u, d))
+    got = ops.sort_columns(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ops.sort_columns_ref(x)))
+
+
+@pytest.mark.parametrize("s,u,d", [(1, 4, 300), (3, 10, 2048), (2, 9, 2177)])
+def test_sort_columns_batched_via_vmap_matches_oracle(s, u, d):
+    """The batched [S, U, D] route is jax.vmap over the [U, D] kernel
+    (Pallas lifts the vmap into a leading grid dimension — there is no
+    separate hand-written batched kernel to drift)."""
+    x = jax.random.normal(jax.random.PRNGKey(s + u + d), (s, u, d))
+    got = jax.vmap(lambda m: ops.sort_columns(m, interpret=True))(x)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ops.sort_columns_batched_ref(x)))
+
+
+def test_sort_columns_bf16_roundtrip():
+    """Non-f32 slabs sort in f32 inside the kernel and cast back; bf16
+    values are exactly representable through that round-trip."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (10, 640)).astype(jnp.bfloat16)
+    got = ops.sort_columns(x, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(ops.sort_columns_ref(x),
+                                             np.float32))
+
+
+def test_sort_columns_duplicates_and_presorted():
+    """Ties and already-sorted columns are fixed points of the network."""
+    x = jnp.asarray(np.tile(np.float32([[2.0], [2.0], [-1.0], [2.0]]),
+                            (1, 257)))
+    got = np.asarray(ops.sort_columns(x, interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(ops.sort_columns_ref(x)))
+    srt = ops.sort_columns_ref(jax.random.normal(jax.random.PRNGKey(3),
+                                                 (6, 384)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.sort_columns(srt, interpret=True)), np.asarray(srt))
+
+
+def test_sort_columns_vmaps():
+    """The grouped defense dispatch calls the kernel under vmap over a
+    group's lane axis — Pallas's batching rule must agree with the batched
+    grid kernel and the oracle."""
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 10, 515))
+    v = jax.vmap(lambda m: ops.sort_columns(m, interpret=True))(x)
+    np.testing.assert_array_equal(np.asarray(v),
+                                  np.asarray(ops.sort_columns_batched_ref(x)))
+
+
+def test_sorted_columns_routing_is_overridable():
+    """`defenses.sorted_columns(use_kernel=True, interpret=True)` must hit
+    the kernel path off-TPU (the CI oracle contract) and default to
+    jnp.sort on this backend."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (10, 300))
+    kern = DEF.sorted_columns(x, use_kernel=True, interpret=True)
+    default = DEF.sorted_columns(x)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(default))
+
+
+def test_flat_median_and_trimmed_mean_consume_sorted_slab():
+    """The rewritten median / trimmed-mean must still equal their jnp
+    formulations (odd and even U)."""
+    for u in (5, 6, 10):
+        flat = jax.random.normal(jax.random.PRNGKey(u), (u, 222))
+        np.testing.assert_array_equal(
+            np.asarray(DEF.flat_median(flat)),
+            np.asarray(jnp.median(flat, axis=0)))
+        np.testing.assert_allclose(
+            np.asarray(DEF.flat_trimmed_mean(flat, 1)),
+            np.asarray(jnp.mean(jnp.sort(flat, axis=0)[1:-1], axis=0)),
+            rtol=1e-6, atol=1e-7)
+
+
+def test_sort_property_random_shapes():
+    """Hypothesis property: kernel == jnp.sort for arbitrary small shapes,
+    odd/even U, D not a multiple of the tile, heavy duplication (integer
+    grids), and any tile size."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from repro.kernels.defense_sort import sort_columns
+
+    @settings(max_examples=25, deadline=None)
+    @given(u=st.integers(1, 12), d=st.integers(1, 400),
+           tile_p=st.integers(0, 2), dup=st.booleans(),
+           seed=st.integers(0, 2**31 - 1))
+    def prop(u, d, tile_p, dup, seed):
+        tile_d = 128 * (2 ** tile_p)
+        x = jax.random.normal(jax.random.PRNGKey(seed), (u, d))
+        if dup:  # quantize to force ties in most columns
+            x = jnp.round(x * 2.0) / 2.0
+        got = sort_columns(x, interpret=True, tile_d=tile_d)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jnp.sort(x, axis=0)))
+        xb = x[None].repeat(2, axis=0) * jnp.asarray([1.0, -1.0])[:, None, None]
+        gotb = jax.vmap(
+            lambda m: sort_columns(m, interpret=True, tile_d=tile_d))(xb)
+        np.testing.assert_array_equal(np.asarray(gotb),
+                                      np.asarray(jnp.sort(xb, axis=1)))
+
+    prop()

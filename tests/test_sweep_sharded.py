@@ -198,7 +198,11 @@ def test_sharded_defense_lane_matches_run_scan_baseline():
     loss, params, dim, batches = _tiny_problem()
     cases = _defense_grid_cases(dim, 13)
     eng = SweepEngine(loss, SweepSpec.build(cases), mesh=make_sweep_mesh(8))
-    assert eng._pad == 3
+    # Grouped dispatch pads each defense-code group to a multiple of the
+    # device count (8), so the ghost count is per-group, not global.
+    assert eng._groups is not None and eng._groups.shards == 8
+    assert eng._groups.exec_lanes % 8 == 0
+    assert eng._pad == eng._groups.num_ghosts > 0
     sh = eng.run(params, batches)
     for i, case in enumerate(cases):
         if not case.defense.is_digital:
@@ -215,6 +219,40 @@ def test_sharded_defense_lane_matches_run_scan_baseline():
         np.testing.assert_allclose(
             sh.loss[i], np.asarray([l.loss for l in logs]),
             rtol=1e-6, atol=1e-7, err_msg=case.name)
+
+
+@needs_8_devices
+def test_sharded_grouped_matches_switch_s13():
+    """Acceptance: grouped dispatch on 8 fake devices with S=13 (every
+    defense-code group ghost-padded to a multiple of the device count) ==
+    the unsharded switch-dispatch reference, rtol 1e-6 — and bitwise equal
+    to the unsharded GROUPED engine under strict_numerics."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_defense_grid_cases(dim, 13))
+    eng = SweepEngine(loss, spec, mesh=make_sweep_mesh(8))
+    assert eng._groups is not None and eng._groups.exec_lanes % 8 == 0
+    sh = eng.run(params, batches)
+    assert sh.loss.shape[0] == 13  # per-group ghosts dropped
+    switch = SweepEngine(loss, spec, grouped_dispatch=False).run(
+        params, batches)
+    _assert_lanes_match(sh, switch)
+
+    sh_strict = SweepEngine(loss, spec, mesh=make_sweep_mesh(8),
+                            strict_numerics=True).run(params, batches)
+    un_strict = SweepEngine(loss, spec, strict_numerics=True).run(
+        params, batches)
+    np.testing.assert_array_equal(sh_strict.loss, un_strict.loss)
+    np.testing.assert_array_equal(sh_strict.grad_norm, un_strict.grad_norm)
+
+
+def test_single_device_mesh_grouped_matches_switch():
+    """Degenerate 1-device mesh: grouped layout with shards=1 == the plain
+    switch-dispatch engine.  Runs everywhere (tier-1)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_defense_grid_cases(dim, 8))
+    sh = SweepEngine(loss, spec, mesh=make_sweep_mesh(1)).run(params, batches)
+    sw = SweepEngine(loss, spec, grouped_dispatch=False).run(params, batches)
+    _assert_lanes_match(sh, sw)
 
 
 def test_mesh_requires_flat_state():
