@@ -19,6 +19,23 @@ count on the paper MLP, D=50890) through the execution strategies:
                                      one [S, D] matrix across the scan and
                                      the combine + PS update fuse into
                                      `batched_floa_step`
+  flat+chunk  SweepEngine(chunk_rounds=C)
+                                   — scan-of-chunks: outer Python loop over
+                                     ceil(R/C) inner C-round scans (same
+                                     trajectories; [C, ...] batch blocks
+                                     staged per chunk instead of the whole
+                                     [R, ...] stack living on device)
+  flat+chunk+async
+              SweepEngine(chunk_rounds=C, async_staging=True)
+                                   — chunked with double-buffered staging:
+                                     chunk k+1's block is sliced host-side
+                                     and device_put (async) while chunk k
+                                     computes; the A/B against flat+chunk
+                                     isolates the input-pipeline overlap
+                                     (expect wins on data-bound configs —
+                                     large batch blocks relative to round
+                                     compute — and noise-level parity on
+                                     compute-bound ones like this MLP grid)
   flat+shmap  SweepEngine(mesh=...)
                                    — the flat scan shard_mapped over a
                                      ("data",) mesh (enable with --sharded;
@@ -58,8 +75,13 @@ the defense hot path fail the build instead of landing.
 
   PYTHONPATH=src:. python benchmarks/sweep_bench.py [--rounds R] [--scenarios S]
       [--sharded] [--reps N] [--skip-looped] [--defenses]
-      [--defense-rounds R] [--defense-scenarios S] [--out BENCH_sweep.json]
+      [--defense-rounds R] [--defense-scenarios S] [--chunk-rounds C]
+      [--out BENCH_sweep.json]
       [--check-against BENCH_sweep.json] [--tolerance 0.5]
+
+See docs/benchmarks.md for how to read BENCH_sweep.json, what the CI
+`--check-against --tolerance 0.5` perf gate does, and how to regenerate the
+committed baseline when a PR legitimately changes throughput.
 """
 from __future__ import annotations
 
@@ -183,10 +205,19 @@ def check_regressions(fresh: dict, baseline: dict,
                          f"tolerance {tolerance})")
 
     if all(fresh.get(k) == baseline.get(k) for k in ("scenarios", "rounds")):
+        chunk_mismatch = (fresh.get("chunk_rounds")
+                          != baseline.get("chunk_rounds"))
         for name, b_row in (baseline.get("engines") or {}).items():
             f_row = (fresh.get("engines") or {}).get(name)
             if f_row is None:
                 notes.append(f"engines/{name}: not in fresh run, skipped")
+            elif "chunk" in name and chunk_mismatch:
+                # A different chunk size is a different program shape (e.g.
+                # --chunk-rounds 1 is per-chunk dispatch overhead x R); like
+                # the defense rows' lanes/rounds guard, skip rather than
+                # report a phantom regression.
+                notes.append(f"engines/{name}: chunk_rounds differs from "
+                             "baseline, skipped")
             else:
                 gate("engines", name, f_row, b_row)
     else:
@@ -219,7 +250,7 @@ def grid(num: int, rounds: int):
 def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
          reps: int = 3, skip_looped: bool = False, defenses: bool = False,
          defense_rounds: int = 10, defense_scenarios: int = 6,
-         out_path: str = "BENCH_sweep.json",
+         chunk_rounds: int = 5, out_path: str = "BENCH_sweep.json",
          check_against: str = "", tolerance: float = 0.5) -> dict:
     base_record = None
     if check_against:
@@ -293,6 +324,16 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
     engine = SweepEngine(mlp_loss, spec)
     measure("flat", lambda e=engine: e.run(params, batches))
 
+    # --- flat+chunk(+async): scan-of-chunks execution, with and without the
+    # double-buffered host->device staging — the A/B isolates the input-
+    # pipeline overlap from the chunking itself.
+    chunk = max(1, min(chunk_rounds, rounds))
+    engine = SweepEngine(mlp_loss, spec, chunk_rounds=chunk)
+    measure("flat+chunk", lambda e=engine: e.run(params, batches))
+    engine = SweepEngine(mlp_loss, spec, chunk_rounds=chunk,
+                         async_staging=True)
+    measure("flat+chunk+async", lambda e=engine: e.run(params, batches))
+
     # --- flat+shmap: the same flat scan sharded over every visible device.
     if sharded:
         from repro.launch.mesh import make_sweep_mesh
@@ -333,7 +374,7 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
         bench="sweep", scenarios=len(exps), rounds=rounds, dim=mc.dim,
         num_workers=mc.num_workers, backend=jax.default_backend(),
         devices=jax.device_count(), baseline=baseline, reps=reps,
-        engines=engines,
+        chunk_rounds=chunk, engines=engines,
     )
     if "scan+vmap" in engines and "flat" in engines:
         record["flat_vs_pr1_warm_speedup"] = round(
@@ -341,6 +382,11 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
         if "flat+shmap" in engines:
             record["sharded_vs_pr1_warm_speedup"] = round(
                 warm["scan+vmap"] / warm["flat+shmap"], 3)
+    if "flat+chunk" in engines and "flat+chunk+async" in engines:
+        # The input-pipeline A/B: >1 means the double-buffered staging won
+        # warm wall time over synchronous per-chunk staging.
+        record["async_staging_warm_speedup"] = round(
+            warm["flat+chunk"] / warm["flat+chunk+async"], 3)
     if defenses:
         record["defenses"] = bench_defenses(
             mc, shards, params, defense_rounds, defense_scenarios, reps)
@@ -394,6 +440,9 @@ if __name__ == "__main__":
                     help="rounds per defense-family engine (--defenses)")
     ap.add_argument("--defense-scenarios", type=int, default=6,
                     help="lanes per defense-family engine (--defenses)")
+    ap.add_argument("--chunk-rounds", type=int, default=5,
+                    help="chunk size C for the flat+chunk(+async) rows "
+                         "(clamped to [1, rounds])")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="machine-readable output path ('' to disable)")
     ap.add_argument("--check-against", default="",
@@ -409,7 +458,8 @@ if __name__ == "__main__":
                sharded=args.sharded, reps=args.reps,
                skip_looped=args.skip_looped, defenses=args.defenses,
                defense_rounds=args.defense_rounds,
-               defense_scenarios=args.defense_scenarios, out_path=args.out,
+               defense_scenarios=args.defense_scenarios,
+               chunk_rounds=args.chunk_rounds, out_path=args.out,
                check_against=args.check_against, tolerance=args.tolerance)
     if rec.get("regressions"):
         raise SystemExit(1)

@@ -1,6 +1,6 @@
-from repro.data.pipeline import FederatedSampler, TokenBatcher
+from repro.data.pipeline import FederatedSampler, TokenBatcher, iter_chunk_blocks
 from repro.data.synthetic_digits import make_dataset, worker_split
 from repro.data.text import sample_tokens
 
-__all__ = ["FederatedSampler", "TokenBatcher", "make_dataset", "worker_split",
-           "sample_tokens"]
+__all__ = ["FederatedSampler", "TokenBatcher", "iter_chunk_blocks",
+           "make_dataset", "worker_split", "sample_tokens"]

@@ -11,7 +11,27 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Iterator, Optional
 
+import jax
 import numpy as np
+
+
+def iter_chunk_blocks(batches, chunk_rounds: int) -> Iterator:
+    """Slice a stacked [R, ...] batch pytree into consecutive [C, ...] blocks.
+
+    Yields ceil(R / chunk_rounds) blocks in round order; the last block
+    carries R % chunk_rounds rounds when R is not divisible, so concatenating
+    the blocks on axis 0 reproduces the input exactly.  On numpy inputs each
+    block leaf is a zero-copy view — this is the host half of the chunked
+    sweep engine's input pipeline: the engine stages block k+1 to the device
+    (`launch.mesh.stage_batch_block`) while chunk k computes, so the full
+    [R, ...] stack never has to live in device memory.
+    """
+    if chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    for start in range(0, rounds, chunk_rounds):
+        yield jax.tree_util.tree_map(
+            lambda x: x[start:start + chunk_rounds], batches)
 
 
 class FederatedSampler:
@@ -42,6 +62,21 @@ class FederatedSampler:
         calls, so a fresh same-seed sampler replays the identical sequence."""
         draws = [self.next_round() for _ in range(rounds)]
         return {k: np.stack([d[k] for d in draws]) for k in draws[0]}
+
+    def iter_round_chunks(self, rounds: int,
+                          chunk_rounds: int) -> Iterator[Dict[str, np.ndarray]]:
+        """Yield `rounds` worth of batches as stacked [C, ...] blocks of
+        `chunk_rounds` rounds each (last block shorter when R % C != 0).
+
+        Draws from the same RNG stream as `stack_rounds(rounds)` — the
+        concatenation of the yielded blocks is identical to one big stack —
+        but only ever materializes one block at a time, so a long sweep's
+        batch stream can be produced incrementally on the host while the
+        chunked engine runs."""
+        done = 0
+        while done < rounds:
+            yield self.stack_rounds(min(chunk_rounds, rounds - done))
+            done += chunk_rounds
 
 
 class TokenBatcher:

@@ -44,6 +44,19 @@ is `shard_map`ped over the devices — S is padded to a multiple of the device
 count with ghost lanes (replicas of the last scenario) that are dropped from
 the results; every real lane's trajectory is unchanged.
 
+The round axis splits too: `chunk_rounds=C` turns the one R-round scan into a
+**scan of chunks** — an outer (uncompiled) Python loop over ceil(R/C) chunks
+whose inner C-round scan body is the untouched monolithic body, with the
+(state, keys, absolute-round-offset) carry threaded through the chunk
+boundaries.  Trajectories are unchanged (bit-identical under
+`strict_numerics`): the chunk boundary exists for the *input pipeline*, not
+the math.  `async_staging=True` double-buffers it — while chunk k executes,
+chunk k+1's batch block is sliced host-side (`data.iter_chunk_blocks`, numpy
+views) and transferred with an async `jax.device_put`
+(`launch.mesh.stage_batch_block`, pre-sharded replicated under a mesh), so
+the device never idles waiting on host->device input transfers and the full
+[R, ...] batch stack never has to live in device memory.
+
     spec   = SweepSpec.build([(name, floa_cfg, alpha, seed), ...])
     engine = SweepEngine(loss_fn, spec, eval_fn=...)
     result = engine.run(params0, batches)     # batches: [R, ...] leaves
@@ -66,7 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import defenses as DEF
 from repro.core import scenario as SC
@@ -81,7 +94,10 @@ from repro.core.aggregation import (
 from repro.core.attacks import AttackType
 from repro.core.power_control import Policy
 from repro.core.scenario import DefenseSpec
+from repro.data.pipeline import iter_chunk_blocks
 from repro.fl.trainer import RoundLog
+from repro.launch.mesh import lane_sharding, replicated_sharding, \
+    stage_batch_block
 
 Array = jax.Array
 
@@ -292,24 +308,44 @@ class SweepEngine:
     program for one (loss_fn, spec, eval_fn) triple.  Reuse the instance to
     amortize compilation across repeated runs (benchmarks, seeds-resampling).
 
+    Every constructor knob changes HOW the sweep executes, never WHAT it
+    computes; each one's equivalence contract (what stays identical, and to
+    what tolerance) is stated below and pinned by the test suite.
+
+    eval_fn / eval_every: run eval_fn only on rounds t with
+    t % eval_every == 0 plus the final round (the FLTrainer.run schedule);
+    other rounds carry NaN in the metrics arrays.  eval_every <= 0 means
+    final round only.  Evaluation happens inside the compiled scan (behind a
+    lax.cond), so a sparse schedule skips the eval compute entirely.  The
+    schedule is anchored to the ABSOLUTE round index — chunking (below) does
+    not move it.
+
     flat_state=True (default) runs the flat-state warm path: params live as
     one [S, D] f32 matrix for the whole scan and the combine + PS update fuse
     into `batched_floa_step`.  flat_state=False keeps the PR-1 tree-state
     path (per-round flatten/concat + per-leaf update, verbatim by default)
-    as the equivalence reference and benchmark baseline.  The paths agree to
-    fp rounding; constructing BOTH engines with strict_numerics=True pins
-    the standardization stats' reduction tree (leaf-segmented sums off the
-    materialized slab, behind an optimization barrier), making their
-    trajectories bit-identical for f32 models at the cost of one extra pass
-    over the [S, U, D] slab per round.  (The flat state is f32; non-f32
-    leaves are round-tripped through f32 each round, matching the flatten
-    that the tree path applies to the gradients.)
+    as the equivalence reference and benchmark baseline.  Contract: the
+    paths agree to fp rounding (rtol ~1e-5); constructing BOTH engines with
+    strict_numerics=True makes them bit-identical for f32 models.  (The flat
+    state is f32; non-f32 leaves are round-tripped through f32 each round,
+    matching the flatten that the tree path applies to the gradients.)
+
+    strict_numerics=True pins the standardization stats' fp reduction tree
+    (leaf-segmented sums off the materialized [S, U, D] slab, behind an
+    optimization barrier) so that every execution strategy — tree vs flat
+    state, grouped vs switch dispatch, chunked vs monolithic, sharded vs
+    not — replays the same trajectory BIT-FOR-BIT, at the cost of one extra
+    pass over the slab per round.  Off (default), XLA may fuse each
+    strategy's stats reduction differently and the strategies agree to fp
+    rounding only.
 
     mesh: optional 1-D ("data",) jax.sharding.Mesh (see
     `launch.mesh.make_sweep_mesh`).  The flat-state scan is shard_mapped over
     the lane axis; S is padded up to a multiple of the device count with
     ghost lanes (replicas of the last scenario) that are dropped from the
-    returned SweepResult.  Requires flat_state=True.
+    returned SweepResult.  Requires flat_state=True.  Contract: every real
+    lane's trajectory matches the unsharded engine (rtol 1e-6; bitwise in
+    practice and under strict_numerics).
 
     grouped_dispatch=True (default) partitions the lanes of a defense-
     carrying sweep by defense code at BUILD time (codes are concrete config):
@@ -323,18 +359,50 @@ class SweepEngine:
     present for EVERY lane under vmap.  Under a mesh each group is ghost-
     padded to a multiple of the device count so every shard traces the same
     static group layout.  Pure-FLOA sweeps are untouched by the flag.
+    Contract: lane trajectories match the switch path (rtol 1e-6; bitwise
+    under strict_numerics) — the per-lane math and key-split schedule are
+    shared, only which lanes trace which kernels changes.
+
+    chunk_rounds: None (default) compiles ONE scan over all R rounds.  An
+    int C >= 1 switches to scan-of-chunks execution: an outer Python loop
+    dispatches ceil(R/C) inner scans of (up to) C rounds each, threading the
+    (state, keys, absolute-round-offset) carry through the chunk boundaries
+    — RNG key splitting, the eval schedule, metric layout, grouped-dispatch
+    lane permutation, and sharded ghost padding are all chunk-invariant.
+    Contract: chunked == monolithic at rtol 1e-6 (bitwise under
+    strict_numerics) for any C, including R % C != 0 (the last chunk is
+    short; it compiles once more for the remainder shape).  The chunk
+    boundary exists to bound device batch memory ([C, ...] blocks instead of
+    [R, ...]) and to give the input pipeline a place to overlap:
+
+    async_staging=True (requires chunk_rounds) double-buffers the
+    host->device batch staging: while chunk k executes, chunk k+1's block is
+    sliced host-side (numpy views) and transferred with an async
+    `jax.device_put` (`launch.mesh.stage_batch_block`, landing pre-sharded
+    replicated under a mesh), so the device never idles on input transfers.
+    Contract: a pure scheduling change — results are bit-identical to
+    async_staging=False; wins show up on data-bound configs (large batch
+    blocks relative to round compute).
     """
 
     def __init__(self, loss_fn: Callable, spec: SweepSpec,
                  eval_fn: Optional[Callable] = None, eval_every: int = 1,
                  flat_state: bool = True, mesh: Optional[Mesh] = None,
                  strict_numerics: bool = False,
-                 grouped_dispatch: bool = True):
-        """eval_every: run eval_fn only on rounds t with t % eval_every == 0
-        plus the final round (the FLTrainer.run schedule); other rounds carry
-        NaN in the metrics arrays.  eval_every <= 0 means final round only.
-        Evaluation happens inside the compiled scan, so a sparse schedule
-        skips the eval compute entirely."""
+                 grouped_dispatch: bool = True,
+                 chunk_rounds: Optional[int] = None,
+                 async_staging: bool = False):
+        """See the class docstring for each knob's equivalence contract."""
+        if chunk_rounds is not None and chunk_rounds < 1:
+            raise ValueError(
+                f"chunk_rounds must be a positive int or None, got "
+                f"{chunk_rounds}")
+        if async_staging and chunk_rounds is None:
+            raise ValueError(
+                "async_staging double-buffers the per-chunk batch transfers; "
+                "it requires chunk_rounds (the monolithic engine consumes "
+                "the whole [R, ...] stack in one dispatch, so there is no "
+                "chunk boundary to overlap)")
         self.loss_fn = loss_fn
         self.spec = spec
         self.eval_fn = eval_fn
@@ -343,6 +411,8 @@ class SweepEngine:
         self.mesh = mesh
         self.strict_numerics = strict_numerics
         self.grouped_dispatch = grouped_dispatch
+        self.chunk_rounds = chunk_rounds
+        self.async_staging = async_staging
         self._num = len(spec)
         self._u = spec.num_workers
         self._sp = spec.stacked_params()
@@ -380,6 +450,8 @@ class SweepEngine:
         # path needs the params template (leaf shapes/dtypes) to cache its
         # row unflatten, and that only arrives with params0.
         self._run_jit = None
+        self._chunk_jit = None
+        self._finalize_jit = None
         self._template = None
 
     # ------------------------------------------------------------ builders
@@ -474,6 +546,25 @@ class SweepEngine:
         paths; only the per-round step (`one_round`), the per-lane eval view
         (`eval_lane`, None to skip eval), and the final state -> stacked
         params mapping (`finalize`) differ.
+
+        Returns (run, scan_chunk, finalize):
+
+          run(state, keys, batches, sp)  — the monolithic program: one scan
+              over all R rounds, finalized.
+          scan_chunk(state, keys, t0, rounds_total, batches, sp) — one chunk
+              of the scan-of-chunks execution: the SAME scan body over a
+              [C, ...] batch block starting at absolute round t0 of
+              rounds_total, returning the raw (state, keys) carry for the
+              next chunk instead of finalizing.  t0/rounds_total are traced
+              int32 scalars, so every full-size chunk shares one compile.
+          finalize — the final state -> stacked-params mapping (None for the
+              tree path, whose state already is the params pytree); applied
+              once after the last chunk.
+
+        The monolithic run is scan_chunk at (t0=0, rounds_total=R) plus
+        finalize, so the two execution modes share the per-round trace by
+        construction — the chunked==monolithic equivalence contract reduces
+        to lax.scan's own carry semantics.
         """
         eval_every = self.eval_every
 
@@ -498,24 +589,28 @@ class SweepEngine:
                 due = due | (t % eval_every == 0)
             return jax.lax.cond(due, as_f32, lambda _: blank, state)
 
-        def run(state, keys, batches, sp):
-            rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
-
+        def scan_chunk(state, keys, t0, rounds_total, batches, sp):
             def body(carry, batch):
                 state, keys, t = carry
                 split = jax.vmap(jax.random.split)(keys)    # [S, 2, 2]
                 keys, subs = split[:, 0], split[:, 1]
                 state, loss, gn = one_round(state, batch, subs, sp)
-                metrics = eval_maybe(state, t, rounds)
+                metrics = eval_maybe(state, t, rounds_total)
                 return (state, keys, t + 1), (loss, gn, metrics)
 
-            (state, _, _), (loss, gn, metrics) = jax.lax.scan(
-                body, (state, keys, jnp.int32(0)), batches)
+            (state, keys, _), (loss, gn, metrics) = jax.lax.scan(
+                body, (state, keys, t0), batches)
+            return state, keys, loss, gn, metrics
+
+        def run(state, keys, batches, sp):
+            rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            state, _, loss, gn, metrics = scan_chunk(
+                state, keys, jnp.int32(0), jnp.int32(rounds), batches, sp)
             if finalize is not None:
                 state = finalize(state)
             return state, loss, gn, metrics
 
-        return run
+        return run, scan_chunk, finalize
 
     def _make_run_grouped(self, sizes):
         """Tree-state path with grouped defense dispatch: the per-round
@@ -825,16 +920,23 @@ class SweepEngine:
                                  finalize=jax.vmap(unflatten_row))
 
     def _build(self, template):
-        """Compile-cache the run program (lazy: needs the params template)."""
+        """Compile-cache the run programs (lazy: needs the params template).
+
+        Both execution modes are wrapped here — the monolithic all-R scan
+        (`_run_jit`) and the per-chunk scan (`_chunk_jit`, plus the one-shot
+        `_finalize_jit` applied after the last chunk) — but jit compiles on
+        first call, so an engine only ever pays for the mode it runs."""
         self._template = template
         unflatten_row, sizes = make_row_unflatten(template)
         if self.flat_state:
-            run = (self._make_run_flat_grouped(unflatten_row, sizes)
-                   if self._groups is not None
-                   else self._make_run_flat(unflatten_row, sizes))
+            run, chunk, final = (
+                self._make_run_flat_grouped(unflatten_row, sizes)
+                if self._groups is not None
+                else self._make_run_flat(unflatten_row, sizes))
         else:
-            run = (self._make_run_grouped(sizes)
-                   if self._groups is not None else self._make_run(sizes))
+            run, chunk, final = (
+                self._make_run_grouped(sizes)
+                if self._groups is not None else self._make_run(sizes))
         if self.mesh is not None:
             lane, rep = P("data"), P()
             # Prefix specs: lane axis 0 on state/keys/ScenarioParams, lane
@@ -845,7 +947,74 @@ class SweepEngine:
                 out_specs=(lane, P(None, "data"), P(None, "data"),
                            P(None, "data")),
                 check_rep=False)
+            # The chunk program additionally threads the raw (state, keys)
+            # carry out (lane-sharded) and takes the replicated scalar
+            # t0 / rounds_total pair; finalize runs OUTSIDE the shard_map
+            # (vmap over lanes, sharding propagates through jit).
+            chunk = shard_map(
+                chunk, mesh=self.mesh,
+                in_specs=(lane, lane, rep, rep, rep, lane),
+                out_specs=(lane, lane, P(None, "data"), P(None, "data"),
+                           P(None, "data")),
+                check_rep=False)
         self._run_jit = jax.jit(run)
+        self._chunk_jit = jax.jit(chunk)
+        self._finalize_jit = None if final is None else jax.jit(final)
+
+    # ----------------------------------------------------- chunked execution
+
+    def _run_chunked(self, state, keys, batches, sp):
+        """Outer loop of the scan-of-chunks execution: dispatch the compiled
+        C-round chunk program once per [C, ...] block, thread the
+        (state, keys, absolute-round-offset) carry through the boundaries,
+        finalize once after the last chunk.
+
+        With async_staging the next block is sliced + `device_put` right
+        after the current chunk is dispatched (both are async), so block
+        k+1's host->device transfer overlaps chunk k's device compute;
+        without it each block is staged synchronously just before its own
+        chunk.  Staging order is the ONLY difference between the modes — the
+        dispatched programs and operands are identical, so their results
+        are bit-identical.
+        """
+        rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        if rounds == 0:
+            # Zero chunks would leave nothing to concatenate; the monolithic
+            # program handles the degenerate stack (lax.scan over length-0
+            # xs yields empty [0, S] outputs), keeping chunked == monolithic
+            # for every input.
+            return self._run_jit(state, keys, batches, sp)
+        rounds_total = jnp.int32(rounds)
+        blocks = iter_chunk_blocks(batches, self.chunk_rounds)
+
+        def stage():
+            blk = next(blocks, None)
+            return (None if blk is None
+                    else stage_batch_block(blk, mesh=self.mesh))
+
+        nxt = stage() if self.async_staging else None
+        losses, gns, metric_blocks = [], [], []
+        for t0 in range(0, rounds, self.chunk_rounds):
+            block = nxt if self.async_staging else stage()
+            state, keys, loss, gn, metrics = self._chunk_jit(
+                state, keys, jnp.int32(t0), rounds_total, block, sp)
+            if self.async_staging:
+                nxt = stage()   # overlaps the in-flight chunk dispatched above
+            losses.append(loss)
+            gns.append(gn)
+            metric_blocks.append(metrics)
+
+        params = (state if self._finalize_jit is None
+                  else self._finalize_jit(state))
+        # Host-side concat along the round axis: per-chunk outputs are
+        # [C, S_exec]; the caller's scatter-back/ghost-drop sees the same
+        # [R, S_exec] layout the monolithic scan produces.
+        loss = np.concatenate([np.asarray(x) for x in losses])
+        gn = np.concatenate([np.asarray(x) for x in gns])
+        metrics = {
+            k: np.concatenate([np.asarray(m[k]) for m in metric_blocks])
+            for k in (metric_blocks[0] if metric_blocks else {})}
+        return params, loss, gn, metrics
 
     # ----------------------------------------------------------------- run
 
@@ -857,7 +1026,13 @@ class SweepEngine:
         if not params_stacked:
             params0 = stack_params(params0, self._num)
         keys = self.spec.keys() if keys is None else jnp.asarray(keys)
-        batches = jax.tree_util.tree_map(jnp.asarray, batches)
+        if self.chunk_rounds is None:
+            batches = jax.tree_util.tree_map(jnp.asarray, batches)
+        else:
+            # Chunked execution stages [C, ...] blocks per chunk; the full
+            # [R, ...] stack stays host-side (numpy views slice for free and
+            # the device never holds more than ~two blocks).
+            batches = jax.tree_util.tree_map(np.asarray, batches)
 
         template = jax.eval_shape(
             lambda p: jax.tree_util.tree_map(lambda x: x[0], p), params0)
@@ -881,16 +1056,21 @@ class SweepEngine:
         sp = self._sp_run
 
         if self.mesh is not None:
-            lane = NamedSharding(self.mesh, P("data"))
-            rep = NamedSharding(self.mesh, P())
+            lane = lane_sharding(self.mesh)
+            rep = replicated_sharding(self.mesh)
             state = jax.device_put(state, lane)
             keys = jax.device_put(keys, lane)
             sp = jax.tree_util.tree_map(
                 lambda x: jax.device_put(x, lane), sp)
-            batches = jax.tree_util.tree_map(
-                lambda x: jax.device_put(x, rep), batches)
+            if self.chunk_rounds is None:
+                batches = jax.tree_util.tree_map(
+                    lambda x: jax.device_put(x, rep), batches)
 
-        params, loss, gn, metrics = self._run_jit(state, keys, batches, sp)
+        if self.chunk_rounds is None:
+            params, loss, gn, metrics = self._run_jit(state, keys, batches, sp)
+        else:
+            params, loss, gn, metrics = self._run_chunked(
+                state, keys, batches, sp)
 
         if self._groups is not None:
             # Scatter back to lane order: pick each source lane's execution
@@ -920,8 +1100,12 @@ class SweepEngine:
 def run_sweep(loss_fn: Callable, params0, batches, spec: SweepSpec,
               eval_fn: Optional[Callable] = None,
               eval_every: int = 1, flat_state: bool = True,
-              mesh: Optional[Mesh] = None) -> SweepResult:
-    """One-shot convenience wrapper around SweepEngine."""
+              mesh: Optional[Mesh] = None,
+              chunk_rounds: Optional[int] = None,
+              async_staging: bool = False) -> SweepResult:
+    """One-shot convenience wrapper around SweepEngine (same knobs; see the
+    SweepEngine class docstring for each one's equivalence contract)."""
     return SweepEngine(loss_fn, spec, eval_fn=eval_fn,
                        eval_every=eval_every, flat_state=flat_state,
-                       mesh=mesh).run(params0, batches)
+                       mesh=mesh, chunk_rounds=chunk_rounds,
+                       async_staging=async_staging).run(params0, batches)

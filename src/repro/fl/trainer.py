@@ -135,6 +135,13 @@ class FLTrainer:
         engine's lanes exactly; they match this trainer's loop bit-for-bit on
         noiseless channels (the loop draws receiver noise per parameter leaf,
         the flat path draws one [D] row).
+
+        This is the single-scenario surface: one scenario, one program, the
+        full [R, ...] batch stack in one dispatch.  Multi-scenario grids,
+        mesh sharding, and chunked/async-staged execution live in
+        `fl.sweep.SweepEngine` — its class docstring states the equivalence
+        contract of every execution knob (flat_state, strict_numerics, mesh,
+        grouped_dispatch, chunk_rounds, async_staging).
         """
         rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
         batches = jax.tree_util.tree_map(jnp.asarray, batches)

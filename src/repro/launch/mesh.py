@@ -1,9 +1,18 @@
-"""Production mesh construction.
+"""Production mesh construction and sweep staging placement.
 
 Functions only (importing this module never touches jax device state).
 Single pod: 16x16 ("data","model") = 256 chips (TPU v5e pod slice).
 Multi-pod:  2x16x16 ("pod","data","model") = 512 chips; the FL worker axis is
 ("pod","data") = 32 workers, each tensor-parallel over 16 "model" chips.
+
+The sweep-engine placement helpers (`lane_sharding` / `replicated_sharding` /
+`stage_batch_block`) centralize how sweep operands land on a 1-D ("data",)
+mesh: lane-stacked operands (state, keys, ScenarioParams) split on the lane
+axis, batch blocks replicate.  `stage_batch_block` is the host->device edge
+of the chunked engine's double-buffered input pipeline — `jax.device_put` is
+asynchronous, so a block staged while the previous chunk computes lands
+pre-sharded with no device idle time and no resharding inside the
+shard_mapped scan.
 """
 from __future__ import annotations
 
@@ -13,7 +22,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 import jax
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -47,6 +56,35 @@ def make_debug_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     devices = jax.devices()
     assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
     return Mesh(np.asarray(devices[:n]).reshape(tuple(shape)), tuple(axes))
+
+
+def lane_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for lane-stacked sweep operands: axis 0 splits over "data"."""
+    return NamedSharding(mesh, PartitionSpec("data"))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for per-round batch blocks: replicated on every device (each
+    lane shard consumes the same batch stream)."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def stage_batch_block(block, mesh: Optional[Mesh] = None):
+    """Transfer one host-side batch block (pytree of [C, ...] arrays) to the
+    device(s), asynchronously.
+
+    With a ("data",) sweep mesh the block lands pre-sharded (replicated over
+    the mesh) so the shard_mapped scan consumes it with zero resharding;
+    without a mesh it is a plain async `jax.device_put` to the default
+    device.  Either way the call returns immediately — the transfer overlaps
+    whatever the device is executing, which is what makes the chunked
+    engine's `async_staging` double buffer work.
+    """
+    if mesh is None:
+        return jax.tree_util.tree_map(jax.device_put, block)
+    sharding = replicated_sharding(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), block)
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:

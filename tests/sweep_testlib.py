@@ -1,0 +1,90 @@
+"""Shared scenario-grid builders for the sweep-engine equivalence suites
+(test_sweep_sharded.py, test_sweep_chunked.py): one tiny MLP problem and the
+CI/BEV x attacker-count and mixed analog+defense grids, parameterized where
+the suites deliberately differ (round count, jamming lane, defense list) so
+a change to FLOAConfig/ScenarioCase construction lands in every suite at
+once."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import FLOAConfig
+from repro.core.attacks import AttackConfig, AttackType, first_n_mask
+from repro.core.channel import ChannelConfig
+from repro.core.power_control import Policy, PowerConfig
+from repro.core.scenario import DefenseSpec
+from repro.fl import ScenarioCase
+
+U = 4
+
+
+def tiny_problem(rounds=5, batch=8, d_in=6, d_h=5):
+    def loss(params, b):
+        pred = jax.nn.relu(b["x"] @ params["w1"]) @ params["w2"]
+        return jnp.mean((pred - b["y"]) ** 2)
+    k = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(k, (d_in, d_h)),
+              "w2": jax.random.normal(k, (d_h, 1))}
+    dim = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    rng = np.random.default_rng(0)
+    batches = {"x": rng.normal(size=(rounds, U * batch, d_in)).astype(np.float32),
+               "y": rng.normal(size=(rounds, U * batch, 1)).astype(np.float32)}
+    return loss, params, dim, batches
+
+
+def floa(dim, policy, n_atk, noise=0.05, attack=AttackType.STRONGEST):
+    return FLOAConfig(
+        channel=ChannelConfig(num_workers=U, sigma=1.0,
+                              noise_std=0.0 if policy == Policy.EF else noise),
+        power=PowerConfig(num_workers=U, dim=dim, p_max=1.0, policy=policy),
+        attack=AttackConfig(attack=attack if n_atk else AttackType.NONE,
+                            byzantine_mask=first_n_mask(U, n_atk)),
+    )
+
+
+def grid_cases(dim, num, jam_lane=False):
+    """CI/BEV x attacker-count grid, cycled to `num` lanes (fig-4 style).
+    jam_lane=True swaps the last lane for a GAUSSIAN-jamming one so every
+    RNG stream (channel, noise, jam) is exercised."""
+    cells = [(pol, n) for n in (0, 1, 2, 3) for pol in (Policy.CI, Policy.BEV)]
+    n_grid = num - 1 if jam_lane else num
+    cases = [ScenarioCase(f"{cells[i % 8][0].value}@N{cells[i % 8][1]}#{i}",
+                          floa(dim, cells[i % 8][0], cells[i % 8][1]),
+                          0.05, seed=100 + i)
+             for i in range(n_grid)]
+    if jam_lane:
+        cases.append(ScenarioCase("jam", floa(dim, Policy.BEV, 2,
+                                              attack=AttackType.GAUSSIAN),
+                                  0.05, seed=99))
+    return cases
+
+
+DEFENSES = (
+    DefenseSpec(name="mean"),
+    DefenseSpec(name="median"),
+    DefenseSpec(name="trimmed_mean", trim=1),
+    DefenseSpec(name="krum", num_byzantine=1),
+    DefenseSpec(name="multi_krum", num_byzantine=1, multi=2),
+    DefenseSpec(name="geometric_median"),
+)
+
+
+def defense_grid_cases(dim, num, defenses=DEFENSES):
+    """Mixed analog + digital lanes cycled to `num` (the showdown grid in
+    miniature): lanes 0/1 of each period are FLOA BEV/CI, the rest walk
+    `defenses`."""
+    period = 2 + len(defenses)
+    cases = []
+    for i in range(num):
+        j, n_atk = i % period, (i // period) % 3
+        if j < 2:
+            pol = (Policy.BEV, Policy.CI)[j]
+            cases.append(ScenarioCase(f"{pol.value}@N{n_atk}#{i}",
+                                      floa(dim, pol, n_atk), 0.05,
+                                      seed=200 + i))
+        else:
+            spec = defenses[j - 2]
+            cases.append(ScenarioCase(f"{spec.name}@N{n_atk}#{i}",
+                                      floa(dim, Policy.EF, n_atk, 0.0), 0.05,
+                                      seed=200 + i, defense=spec))
+    return cases

@@ -14,8 +14,10 @@ pytest.importorskip("benchmarks.sweep_bench")
 from benchmarks.sweep_bench import check_regressions
 
 
-def _rec(engines=None, defenses=None, scenarios=16, rounds=25):
-    rec = {"scenarios": scenarios, "rounds": rounds}
+def _rec(engines=None, defenses=None, scenarios=16, rounds=25,
+         chunk_rounds=5):
+    rec = {"scenarios": scenarios, "rounds": rounds,
+           "chunk_rounds": chunk_rounds}
     if engines:
         rec["engines"] = {k: {"warm_rounds_per_sec": v}
                           for k, v in engines.items()}
@@ -50,6 +52,22 @@ def test_gate_skips_shape_mismatches():
     fresh2["defenses"]["mixed"]["lanes"] = 3
     fails2, notes2 = check_regressions(fresh2, base, tolerance=0.5)
     assert fails2 == [] and any("defenses/mixed" in n for n in notes2)
+
+
+def test_gate_skips_chunk_rows_on_chunk_rounds_mismatch():
+    """A different --chunk-rounds is a different program shape for the
+    flat+chunk rows only: those skip (reported), the rest still gate."""
+    base = _rec(engines={"flat": 100.0, "flat+chunk": 100.0,
+                         "flat+chunk+async": 100.0})
+    fresh = _rec(engines={"flat": 80.0, "flat+chunk": 1.0,
+                          "flat+chunk+async": 1.0}, chunk_rounds=1)
+    fails, notes = check_regressions(fresh, base, tolerance=0.5)
+    assert fails == []
+    assert sum("chunk_rounds differs" in n for n in notes) == 2
+    # and a non-chunk row still fails on the same records
+    fresh["engines"]["flat"]["warm_rounds_per_sec"] = 1.0
+    fails2, _ = check_regressions(fresh, base, tolerance=0.5)
+    assert len(fails2) == 1 and "engines/flat:" in fails2[0]
 
 
 def test_gate_skips_missing_rows():

@@ -1,0 +1,109 @@
+"""Docs health: the tools/check_docs.py checker itself, and the repo's
+actual README + docs/ tree passing it (links + snippet syntax; snippet
+EXECUTION happens in the CI docs job with --run-snippets)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_github_slug_rules():
+    assert check_docs.github_slug("## Chunked rounds and async batch "
+                                  "staging") == \
+        "chunked-rounds-and-async-batch-staging"
+    assert check_docs.github_slug("# The `SweepEngine` class!") == \
+        "the-sweepengine-class"
+    assert check_docs.github_slug("### A, B & C — d/e") == "a-b--c--de"
+    # GitHub PRESERVES underscores (it only drops emphasis/code markers):
+    assert check_docs.github_slug("## Running `sweep_bench.py`") == \
+        "running-sweep_benchpy"
+    assert check_docs.github_slug("## Reading `BENCH_sweep.json`") == \
+        "reading-bench_sweepjson"
+
+
+def test_iter_links_skips_external_and_fences():
+    text = textwrap.dedent("""
+        [ok](docs/sweeps.md) [ext](https://x.test/a.md) [anc](a.md#sec)
+        ```python
+        x = "[not a link](fake.md)"
+        ```
+        [self](#here)
+    """)
+    links = list(check_docs.iter_links(text))
+    assert ("docs/sweeps.md", "") in links
+    assert ("a.md", "sec") in links
+    assert ("", "here") in links
+    assert all("x.test" not in p for p, _ in links)
+    assert not any("fake.md" in p for p, _ in links)
+
+
+def test_iter_code_blocks_and_smoke_marker():
+    text = textwrap.dedent("""
+        <!-- docs-smoke -->
+        ```python
+        print("run me")
+        ```
+        ```bash
+        python benchmarks/sweep_bench.py
+        ```
+    """)
+    blocks = list(check_docs.iter_code_blocks(text))
+    assert [(l, m) for l, _, m in blocks] == [("python", True),
+                                              ("bash", False)]
+
+
+def test_broken_link_and_anchor_detected(tmp_path):
+    good = tmp_path / "good.md"
+    good.write_text("# Real Heading\nbody\n")
+    bad = tmp_path / "bad.md"
+    bad.write_text("[a](missing.md) [b](good.md#real-heading) "
+                   "[c](good.md#nope)\n")
+    old = check_docs.REPO_ROOT
+    check_docs.REPO_ROOT = str(tmp_path)
+    try:
+        errors = check_docs.check_links(str(bad))
+    finally:
+        check_docs.REPO_ROOT = old
+    assert len(errors) == 2
+    assert any("missing.md" in e for e in errors)
+    assert any("#nope" in e for e in errors)
+
+
+def test_snippet_syntax_error_detected(tmp_path):
+    md = tmp_path / "x.md"
+    md.write_text("```python\ndef broken(:\n```\n")
+    errors = check_docs.check_snippets(str(md), run=False)
+    assert len(errors) == 1 and "syntax error" in errors[0]
+
+
+def test_bash_block_missing_file_detected(tmp_path):
+    md = tmp_path / "x.md"
+    md.write_text("```bash\npython no/such/script.py --flag\n```\n")
+    errors = check_docs.check_snippets(str(md), run=False)
+    assert len(errors) == 1 and "no/such/script.py" in errors[0]
+
+
+def test_repo_docs_pass_link_and_syntax_check():
+    """The committed README + docs/ tree must be healthy (the CI docs job
+    additionally executes the <!-- docs-smoke --> marked snippets)."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_repo_docs_have_smoke_snippets():
+    """At least one executable snippet each in sweeps.md and benchmarks.md —
+    the docs job must have something real to run."""
+    for name in ("sweeps.md", "benchmarks.md"):
+        with open(os.path.join(REPO, "docs", name), encoding="utf-8") as f:
+            blocks = list(check_docs.iter_code_blocks(f.read()))
+        assert any(lang == "python" and marked
+                   for lang, _, marked in blocks), name

@@ -1,0 +1,277 @@
+"""Scan-of-chunks sweep execution: chunked == monolithic.
+
+`SweepEngine(chunk_rounds=C)` splits the one R-round scan into an outer
+Python loop over ceil(R/C) inner scans, threading the (state, keys,
+absolute-round-offset) carry through the chunk boundaries;
+`async_staging=True` additionally double-buffers the per-chunk host->device
+batch transfers.  These tests pin the contract: for ANY chunk size —
+including C that does not divide R and C > R — the chunked engine replays
+the monolithic scan at rtol 1e-6 (bit-for-bit under `strict_numerics`), on
+both state paths, with grouped defense dispatch, with caller-provided keys,
+and under a ("data",) mesh.
+
+Multi-device cases need fake host devices; the CI `sweep-sharded` job runs
+this module with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+(set before any jax import).  Under plain tier-1 (1 device) those cases
+skip and the single-device-mesh + unsharded cases run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.data import FederatedSampler, iter_chunk_blocks
+from repro.fl import SweepEngine, SweepSpec
+from repro.launch.mesh import make_sweep_mesh
+import sweep_testlib as LIB
+
+U = LIB.U
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(see the CI sweep-sharded job)")
+
+
+def _tiny_problem(rounds=7, **kw):
+    return LIB.tiny_problem(rounds=rounds, **kw)
+
+
+def _grid_cases(dim, num):
+    # jam_lane: noise + jamming lanes, so every RNG stream crosses chunk
+    # boundaries.
+    return LIB.grid_cases(dim, num, jam_lane=True)
+
+
+def _defense_grid_cases(dim, num):
+    # One family per screening mechanism (sort, masked trim, pairwise
+    # distances, Weiszfeld) keeps the chunk-boundary coverage while tracing
+    # fewer groups than the sharded suite's full list.
+    return LIB.defense_grid_cases(dim, num, defenses=(
+        LIB.DEFENSES[1], LIB.DEFENSES[2], LIB.DEFENSES[3], LIB.DEFENSES[5]))
+
+
+def _assert_results_match(a, b, bitwise=False):
+    close = (np.testing.assert_array_equal if bitwise else
+             lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-6,
+                                                     atol=1e-7))
+    assert a.loss.shape == b.loss.shape
+    close(a.loss, b.loss)
+    close(a.grad_norm, b.grad_norm)
+    assert set(a.metrics) == set(b.metrics)
+    for k in b.metrics:
+        close(np.asarray(a.metrics[k]), np.asarray(b.metrics[k]))
+    for aleaf, bleaf in zip(jax.tree_util.tree_leaves(a.params),
+                            jax.tree_util.tree_leaves(b.params)):
+        assert aleaf.shape == bleaf.shape
+        close(np.asarray(aleaf), np.asarray(bleaf))
+
+
+# ------------------------------------------------------------ data utility
+
+
+def test_iter_chunk_blocks_partitions_exactly():
+    """ceil(R/C) blocks, last one short, concat == input, numpy views."""
+    batches = {"x": np.arange(7 * 3).reshape(7, 3), "y": np.arange(7.0)}
+    blocks = list(iter_chunk_blocks(batches, 3))
+    assert [b["x"].shape[0] for b in blocks] == [3, 3, 1]
+    for k in batches:
+        np.testing.assert_array_equal(
+            np.concatenate([b[k] for b in blocks]), batches[k])
+        assert np.shares_memory(blocks[0][k], batches[k])  # zero-copy view
+    (only,) = iter_chunk_blocks(batches, 99)
+    assert only["x"].shape[0] == 7
+    with pytest.raises(ValueError):
+        next(iter_chunk_blocks(batches, 0))
+
+
+def test_iter_round_chunks_replays_stack_rounds():
+    """FederatedSampler.iter_round_chunks draws the same stream as one big
+    stack_rounds call (the chunked engine's incremental host pipeline)."""
+    rng = np.random.default_rng(0)
+    shards = {i: (rng.normal(size=(20, 3)).astype(np.float32),
+                  rng.integers(0, 4, size=20)) for i in range(U)}
+    stacked = FederatedSampler(shards, batch_per_worker=4, seed=7).stack_rounds(7)
+    blocks = list(FederatedSampler(shards, batch_per_worker=4,
+                                   seed=7).iter_round_chunks(7, 3))
+    assert [b["x"].shape[0] for b in blocks] == [3, 3, 1]
+    for k in stacked:
+        np.testing.assert_array_equal(
+            np.concatenate([b[k] for b in blocks]), stacked[k])
+
+
+# ------------------------------------------------- chunked == monolithic
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 7, 10])
+def test_chunked_matches_monolithic_flat(chunk):
+    """Flat-state path, R=7 rounds: every chunk size — divisible, not
+    divisible (the short-remainder recompile), C == R, C > R — replays the
+    monolithic scan, metrics schedule included."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 6))
+    eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
+    mono = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=2).run(
+        params, batches)
+    ch = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=2,
+                     chunk_rounds=chunk).run(params, batches)
+    _assert_results_match(ch, mono)
+
+
+def test_chunked_matches_monolithic_tree_state():
+    """Tree-state path: the chunk carry is the stacked params pytree."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 5))
+    mono = SweepEngine(loss, spec, flat_state=False).run(params, batches)
+    ch = SweepEngine(loss, spec, flat_state=False, chunk_rounds=3).run(
+        params, batches)
+    _assert_results_match(ch, mono)
+
+
+@pytest.mark.parametrize("flat_state", [True, False])
+def test_chunked_strict_numerics_bitwise(flat_state):
+    """Acceptance: under strict_numerics the chunked engine is BIT-identical
+    to the monolithic scan on both state paths (R % C != 0)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 5))
+    mono = SweepEngine(loss, spec, flat_state=flat_state,
+                       strict_numerics=True).run(params, batches)
+    ch = SweepEngine(loss, spec, flat_state=flat_state, strict_numerics=True,
+                     chunk_rounds=3).run(params, batches)
+    _assert_results_match(ch, mono, bitwise=True)
+
+
+def test_chunked_rng_continuity_with_custom_keys():
+    """Caller-provided per-lane keys: the carried key state crossing a chunk
+    boundary must continue the monolithic split sequence (noise + jamming
+    lanes make every round consume draws)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 4))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(4) + 42)
+    mono = SweepEngine(loss, spec, strict_numerics=True).run(
+        params, batches, keys=keys)
+    ch = SweepEngine(loss, spec, strict_numerics=True, chunk_rounds=2).run(
+        params, batches, keys=keys)
+    _assert_results_match(ch, mono, bitwise=True)
+
+
+def test_async_staging_bit_identical_to_sync():
+    """async_staging is a pure scheduling change: identical programs and
+    operands, so bit-identical results."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 4))
+    sync = SweepEngine(loss, spec, chunk_rounds=3).run(params, batches)
+    asy = SweepEngine(loss, spec, chunk_rounds=3,
+                      async_staging=True).run(params, batches)
+    _assert_results_match(asy, sync, bitwise=True)
+
+
+def test_chunked_grouped_dispatch_mixed_grid():
+    """Mixed analog+defense grid under the default grouped dispatch: the lane
+    permutation and host-side scatter-back must survive the chunk split (and
+    match the switch-dispatch reference)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_defense_grid_cases(dim, 8))
+    mono = SweepEngine(loss, spec).run(params, batches)
+    ch = SweepEngine(loss, spec, chunk_rounds=3).run(params, batches)
+    _assert_results_match(ch, mono)
+    switch = SweepEngine(loss, spec, grouped_dispatch=False,
+                         chunk_rounds=3).run(params, batches)
+    _assert_results_match(switch, mono)
+
+
+def test_chunked_eval_schedule_anchored_to_absolute_round():
+    """eval_every=3 with C=2: due rounds {0, 3, 6} straddle chunk boundaries;
+    the NaN on/off pattern must match the monolithic schedule exactly."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 3))
+    eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
+    ch = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=3,
+                     chunk_rounds=2).run(params, batches)
+    acc = np.asarray(ch.metrics["accuracy"])
+    due = [0, 3, 6]  # t % 3 == 0 plus the final round (6 == R-1 here)
+    assert not np.isnan(acc[:, due]).any()
+    off = [t for t in range(acc.shape[1]) if t not in due]
+    assert np.isnan(acc[:, off]).all()
+
+
+def test_chunked_zero_rounds_matches_monolithic():
+    """Degenerate R=0 stack: the chunked engine must fall back to the
+    monolithic program's empty [S, 0] outputs instead of crashing."""
+    loss, params, dim, batches = _tiny_problem()
+    batches = {k: v[:0] for k, v in batches.items()}
+    spec = SweepSpec.build(_grid_cases(dim, 2))
+    eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
+    mono = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
+    ch = SweepEngine(loss, spec, eval_fn=eval_fn, chunk_rounds=3).run(
+        params, batches)
+    assert ch.loss.shape == mono.loss.shape == (2, 0)
+    for cleaf, mleaf in zip(jax.tree_util.tree_leaves(ch.params),
+                            jax.tree_util.tree_leaves(mono.params)):
+        np.testing.assert_array_equal(np.asarray(cleaf), np.asarray(mleaf))
+
+
+def test_chunk_knob_validation():
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 2))
+    with pytest.raises(ValueError):
+        SweepEngine(loss, spec, chunk_rounds=0)
+    with pytest.raises(ValueError):
+        SweepEngine(loss, spec, async_staging=True)  # needs chunk_rounds
+
+
+# ------------------------------------------------------------------- mesh
+
+
+def test_single_device_mesh_chunked_matches_unsharded_monolithic():
+    """Degenerate 1-device mesh + chunking + async staging == the plain
+    monolithic engine.  Runs everywhere (tier-1)."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 6))
+    eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
+    mono = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
+    ch = SweepEngine(loss, spec, eval_fn=eval_fn, mesh=make_sweep_mesh(1),
+                     chunk_rounds=3, async_staging=True).run(params, batches)
+    _assert_results_match(ch, mono)
+
+
+@needs_8_devices
+def test_sharded_chunked_matches_unsharded_monolithic():
+    """8 fake devices, S=13 (ghost-padded), C=3 over R=7: sharding and
+    chunking compose; every real lane replays the unsharded monolithic
+    engine."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_grid_cases(dim, 13))
+    mono = SweepEngine(loss, spec).run(params, batches)
+    ch = SweepEngine(loss, spec, mesh=make_sweep_mesh(8), chunk_rounds=3,
+                     async_staging=True).run(params, batches)
+    assert ch.loss.shape[0] == 13  # ghosts dropped
+    _assert_results_match(ch, mono)
+
+
+@needs_8_devices
+def test_sharded_chunked_grouped_defense_grid():
+    """Acceptance: grouped dispatch + 8 fake devices + chunking on the mixed
+    defense grid (per-group ghost padding), rtol 1e-6 vs the unsharded
+    monolithic engine and bitwise vs the sharded monolithic engine under
+    strict_numerics."""
+    loss, params, dim, batches = _tiny_problem()
+    spec = SweepSpec.build(_defense_grid_cases(dim, 13))
+    mono = SweepEngine(loss, spec).run(params, batches)
+    eng = SweepEngine(loss, spec, mesh=make_sweep_mesh(8), chunk_rounds=3)
+    assert eng._groups is not None and eng._groups.exec_lanes % 8 == 0
+    ch = eng.run(params, batches)
+    assert ch.loss.shape[0] == 13
+    _assert_results_match(ch, mono)
+
+    sh_mono = SweepEngine(loss, spec, mesh=make_sweep_mesh(8),
+                          strict_numerics=True).run(params, batches)
+    sh_ch = SweepEngine(loss, spec, mesh=make_sweep_mesh(8),
+                        strict_numerics=True, chunk_rounds=2,
+                        async_staging=True).run(params, batches)
+    _assert_results_match(sh_ch, sh_mono, bitwise=True)

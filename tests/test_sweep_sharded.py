@@ -21,53 +21,18 @@ import pytest
 
 jax.config.update("jax_threefry_partitionable", True)
 
-from repro.core.aggregation import FLOAConfig
-from repro.core.attacks import AttackConfig, AttackType, first_n_mask
-from repro.core.channel import ChannelConfig
-from repro.core.power_control import Policy, PowerConfig
-from repro.core.scenario import DefenseSpec
-from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
+from repro.fl import FLTrainer, SweepEngine, SweepSpec
 from repro.launch.mesh import make_sweep_mesh
-
-U = 4
+from sweep_testlib import (
+    defense_grid_cases as _defense_grid_cases,
+    grid_cases as _grid_cases,
+    tiny_problem as _tiny_problem,
+)
 
 needs_8_devices = pytest.mark.skipif(
     jax.device_count() < 8,
     reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
            "(see the CI sweep-sharded job)")
-
-
-def _tiny_problem(rounds=5, batch=8, d_in=6, d_h=5):
-    def loss(params, b):
-        pred = jax.nn.relu(b["x"] @ params["w1"]) @ params["w2"]
-        return jnp.mean((pred - b["y"]) ** 2)
-    k = jax.random.PRNGKey(0)
-    params = {"w1": jax.random.normal(k, (d_in, d_h)),
-              "w2": jax.random.normal(k, (d_h, 1))}
-    dim = sum(p.size for p in jax.tree_util.tree_leaves(params))
-    rng = np.random.default_rng(0)
-    batches = {"x": rng.normal(size=(rounds, U * batch, d_in)).astype(np.float32),
-               "y": rng.normal(size=(rounds, U * batch, 1)).astype(np.float32)}
-    return loss, params, dim, batches
-
-
-def _floa(dim, policy, n_atk, noise=0.05, attack=AttackType.STRONGEST):
-    return FLOAConfig(
-        channel=ChannelConfig(num_workers=U, sigma=1.0,
-                              noise_std=0.0 if policy == Policy.EF else noise),
-        power=PowerConfig(num_workers=U, dim=dim, p_max=1.0, policy=policy),
-        attack=AttackConfig(attack=attack if n_atk else AttackType.NONE,
-                            byzantine_mask=first_n_mask(U, n_atk)),
-    )
-
-
-def _grid_cases(dim, num):
-    """CI/BEV x attacker-count grid, cycled to `num` lanes (fig-4 style)."""
-    cells = [(pol, n) for n in (0, 1, 2, 3) for pol in (Policy.CI, Policy.BEV)]
-    return [ScenarioCase(f"{cells[i % 8][0].value}@N{cells[i % 8][1]}#{i}",
-                         _floa(dim, cells[i % 8][0], cells[i % 8][1]),
-                         0.05, seed=100 + i)
-            for i in range(num)]
 
 
 def _assert_lanes_match(sharded, unsharded):
@@ -135,37 +100,6 @@ def test_sharded_strict_and_custom_keys():
     sh = SweepEngine(loss, spec, strict_numerics=True,
                      mesh=make_sweep_mesh(8)).run(params, batches, keys=keys)
     _assert_lanes_match(sh, un)
-
-
-_DEFENSES = [
-    DefenseSpec(name="mean"),
-    DefenseSpec(name="median"),
-    DefenseSpec(name="trimmed_mean", trim=1),
-    DefenseSpec(name="krum", num_byzantine=1),
-    DefenseSpec(name="multi_krum", num_byzantine=1, multi=2),
-    DefenseSpec(name="geometric_median"),
-]
-
-
-def _defense_grid_cases(dim, num):
-    """Mixed analog + digital lanes cycled to `num` (the showdown grid in
-    miniature): lanes 0/1 of each period are FLOA BEV/CI, the rest walk the
-    defense families."""
-    period = 2 + len(_DEFENSES)
-    cases = []
-    for i in range(num):
-        j, n_atk = i % period, (i // period) % 3
-        if j < 2:
-            pol = (Policy.BEV, Policy.CI)[j]
-            cases.append(ScenarioCase(f"{pol.value}@N{n_atk}#{i}",
-                                      _floa(dim, pol, n_atk), 0.05,
-                                      seed=200 + i))
-        else:
-            spec = _DEFENSES[j - 2]
-            cases.append(ScenarioCase(f"{spec.name}@N{n_atk}#{i}",
-                                      _floa(dim, Policy.EF, n_atk, 0.0), 0.05,
-                                      seed=200 + i, defense=spec))
-    return cases
 
 
 def test_single_device_mesh_defense_lanes_match_unsharded():

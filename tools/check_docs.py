@@ -1,0 +1,203 @@
+"""Docs health check: intra-repo markdown links + runnable code snippets.
+
+The docs/ tree and README are part of the engine's contract surface, so CI
+treats them like code (the `docs` job runs this script on every push):
+
+1. **Links.** Every relative markdown link `[text](path)` and
+   `[text](path#anchor)` must resolve: the file exists inside the repo, and
+   for `.md` targets the `#anchor` matches a heading (GitHub slug rules).
+   External links (http/https/mailto) are ignored.  Links that resolve
+   outside the repo root (e.g. README's `../../actions/...` CI badge, which
+   is a GitHub-web path) are skipped, not failed.
+2. **Python snippets.** Every ```python fenced block must at least
+   compile (syntax check).  Blocks explicitly marked with an HTML comment
+   `<!-- docs-smoke -->` on the line directly above the fence are also
+   EXECUTED (with --run-snippets) under `PYTHONPATH=src:. REPRO_SMOKE=1`
+   from the repo root — the docs' worked examples cannot silently rot.
+3. **Bash snippets.** Not executed, but every `*.py` path token inside a
+   ```bash block must exist in the repo — a renamed benchmark script breaks
+   the docs build instead of the reader.
+
+Usage:
+  PYTHONPATH=src python tools/check_docs.py [--run-snippets] [files...]
+
+With no files, checks README.md and docs/**/*.md from the repo root.
+Exits non-zero listing every failure (it does not stop at the first).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SMOKE_MARK = "<!-- docs-smoke -->"
+
+# [text](target) — excluding images; target split from an optional #anchor.
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading line (enough of the rules for this
+    repo: lowercase, drop punctuation except hyphens/spaces, spaces to
+    hyphens; markdown emphasis/code markers stripped)."""
+    text = heading.strip().lstrip("#").strip()
+    # Strip markdown code/emphasis markers but NOT underscores: GitHub keeps
+    # them (`sweep_bench.py` slugs to sweep_benchpy), and no heading in this
+    # repo uses _underscore emphasis_.
+    text = re.sub(r"[`*]", "", text)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links -> text
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md_path: str) -> set:
+    slugs = set()
+    in_fence = False
+    with open(md_path, encoding="utf-8") as f:
+        for line in f:
+            if line.startswith("```"):
+                in_fence = not in_fence
+            elif not in_fence and line.lstrip().startswith("#"):
+                slugs.add(github_slug(line))
+    return slugs
+
+
+def iter_links(md_text: str):
+    """(target, anchor) pairs for every non-external link, fences excluded."""
+    in_fence = False
+    for line in md_text.splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, anchor = target.partition("#")
+            yield path, anchor
+
+
+def iter_code_blocks(md_text: str):
+    """(lang, code, smoke_marked) for every fenced block."""
+    lines = md_text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE_RE.match(lines[i])
+        if m:
+            lang = m.group(1)
+            marked = any(SMOKE_MARK in lines[j] for j in range(max(0, i - 2), i)
+                         if lines[j].strip())
+            body, i = [], i + 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield lang, "\n".join(body), marked
+        i += 1
+
+
+def check_links(md_path: str) -> list:
+    errors = []
+    base = os.path.dirname(md_path)
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    own_slugs = None
+    for path, anchor in iter_links(text):
+        rel = os.path.relpath(md_path, REPO_ROOT)
+        if path:
+            full = os.path.abspath(os.path.join(base, path))
+            if not (full == REPO_ROOT
+                    or full.startswith(REPO_ROOT + os.sep)):
+                continue  # GitHub-web path (e.g. the CI badge); not on disk
+            if not os.path.exists(full):
+                errors.append(f"{rel}: broken link -> {path}")
+                continue
+        else:
+            full = md_path
+        if anchor and full.endswith(".md"):
+            if full == md_path:
+                if own_slugs is None:
+                    own_slugs = heading_slugs(md_path)
+                slugs = own_slugs
+            else:
+                slugs = heading_slugs(full)
+            if anchor.lower() not in slugs:
+                errors.append(
+                    f"{rel}: broken anchor -> {path or '(self)'}#{anchor}")
+    return errors
+
+
+def check_snippets(md_path: str, run: bool) -> list:
+    errors = []
+    rel = os.path.relpath(md_path, REPO_ROOT)
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    for n, (lang, code, marked) in enumerate(iter_code_blocks(text)):
+        label = f"{rel} block {n} ({lang or 'plain'})"
+        if lang == "python":
+            try:
+                compile(code, label, "exec")
+            except SyntaxError as e:
+                errors.append(f"{label}: syntax error: {e}")
+                continue
+            if marked and run:
+                env = dict(os.environ, REPRO_SMOKE="1", JAX_PLATFORMS="cpu")
+                env["PYTHONPATH"] = os.pathsep.join(
+                    [os.path.join(REPO_ROOT, "src"), REPO_ROOT,
+                     env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+                proc = subprocess.run(
+                    [sys.executable, "-c", code], cwd=REPO_ROOT, env=env,
+                    capture_output=True, text=True)
+                if proc.returncode != 0:
+                    errors.append(f"{label}: snippet failed "
+                                  f"(exit {proc.returncode}):\n"
+                                  f"{proc.stderr.strip()[-2000:]}")
+        elif lang in ("bash", "sh", "shell"):
+            for tok in re.findall(r"[\w./-]+\.py\b", code):
+                if not os.path.exists(os.path.join(REPO_ROOT, tok)):
+                    errors.append(f"{label}: references missing file {tok}")
+    return errors
+
+
+def default_files() -> list:
+    files = [os.path.join(REPO_ROOT, "README.md")]
+    docs = os.path.join(REPO_ROOT, "docs")
+    for root, _, names in os.walk(docs):
+        files += [os.path.join(root, n) for n in sorted(names)
+                  if n.endswith(".md")]
+    return files
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="markdown files "
+                    "(default: README.md + docs/**/*.md)")
+    ap.add_argument("--run-snippets", action="store_true",
+                    help="execute <!-- docs-smoke --> marked python blocks "
+                         "(PYTHONPATH=src:. REPRO_SMOKE=1, repo root cwd)")
+    args = ap.parse_args(argv)
+    files = [os.path.abspath(f) for f in args.files] or default_files()
+    errors, checked = [], 0
+    for f in files:
+        errors += check_links(f)
+        errors += check_snippets(f, run=args.run_snippets)
+        checked += 1
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s) in {checked} file(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    mode = "links + snippets (executed)" if args.run_snippets else \
+        "links + snippet syntax"
+    print(f"check_docs: OK — {checked} file(s), {mode}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
