@@ -18,7 +18,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.registry import PAPER_MLP
+from repro.configs import PAPER_MLP
 from repro.core import (
     AttackConfig,
     AttackType,
@@ -32,7 +32,7 @@ from repro.core import (
 from repro.core import theory
 from repro.data import FederatedSampler, make_dataset, worker_split
 from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
-from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from repro.models import init_mlp, mlp_accuracy, mlp_loss
 
 jax.config.update("jax_threefry_partitionable", True)
 

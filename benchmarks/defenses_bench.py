@@ -23,7 +23,7 @@ from repro.core import (AttackConfig, AttackType, ChannelConfig, DefenseSpec,
                         FLOAConfig, PowerConfig, first_n_mask)
 from repro.data import FederatedSampler
 from repro.fl import ScenarioCase, SweepEngine, SweepSpec
-from repro.models.mlp import mlp_loss
+from repro.models import mlp_loss
 
 DEFENSES = [
     ("mean", DefenseSpec(name="mean")),

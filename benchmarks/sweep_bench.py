@@ -65,6 +65,15 @@ defense section is sized explicitly rather than inheriting the headline
 shape), with per-defense cold/warm rounds-per-sec recorded under the JSON's
 "defenses" key and the grouped-vs-switch warm speedup at the top level.
 
+--workers benches the worker-population scaling series: the mixed-defense
+worker grid (analog FLOA + median / trimmed-mean / Krum lanes) at each U in
+--workers-series (default 10,1000,10000) on a deliberately tiny MLP, both
+unsharded and worker-sharded over every visible device
+(ExecutionPlan(mesh=make_sweep_mesh(n, worker_shards=n)) — the OTA combine
+as a psum over worker shards), recorded under the JSON's "workers" key.
+The perf gate skips workers rows whose (u, lanes, rounds, dim,
+worker_shards) shape differs from the baseline's instead of failing them.
+
 Results are printed as CSV and written to a machine-readable JSON
 (--out, default BENCH_sweep.json) so the perf trajectory is tracked across
 PRs; the CI sweep-sharded job uploads it as a workflow artifact AND gates on
@@ -90,6 +99,8 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import (
     Experiment,
@@ -97,11 +108,18 @@ from benchmarks.common import (
     experiment_floa,
     figure_setup,
 )
+from repro import make_sweep_mesh
 from repro.core import AttackConfig, AttackType, ChannelConfig, FLOAConfig
 from repro.core import DefenseSpec, PowerConfig, first_n_mask
 from repro.data import FederatedSampler
-from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
-from repro.models.mlp import mlp_loss
+from repro.fl import (
+    ExecutionPlan,
+    FLTrainer,
+    ScenarioCase,
+    SweepEngine,
+    SweepSpec,
+)
+from repro.models import mlp_loss
 
 DEFENSE_FAMILIES = [
     ("floa", None),  # analog reference lanes (BEV policy)
@@ -142,15 +160,15 @@ def bench_defenses(mc, shards, params, rounds: int, scenarios: int,
     dispatch speedup on the grid where it matters."""
     batches = FederatedSampler(shards, mc.batch_per_worker,
                                seed=1).stack_rounds(rounds)
-    grids = [(name, defense_grid(mc, name, spec, scenarios), {})
+    grids = [(name, defense_grid(mc, name, spec, scenarios), ExecutionPlan())
              for name, spec in DEFENSE_FAMILIES]
     mixed = [c for _, cases, _ in grids for c in cases[:max(1, scenarios // 2)]]
-    grids.append(("mixed", mixed, {}))
-    grids.append(("mixed_switch", mixed, dict(grouped_dispatch=False)))
+    grids.append(("mixed", mixed, ExecutionPlan()))
+    grids.append(("mixed_switch", mixed, ExecutionPlan(grouped_dispatch=False)))
 
     cold, runners = {}, []
-    for name, cases, kw in grids:
-        engine = SweepEngine(mlp_loss, SweepSpec.build(cases), **kw)
+    for name, cases, plan in grids:
+        engine = SweepEngine(mlp_loss, SweepSpec.build(cases), plan=plan)
         run_once = (lambda e=engine: e.run(params, batches))
         t0 = time.perf_counter()
         run_once()
@@ -176,6 +194,104 @@ def bench_defenses(mc, shards, params, rounds: int, scenarios: int,
             warm_rounds_per_sec=round(total / best[name], 2))
         print(f"{name},{lanes},{out[name]['cold_rounds_per_sec']:.1f},"
               f"{out[name]['warm_rounds_per_sec']:.1f}")
+    return out
+
+
+def worker_grid(u: int, dim: int):
+    """Mixed-defense lanes at worker population U: one analog FLOA (BEV)
+    lane plus median / trimmed-mean / Krum screening lanes, U//10 STRONGEST
+    attackers — the large-U showdown in miniature, exercising the psum OTA
+    combine and every large-U defense routing tier at once."""
+    n_atk = max(1, u // 10)
+    fams = [None,
+            DefenseSpec(name="median"),
+            DefenseSpec(name="trimmed_mean", trim=n_atk),
+            DefenseSpec(name="krum", num_byzantine=n_atk)]
+    cases = []
+    for i, spec in enumerate(fams):
+        floa = FLOAConfig(
+            channel=ChannelConfig(num_workers=u, sigma=1.0,
+                                  noise_std=0.05 if spec is None else 0.0),
+            power=PowerConfig(num_workers=u, dim=dim, p_max=1.0,
+                              policy=Policy.BEV if spec is None
+                              else Policy.EF),
+            attack=AttackConfig(attack=AttackType.STRONGEST,
+                                byzantine_mask=first_n_mask(u, n_atk)))
+        name = "floa" if spec is None else spec.name
+        cases.append(ScenarioCase(f"{name}@U{u}", floa, 0.05, seed=400 + i,
+                                  defense=spec if spec is not None
+                                  else DefenseSpec()))
+    return cases
+
+
+def bench_workers(series, rounds: int, reps: int) -> dict:
+    """U-scaling series (--workers): the mixed-defense worker grid at each
+    U in `series`, unsharded AND worker-sharded over every visible device
+    (the sharded row is skipped on single-device hosts).  A deliberately
+    tiny MLP (D~260) keeps the model-side work flat so the rows isolate how
+    the engine scales with the worker population: per-worker gradient
+    production, the standardization handshake, the OTA combine, and the
+    large-U defense kernels (U=10 unrolled sort / direct Krum, U=1e3
+    bitonic / blocked Krum, U=1e4 jnp.sort fallback / blocked Krum).
+    Timing reps are capped at 2 for this section: the U=1e4 rows are
+    minutes-per-rep on a CPU box and best-of-2 is enough for a gate with
+    0.5 tolerance.  On a CPU backend the sharded row is additionally
+    skipped from U=1e4 up (marked `sharded_skipped` in the record): the
+    digital screening lanes recompute their defense on every shard after
+    the sub-slab all-gather, so 8 emulated devices on a 2-core box do 8x
+    the work serially — tens of minutes for a row that measures thread
+    thrash, not the engine."""
+    d_in, d_h = 16, 4
+    dim = d_in * d_h + d_h
+    reps = min(reps, 2)
+
+    def loss(params, b):
+        pred = jax.nn.relu(b["x"] @ params["w1"]) @ params["w2"]
+        return jnp.mean((pred - b["y"]) ** 2)
+
+    k = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(k, (d_in, d_h)),
+              "w2": jax.random.normal(k, (d_h, 1))}
+    shards_w = jax.device_count()
+    out = {}
+    print(f"# worker scaling: U series {list(series)}, D={dim}, "
+          f"R={rounds} rounds, worker_shards={shards_w}")
+    print("u,engine,lanes,cold_rounds_per_sec,warm_rounds_per_sec")
+    for u in series:
+        rng = np.random.default_rng(u)
+        batches = {
+            "x": rng.normal(size=(rounds, u, d_in)).astype(np.float32),
+            "y": rng.normal(size=(rounds, u, 1)).astype(np.float32)}
+        spec = SweepSpec.build(worker_grid(u, dim))
+        engines = {"unsharded": SweepEngine(loss, spec)}
+        row = dict(u=u, lanes=len(spec), rounds=rounds, dim=dim,
+                   worker_shards=shards_w)
+        if shards_w > 1:
+            if u >= 10_000 and jax.default_backend() == "cpu":
+                row["sharded_skipped"] = "cpu-emulated collectives"
+                print(f"{u},sharded,{len(spec)},skipped (cpu-emulated "
+                      "collectives)")
+            else:
+                engines["sharded"] = SweepEngine(
+                    loss, spec, plan=ExecutionPlan(
+                        mesh=make_sweep_mesh(shards_w,
+                                             worker_shards=shards_w)))
+        for name, engine in engines.items():
+            t0 = time.perf_counter()
+            engine.run(params, batches)
+            cold = time.perf_counter() - t0
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                engine.run(params, batches)
+                best = min(best, time.perf_counter() - t0)
+            total = len(spec) * rounds
+            row[name] = dict(cold_rounds_per_sec=round(total / cold, 2),
+                             warm_rounds_per_sec=round(total / best, 2))
+            print(f"{u},{name},{len(spec)},"
+                  f"{row[name]['cold_rounds_per_sec']:.1f},"
+                  f"{row[name]['warm_rounds_per_sec']:.1f}")
+        out[f"U{u}"] = row
     return out
 
 
@@ -232,6 +348,24 @@ def check_regressions(fresh: dict, baseline: dict,
             notes.append(f"defenses/{name}: lane/round shape differs, skipped")
         else:
             gate("defenses", name, f_row, b_row)
+    for name, b_row in (baseline.get("workers") or {}).items():
+        f_row = (fresh.get("workers") or {}).get(name)
+        if f_row is None:
+            notes.append(f"workers/{name}: not in fresh run, skipped")
+        elif any(f_row.get(k) != b_row.get(k)
+                 for k in ("u", "lanes", "rounds", "dim", "worker_shards")):
+            # A different U series / device count is a different program
+            # shape (e.g. CI's reduced --workers-series, or a sharded row
+            # timed at another worker_shards) — skip, don't fail.
+            notes.append(f"workers/{name}: U-series shape differs, skipped")
+        else:
+            for sub in ("unsharded", "sharded"):
+                if sub in b_row:
+                    if sub not in f_row:
+                        notes.append(f"workers/{name}/{sub}: not in fresh "
+                                     "run, skipped")
+                    else:
+                        gate(f"workers/{name}", sub, f_row[sub], b_row[sub])
     return fails, notes
 
 
@@ -250,7 +384,9 @@ def grid(num: int, rounds: int):
 def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
          reps: int = 3, skip_looped: bool = False, defenses: bool = False,
          defense_rounds: int = 10, defense_scenarios: int = 6,
-         chunk_rounds: int = 5, out_path: str = "BENCH_sweep.json",
+         chunk_rounds: int = 5, workers: bool = False,
+         workers_series: str = "10,1000,10000", workers_rounds: int = 3,
+         out_path: str = "BENCH_sweep.json",
          check_against: str = "", tolerance: float = 0.5) -> dict:
     base_record = None
     if check_against:
@@ -317,7 +453,7 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
     ])
 
     # --- scan+vmap: the PR 1 tree-state engine — whole grid, one program.
-    engine = SweepEngine(mlp_loss, spec, flat_state=False)
+    engine = SweepEngine(mlp_loss, spec, plan=ExecutionPlan(flat_state=False))
     measure("scan+vmap", lambda e=engine: e.run(params, batches))
 
     # --- flat: flat-state scan + fused combine/update (this PR's warm path).
@@ -328,17 +464,17 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
     # double-buffered host->device staging — the A/B isolates the input-
     # pipeline overlap from the chunking itself.
     chunk = max(1, min(chunk_rounds, rounds))
-    engine = SweepEngine(mlp_loss, spec, chunk_rounds=chunk)
+    engine = SweepEngine(mlp_loss, spec,
+                         plan=ExecutionPlan(chunk_rounds=chunk))
     measure("flat+chunk", lambda e=engine: e.run(params, batches))
-    engine = SweepEngine(mlp_loss, spec, chunk_rounds=chunk,
-                         async_staging=True)
+    engine = SweepEngine(mlp_loss, spec, plan=ExecutionPlan(
+        chunk_rounds=chunk, async_staging=True))
     measure("flat+chunk+async", lambda e=engine: e.run(params, batches))
 
     # --- flat+shmap: the same flat scan sharded over every visible device.
     if sharded:
-        from repro.launch.mesh import make_sweep_mesh
-        mesh = make_sweep_mesh()
-        engine = SweepEngine(mlp_loss, spec, mesh=mesh)
+        engine = SweepEngine(mlp_loss, spec,
+                             plan=ExecutionPlan(mesh=make_sweep_mesh()))
         measure("flat+shmap", lambda e=engine: e.run(params, batches))
 
     # Warm reps are interleaved across engines (A B C A B C ...) and each
@@ -399,6 +535,9 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
                 / d["mixed_switch"]["warm_rounds_per_sec"], 3)
             print(f"# mixed grid grouped vs switch warm speedup: "
                   f"{record['mixed_grouped_vs_switch_warm_speedup']:.2f}x")
+    if workers:
+        series = [int(s) for s in str(workers_series).split(",") if s]
+        record["workers"] = bench_workers(series, workers_rounds, reps)
     # Gate BEFORE writing --out so the persisted record (the CI artifact)
     # carries the regression verdict, not just the raw numbers.
     if base_record is not None:
@@ -443,6 +582,14 @@ if __name__ == "__main__":
     ap.add_argument("--chunk-rounds", type=int, default=5,
                     help="chunk size C for the flat+chunk(+async) rows "
                          "(clamped to [1, rounds])")
+    ap.add_argument("--workers", action="store_true",
+                    help="also bench the worker-population scaling series "
+                         "(mixed-defense grid at each U, unsharded + "
+                         "worker-sharded over every visible device)")
+    ap.add_argument("--workers-series", default="10,1000,10000",
+                    help="comma-separated U values for --workers")
+    ap.add_argument("--workers-rounds", type=int, default=3,
+                    help="rounds per worker-scaling engine (--workers)")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="machine-readable output path ('' to disable)")
     ap.add_argument("--check-against", default="",
@@ -459,7 +606,9 @@ if __name__ == "__main__":
                skip_looped=args.skip_looped, defenses=args.defenses,
                defense_rounds=args.defense_rounds,
                defense_scenarios=args.defense_scenarios,
-               chunk_rounds=args.chunk_rounds, out_path=args.out,
+               chunk_rounds=args.chunk_rounds, workers=args.workers,
+               workers_series=args.workers_series,
+               workers_rounds=args.workers_rounds, out_path=args.out,
                check_against=args.check_against, tolerance=args.tolerance)
     if rec.get("regressions"):
         raise SystemExit(1)

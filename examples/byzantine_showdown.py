@@ -26,7 +26,7 @@ jax.config.update("jax_threefry_partitionable", True)
 
 import jax.numpy as jnp
 
-from repro.configs.registry import PAPER_MLP
+from repro.configs import PAPER_MLP
 from repro.core import (
     AttackConfig, AttackType, ChannelConfig, DefenseSpec, FLOAConfig, Policy,
     PowerConfig, first_n_mask, noise_std_for_snr,
@@ -34,7 +34,7 @@ from repro.core import (
 from repro.core import theory
 from repro.data import FederatedSampler, make_dataset, worker_split
 from repro.fl import ScenarioCase, SweepSpec, run_sweep
-from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from repro.models import init_mlp, mlp_accuracy, mlp_loss
 
 # Smoke mode (CI): the same policy x defense x attacker-count grid — every
 # defense family, mixed with the analog lanes, through the grouped dispatch —

@@ -1,0 +1,53 @@
+"""Public API of the BEV-SGD reproduction.
+
+Everything in `__all__` is the supported surface: the compiled sweep engine
+and its `ExecutionPlan` strategy object, the scenario/spec builders, the
+frozen config dataclasses they consume, and the sweep-mesh constructor.
+Deeper modules (`repro.core.*`, `repro.kernels.*`, `repro.launch.*`) are
+implementation detail — importable, but their layout may shift between PRs;
+examples, benchmarks, and docs snippets import from here (or the `repro.fl` /
+`repro.configs` / `repro.models` package roots) only.
+"""
+from repro.core import (
+    AttackConfig,
+    AttackType,
+    ChannelConfig,
+    DefenseSpec,
+    FLOAConfig,
+    Policy,
+    PowerConfig,
+    first_n_mask,
+    noise_std_for_snr,
+)
+from repro.fl import (
+    ExecutionPlan,
+    FLTrainer,
+    RoundLog,
+    ScenarioCase,
+    SweepEngine,
+    SweepResult,
+    SweepSpec,
+    run_sweep,
+)
+from repro.launch.mesh import make_sweep_mesh
+
+__all__ = [
+    "AttackConfig",
+    "AttackType",
+    "ChannelConfig",
+    "DefenseSpec",
+    "ExecutionPlan",
+    "FLOAConfig",
+    "FLTrainer",
+    "Policy",
+    "PowerConfig",
+    "RoundLog",
+    "ScenarioCase",
+    "SweepEngine",
+    "SweepResult",
+    "SweepSpec",
+    "first_n_mask",
+    "make_sweep_mesh",
+    "noise_std_for_snr",
+    "run_sweep",
+]

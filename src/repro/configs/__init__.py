@@ -2,6 +2,7 @@ from repro.configs.registry import (  # noqa: F401
     ARCH_IDS,
     ARCH_MODULES,
     INPUT_SHAPES,
+    PAPER_MLP,
     get_config,
     get_smoke,
     shape_applicable,

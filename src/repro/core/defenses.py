@@ -63,24 +63,41 @@ def _flatten_u(grads_u):
 # --------------------------------------------------------- flat [U, D] kernels
 
 # Below this flat size (or off-TPU, where Pallas only interprets) jnp.sort's
-# generic lowering is fine; above it the unrolled odd-even transposition
-# network (kernels/defense_sort.py) sorts the [U, TILE_D] block in one VMEM
-# pass — U is tiny and static, which is the whole trick.
+# generic lowering is fine; above it the sorting-network kernels
+# (kernels/defense_sort.py) sort the [U, TILE] block in one VMEM pass.
 SORT_KERNEL_MIN_D = 1 << 14
+# Worker-axis routing: up to this U the fully-unrolled odd-even network is
+# the kernel (O(U^2) min/max pairs is cheap when U is tiny); above it the
+# unrolled trace explodes quadratically, so large-U slabs take the bitonic
+# stage kernel (O(log^2 U) whole-block ops, U padded to a power of two) up
+# to its own VMEM ceiling, and the jnp.sort oracle beyond that.
+SORT_UNROLL_MAX_U = 32
 
 
 def sorted_columns(flat: Array, use_kernel: Optional[bool] = None,
                    interpret: Optional[bool] = None) -> Array:
     """Ascending per-coordinate sort over the worker axis — the screening
-    primitive coordinate-median and trimmed-mean share.  Routed to the Pallas
+    primitive coordinate-median and trimmed-mean share.  Routed to a Pallas
     sorting-network kernel on TPU at large D (same routing contract as
-    `core.aggregation.batched_floa_combine`), `jnp.sort` elsewhere."""
+    `core.aggregation.batched_floa_combine`), `jnp.sort` elsewhere.
+
+    The worker axis picks the kernel: U <= SORT_UNROLL_MAX_U takes the
+    unrolled odd-even network, larger U the bitonic stage kernel (while its
+    padded U fits VMEM).  The guard is unconditional — even with
+    use_kernel=True a large-U slab is NEVER routed into the unrolled
+    network, whose O(U^2) trace at U >= 1k would dwarf the sort itself."""
+    u = flat.shape[0]
     if use_kernel is None:
         use_kernel = (jax.default_backend() == "tpu"
                       and flat.shape[-1] >= SORT_KERNEL_MIN_D)
     if use_kernel:
         from repro.kernels import ops
-        return ops.sort_columns(flat, interpret=interpret)
+        if u <= SORT_UNROLL_MAX_U:
+            return ops.sort_columns(flat, interpret=interpret)
+        u_pad = 1 << max(u - 1, 0).bit_length()
+        if u_pad <= ops.BITONIC_MAX_U:
+            return ops.sort_columns_bitonic(flat, interpret=interpret)
+        # U too large for any VMEM-resident column block: fall through.
     return jnp.sort(flat, axis=0)
 
 
@@ -121,6 +138,11 @@ def _krum_scores(flat: Array, num_byzantine) -> Array:
     Exposed for the property-test suite (permutation equivariance of the
     scores is checkable even when near-ties make the selection itself
     fp-fragile).
+
+    The broadcast difference materializes a [U, U, D] intermediate before
+    XLA fuses — fine at the paper's U=10, catastrophic at U >= 1k (17 TB at
+    U=4096, D=256) — so this is the SMALL-U path only; `flat_krum` routes
+    U >= KRUM_BLOCK_MIN_U to `_krum_scores_blocked`.
     """
     u = flat.shape[0]
     closest = jnp.maximum(u - num_byzantine - 2, 1)
@@ -135,11 +157,59 @@ def _krum_scores(flat: Array, num_byzantine) -> Array:
     return jnp.sum(jnp.where(j[None, :] < closest, srt, 0.0), axis=1)
 
 
+# Above this U, Krum switches to the row-blocked distance path: the full
+# [U, U] matrix (let alone the [U, U, D] broadcast intermediate) never
+# materializes at once — only one [KRUM_BLOCK_ROWS, U] block at a time.
+KRUM_BLOCK_MIN_U = 64
+KRUM_BLOCK_ROWS = 128
+
+
+def _krum_scores_blocked(flat: Array, num_byzantine,
+                         block_rows: int = KRUM_BLOCK_ROWS) -> Array:
+    """`_krum_scores` for large U, one [B, U] distance block at a time.
+
+    Per block of B rows: d2 = |x_b|^2 + |x|^2 - 2 x_b x^T via a [B, D] x
+    [D, U] matmul (clamped at 0 — the expanded form can go slightly
+    negative in fp), self-distances masked to +inf by global row id, each
+    row sorted and masked-prefix-reduced exactly like the small-U path.
+    `lax.map` sequences the blocks, so peak memory is O(B*U + U*D), never
+    O(U^2).  The expanded distance form differs from the direct (x-y)^2 sum
+    at fp rounding level, so blocked vs small-U scores agree to rtol, not
+    bitwise — the oracle-contract tests pin it.
+    """
+    u, d = flat.shape
+    closest = jnp.maximum(u - num_byzantine - 2, 1)
+    nb = -(-u // block_rows)
+    pad = nb * block_rows - u
+    fpad = jnp.pad(flat, ((0, pad), (0, 0)))
+    sq = jnp.sum(jnp.square(flat), axis=1)                   # [U]
+    sq_pad = jnp.pad(sq, (0, pad))
+    blocks = fpad.reshape(nb, block_rows, d)
+    sq_blocks = sq_pad.reshape(nb, block_rows)
+    ids = jnp.arange(nb * block_rows).reshape(nb, block_rows)
+    j = jnp.arange(u)
+
+    def score_block(args):
+        xb, sb, rb = args
+        d2 = sb[:, None] + sq[None, :] - 2.0 * (xb @ flat.T)  # [B, U]
+        d2 = jnp.maximum(d2, 0.0)
+        d2 = jnp.where(rb[:, None] == j[None, :], jnp.inf, d2)
+        srt = jnp.sort(d2, axis=1)
+        return jnp.sum(jnp.where(j[None, :] < closest, srt, 0.0), axis=1)
+
+    scores = jax.lax.map(score_block, (blocks, sq_blocks, ids))  # [nb, B]
+    return scores.reshape(-1)[:u]
+
+
 def flat_krum(flat: Array, num_byzantine, multi=1) -> Array:
     """(Multi-)Krum: average the `multi` lowest-scoring workers' gradients.
-    num_byzantine and multi may be traced scalars (masked rank selection)."""
+    num_byzantine and multi may be traced scalars (masked rank selection).
+    Large worker populations take the blocked distance path (the [U, U]
+    matrix never materializes at once)."""
     u = flat.shape[0]
-    scores = _krum_scores(flat, num_byzantine)
+    scores = (_krum_scores_blocked(flat, num_byzantine)
+              if u >= KRUM_BLOCK_MIN_U
+              else _krum_scores(flat, num_byzantine))
     ranked = flat[jnp.argsort(scores)]                 # [U, D], best first
     keep = jnp.arange(u) < multi
     sel = jnp.sum(jnp.where(keep[:, None], ranked, 0.0), axis=0)

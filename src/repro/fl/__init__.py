@@ -1,3 +1,4 @@
+from repro.fl.plan import ExecutionPlan
 from repro.fl.sweep import (
     ScenarioCase,
     SweepEngine,
@@ -7,5 +8,5 @@ from repro.fl.sweep import (
 )
 from repro.fl.trainer import FLTrainer, RoundLog
 
-__all__ = ["FLTrainer", "RoundLog", "ScenarioCase", "SweepEngine",
-           "SweepResult", "SweepSpec", "run_sweep"]
+__all__ = ["ExecutionPlan", "FLTrainer", "RoundLog", "ScenarioCase",
+           "SweepEngine", "SweepResult", "SweepSpec", "run_sweep"]

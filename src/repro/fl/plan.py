@@ -1,0 +1,122 @@
+"""ExecutionPlan: the sweep engine's execution strategy as one validated value.
+
+`SweepEngine` accreted six orthogonal execution knobs across PRs 1-5
+(`flat_state`, `strict_numerics`, `mesh`, `grouped_dispatch`, `chunk_rounds`,
+`async_staging`); the worker-axis sharding PR adds a seventh
+(`worker_shards`).  Every knob changes HOW a sweep executes, never WHAT it
+computes — so they belong together in one frozen config object whose
+invariants are checked at construction, not deep inside the engine on first
+run:
+
+    plan = ExecutionPlan(mesh=make_sweep_mesh(8, worker_shards=4),
+                         chunk_rounds=16, async_staging=True)
+    SweepEngine(loss_fn, spec, plan=plan)
+
+The legacy per-knob `SweepEngine(...)` kwargs still work — they build a plan
+internally and emit a DeprecationWarning — and are pinned bitwise-equal to
+the plan path (tests/test_execution_plan.py).
+
+Cross-knob invariants enforced here (same exception types the engine
+historically raised, so callers' error handling is unchanged):
+
+  - ``chunk_rounds`` is None or a positive int (ValueError otherwise);
+  - ``async_staging`` requires ``chunk_rounds`` (ValueError) — without a
+    chunk boundary there is nothing to double-buffer;
+  - ``mesh`` requires ``flat_state`` (AssertionError) — only the flat scan
+    is shard_mapped;
+  - ``mesh`` axis names must be ("data",), ("workers",) or
+    ("data", "workers") (AssertionError);
+  - ``worker_shards > 1`` requires a mesh carrying a "workers" axis of
+    exactly that size (ValueError); left at the default 1 it is derived
+    from the mesh, so `ExecutionPlan(mesh=make_sweep_mesh(8,
+    worker_shards=4))` alone is enough.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_SWEEP_MESH_AXES = (("data",), ("workers",), ("data", "workers"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """How one compiled sweep executes.  See the `SweepEngine` class
+    docstring for each knob's equivalence contract (what stays identical
+    across settings, and to what tolerance); this class only owns the
+    cross-knob validity rules.
+
+    flat_state      params as one [S, D] matrix across the scan (the warm
+                    path); False keeps the PR-1 tree-state reference.
+    strict_numerics pin the standardization stats' fp reduction tree so
+                    every strategy replays the same trajectory bitwise.
+    mesh            optional sweep mesh — 1-D ("data",) shards the lane
+                    axis, 1-D ("workers",) shards the worker axis, 2-D
+                    ("data", "workers") shards both (see
+                    `launch.mesh.make_sweep_mesh`).
+    grouped_dispatch  static per-defense-family lane partition (vs the
+                    per-lane lax.switch reference).
+    chunk_rounds    scan-of-chunks execution with [C, ...] batch blocks.
+    async_staging   double-buffer the per-chunk host->device staging.
+    worker_shards   shard the [S, U, D] slab's worker axis over the mesh's
+                    "workers" axis; the OTA combine becomes a psum over
+                    worker shards.  Derived from the mesh when left at 1.
+    """
+
+    flat_state: bool = True
+    strict_numerics: bool = False
+    mesh: Optional[Mesh] = None
+    grouped_dispatch: bool = True
+    chunk_rounds: Optional[int] = None
+    async_staging: bool = False
+    worker_shards: int = 1
+
+    def __post_init__(self):
+        if self.chunk_rounds is not None and self.chunk_rounds < 1:
+            raise ValueError(
+                f"chunk_rounds must be a positive int or None, got "
+                f"{self.chunk_rounds}")
+        if self.async_staging and self.chunk_rounds is None:
+            raise ValueError(
+                "async_staging double-buffers the per-chunk batch transfers; "
+                "it requires chunk_rounds (the monolithic engine consumes "
+                "the whole [R, ...] stack in one dispatch, so there is no "
+                "chunk boundary to overlap)")
+        if self.mesh is not None:
+            assert self.flat_state, \
+                "mesh-sharded sweeps require the flat-state path"
+            assert self.mesh.axis_names in _SWEEP_MESH_AXES, (
+                f'sweep mesh axes must be one of {_SWEEP_MESH_AXES}, '
+                f'got {self.mesh.axis_names}')
+        mesh_workers = (dict(self.mesh.shape).get("workers", 1)
+                        if self.mesh is not None else 1)
+        if self.worker_shards == 1 and mesh_workers > 1:
+            # Derive the worker-shard count from the mesh so a plan built
+            # from make_sweep_mesh(n, worker_shards=W) alone is complete.
+            object.__setattr__(self, "worker_shards", mesh_workers)
+        if self.worker_shards != 1:
+            if self.worker_shards < 1:
+                raise ValueError(
+                    f"worker_shards must be >= 1, got {self.worker_shards}")
+            if not self.flat_state:
+                raise ValueError(
+                    "worker_shards > 1 requires the flat-state path "
+                    "(flat_state=True)")
+            if mesh_workers != self.worker_shards:
+                raise ValueError(
+                    f"worker_shards={self.worker_shards} needs a mesh with a "
+                    f'"workers" axis of that size; got '
+                    f'{None if self.mesh is None else dict(self.mesh.shape)}')
+
+    @property
+    def data_shards(self) -> int:
+        """Lane-axis shard count (1 without a mesh or without a "data" axis)."""
+        if self.mesh is None:
+            return 1
+        return dict(self.mesh.shape).get("data", 1)
+
+    @property
+    def worker_sharded(self) -> bool:
+        return self.worker_shards > 1

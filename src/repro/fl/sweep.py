@@ -95,11 +95,17 @@ from repro.core.attacks import AttackType
 from repro.core.power_control import Policy
 from repro.core.scenario import DefenseSpec
 from repro.data.pipeline import iter_chunk_blocks
+from repro.fl.plan import ExecutionPlan
 from repro.fl.trainer import RoundLog
 from repro.launch.mesh import lane_sharding, replicated_sharding, \
     stage_batch_block
 
 Array = jax.Array
+
+# Sentinel distinguishing "caller passed this legacy kwarg" from "left at
+# default": only explicitly-passed legacy knobs trigger the deprecation
+# warning and participate in building the implicit ExecutionPlan.
+_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -303,14 +309,100 @@ def make_row_unflatten(template):
     return unflatten_row, sizes
 
 
+class _WorkerShards:
+    """Worker-axis sharding arithmetic for the flat-state scan body.
+
+    Built once per engine (U and the shard count are static); every method
+    below runs INSIDE the shard_mapped scan, on one device's slice of the
+    ("workers",) mesh axis.  U is ghost-padded up to u_pad = shards * u_loc:
+    ghost workers replicate worker U-1's batch rows (finite gradients, no
+    NaN poisoning) and carry zero combine coefficients, so they contribute
+    exactly nothing to the psum and their stats are sliced away after the
+    all-gather.
+
+    RNG discipline: channel gains / coefficients / noise are always drawn at
+    the FULL U on every shard (ScenarioParams is replicated), so the key
+    consumption schedule — and hence every draw — is identical to the
+    unsharded engine's.  Only the gradient slab and its weighted reduction
+    are actually distributed.
+    """
+
+    def __init__(self, u: int, shards: int):
+        self.u = u
+        self.shards = shards
+        self.u_loc = -(-u // shards)          # ceil: last shard may be ghosts
+        self.u_pad = self.u_loc * shards
+
+    def local_batch(self, batch):
+        """Gather this shard's workers' rows of the per-round batch:
+        [U*b, ...] leaves -> [u_loc*b, ...].  Global worker indices are
+        clipped to U-1, so ghost workers recompute worker U-1's gradient
+        (discarded — their coefficient column is zeroed in `local_coeff`)."""
+        b = jax.tree_util.tree_leaves(batch)[0].shape[0] // self.u
+        widx = jax.lax.axis_index("workers")
+        gi = jnp.clip(widx * self.u_loc + jnp.arange(self.u_loc), 0, self.u - 1)
+        rows = (gi[:, None] * b + jnp.arange(b)[None, :]).reshape(-1)
+        return jax.tree_util.tree_map(lambda x: x[rows], batch)
+
+    def gather_slab(self, x: Array) -> Array:
+        """[S, u_loc, D] local slab -> [S, U, D] full slab (all-gather over
+        "workers"; ghost rows sliced off).  The digital screening defenses
+        consume this — they are order statistics over the worker axis, so
+        they need the gathered slab the analog scheme avoids."""
+        full = jax.lax.all_gather(x, "workers", axis=1, tiled=True)
+        return full[:, :self.u]
+
+    def gather_stats(self, gbar_i: Array, eps2_i: Array):
+        """Per-worker scalar stats [S, u_loc] -> full [S, U].  All-gathering
+        the SCALARS (not the slab) keeps the handshake cheap, and the global
+        mean is then reduced from the identical [S, U] vector the unsharded
+        engine reduces — same values, same order, bitwise-equal stats."""
+        g = jax.lax.all_gather(gbar_i, "workers", axis=1, tiled=True)
+        e = jax.lax.all_gather(eps2_i, "workers", axis=1, tiled=True)
+        return g[:, :self.u], e[:, :self.u]
+
+    def local_coeff(self, coeff: Array) -> Array:
+        """Full [S, U] combine coefficients -> this shard's [S, u_loc] slice,
+        ghost columns zero-padded (u_pad = shards * u_loc, so the dynamic
+        slice is always in bounds and never clamps across shard boundaries)."""
+        pad = self.u_pad - self.u
+        if pad:
+            coeff = jnp.pad(coeff, ((0, 0), (0, pad)))
+        widx = jax.lax.axis_index("workers")
+        return jax.lax.dynamic_slice_in_dim(
+            coeff, widx * self.u_loc, self.u_loc, axis=1)
+
+    def psum_combine(self, coeff, flat_loc, noise_row, bias_row, eps):
+        """The OTA superposition as a psum over worker shards: each shard
+        contributes the weighted sum of its own workers' gradients, the
+        all-reduce models the multiple-access channel's addition, and the
+        (replicated) de-standardization bias + receiver noise land once
+        after the reduction — matching `batched_floa_combine`'s reference
+        einsum with the U axis distributed."""
+        partial = jnp.einsum("su,sud->sd", self.local_coeff(coeff), flat_loc)
+        total = jax.lax.psum(partial, "workers")
+        return total + bias_row[:, None] + eps[:, None] * noise_row
+
+
 class SweepEngine:
     """Builds (and caches) the jitted scan-over-rounds x vmap-over-scenarios
     program for one (loss_fn, spec, eval_fn) triple.  Reuse the instance to
     amortize compilation across repeated runs (benchmarks, seeds-resampling).
 
-    Every constructor knob changes HOW the sweep executes, never WHAT it
-    computes; each one's equivalence contract (what stays identical, and to
-    what tolerance) is stated below and pinned by the test suite.
+    Execution strategy lives in an `ExecutionPlan` (fl/plan.py) — the
+    primary signature is::
+
+        engine = SweepEngine(loss_fn, spec, eval_fn=...,
+                             plan=ExecutionPlan(mesh=..., chunk_rounds=...))
+
+    Every plan knob changes HOW the sweep executes, never WHAT it computes;
+    each one's equivalence contract (what stays identical, and to what
+    tolerance) is stated below and pinned by the test suite.  The plan's
+    cross-knob invariants are validated at `ExecutionPlan` construction.
+    The pre-plan per-knob constructor kwargs (`flat_state=`, `mesh=`, ...)
+    still work: they build the equivalent plan internally (bitwise-equal
+    execution, pinned by tests/test_execution_plan.py) and emit a
+    DeprecationWarning.  Passing both a plan and legacy kwargs is an error.
 
     eval_fn / eval_every: run eval_fn only on rounds t with
     t % eval_every == 0 plus the final round (the FLTrainer.run schedule);
@@ -339,13 +431,33 @@ class SweepEngine:
     strategy's stats reduction differently and the strategies agree to fp
     rounding only.
 
-    mesh: optional 1-D ("data",) jax.sharding.Mesh (see
-    `launch.mesh.make_sweep_mesh`).  The flat-state scan is shard_mapped over
-    the lane axis; S is padded up to a multiple of the device count with
-    ghost lanes (replicas of the last scenario) that are dropped from the
-    returned SweepResult.  Requires flat_state=True.  Contract: every real
-    lane's trajectory matches the unsharded engine (rtol 1e-6; bitwise in
-    practice and under strict_numerics).
+    mesh: optional sweep mesh (see `launch.mesh.make_sweep_mesh`) — 1-D
+    ("data",) shards the lane axis, 1-D ("workers",) the worker axis, 2-D
+    ("data", "workers") both.  The flat-state scan is shard_mapped over the
+    mesh; with a "data" axis, S is padded up to a multiple of the lane-shard
+    count with ghost lanes (replicas of the last scenario) that are dropped
+    from the returned SweepResult.  Requires flat_state=True.  Contract:
+    every real lane's trajectory matches the unsharded engine (rtol 1e-6;
+    bitwise in practice and under strict_numerics).
+
+    worker_shards=W > 1 (derived from the mesh's "workers" axis) shards the
+    [S, U, D] gradient slab's WORKER axis: each shard computes gradients for
+    its own ceil(U/W) workers from its slice of the batch (ghost workers
+    replicate worker U-1 and are coefficient-masked to zero), the
+    standardization handshake all-gathers per-worker SCALAR stats (so the
+    global mean reduces the identical [S, U] vector the unsharded engine
+    reduces — bitwise-equal stats), and the OTA combine becomes a
+    `lax.psum` of per-shard partial superpositions over the "workers" axis.
+    Digital screening lanes all-gather their group's sub-slab first (order
+    statistics need the full worker axis).  RNG draws (channel gains,
+    coefficients, noise) happen at full U on every shard, so the key
+    schedule is the unsharded engine's exactly.  Contract: worker-sharded ==
+    unsharded at rtol ~1e-6 per round for any U (including U % W != 0) —
+    the psum reduces partial superpositions in mesh order, so multi-round
+    float32 trajectories may drift a few ulp past that; under
+    strict_numerics the engine all-gathers the full slab up front and
+    replays the unsharded reduction order verbatim — bitwise equality, at
+    the cost of materializing [S, U, D] per device.
 
     grouped_dispatch=True (default) partitions the lanes of a defense-
     carrying sweep by defense code at BUILD time (codes are concrete config):
@@ -387,46 +499,62 @@ class SweepEngine:
 
     def __init__(self, loss_fn: Callable, spec: SweepSpec,
                  eval_fn: Optional[Callable] = None, eval_every: int = 1,
-                 flat_state: bool = True, mesh: Optional[Mesh] = None,
-                 strict_numerics: bool = False,
-                 grouped_dispatch: bool = True,
-                 chunk_rounds: Optional[int] = None,
-                 async_staging: bool = False):
-        """See the class docstring for each knob's equivalence contract."""
-        if chunk_rounds is not None and chunk_rounds < 1:
-            raise ValueError(
-                f"chunk_rounds must be a positive int or None, got "
-                f"{chunk_rounds}")
-        if async_staging and chunk_rounds is None:
-            raise ValueError(
-                "async_staging double-buffers the per-chunk batch transfers; "
-                "it requires chunk_rounds (the monolithic engine consumes "
-                "the whole [R, ...] stack in one dispatch, so there is no "
-                "chunk boundary to overlap)")
+                 plan: Optional[ExecutionPlan] = None,
+                 flat_state=_UNSET, mesh=_UNSET, strict_numerics=_UNSET,
+                 grouped_dispatch=_UNSET, chunk_rounds=_UNSET,
+                 async_staging=_UNSET):
+        """See the class docstring for each plan knob's equivalence contract.
+
+        plan: the execution strategy (fl.plan.ExecutionPlan).  The remaining
+        kwargs are the deprecated pre-plan spelling: any that are passed
+        explicitly build the equivalent plan (DeprecationWarning); mixing
+        them with plan= raises.
+        """
+        legacy = {k: v for k, v in dict(
+            flat_state=flat_state, mesh=mesh, strict_numerics=strict_numerics,
+            grouped_dispatch=grouped_dispatch, chunk_rounds=chunk_rounds,
+            async_staging=async_staging).items() if v is not _UNSET}
+        if legacy:
+            if plan is not None:
+                raise ValueError(
+                    f"pass the execution strategy as plan=ExecutionPlan(...) "
+                    f"OR as the legacy per-knob kwargs, not both (got plan "
+                    f"and {sorted(legacy)})")
+            warnings.warn(
+                "SweepEngine's per-knob execution kwargs (flat_state, mesh, "
+                "strict_numerics, grouped_dispatch, chunk_rounds, "
+                "async_staging) are deprecated; pass "
+                "plan=ExecutionPlan(...) instead",
+                DeprecationWarning, stacklevel=2)
+            plan = ExecutionPlan(**legacy)
+        elif plan is None:
+            plan = ExecutionPlan()
+        self.plan = plan
         self.loss_fn = loss_fn
         self.spec = spec
         self.eval_fn = eval_fn
         self.eval_every = eval_every
-        self.flat_state = flat_state
-        self.mesh = mesh
-        self.strict_numerics = strict_numerics
-        self.grouped_dispatch = grouped_dispatch
-        self.chunk_rounds = chunk_rounds
-        self.async_staging = async_staging
+        # Legacy attribute surface: downstream code (tests, benchmarks)
+        # reads the knobs off the engine; keep them as plain mirrors of the
+        # plan.
+        self.flat_state = plan.flat_state
+        self.mesh = plan.mesh
+        self.strict_numerics = plan.strict_numerics
+        self.grouped_dispatch = plan.grouped_dispatch
+        self.chunk_rounds = plan.chunk_rounds
+        self.async_staging = plan.async_staging
         self._num = len(spec)
         self._u = spec.num_workers
         self._sp = spec.stacked_params()
-        shards = 1
-        if mesh is not None:
-            assert flat_state, "mesh-sharded sweeps require the flat-state path"
-            assert mesh.axis_names == ("data",), (
-                f'sweep mesh must be 1-D ("data",), got {mesh.axis_names}')
-            shards = mesh.shape["data"]
+        shards = plan.data_shards
+        self._ws = (_WorkerShards(self._u, plan.worker_shards)
+                    if plan.worker_sharded else None)
         # Grouped dispatch only matters when a screening defense shares the
         # grid with other families; pure-FLOA sweeps keep the untouched
         # (unpermuted) fused path regardless of the flag.
         self._groups = (SC.build_lane_groups(spec.lane_codes, shards)
-                        if grouped_dispatch and spec.any_digital else None)
+                        if plan.grouped_dispatch and spec.any_digital
+                        else None)
         if self._groups is not None:
             self._pad = self._groups.exec_lanes - self._num
             if self._groups.num_ghosts > self._num:
@@ -490,7 +618,7 @@ class SweepEngine:
                 for code, _, _ in self._groups.local_slices
                 if code != SC._FLOA_CODE}
 
-    def _make_analog_group_step(self):
+    def _make_analog_group_step(self, ws: Optional[_WorkerShards] = None):
         """The analog (code 0) group's leg of a grouped round.
 
         (w_g | None, flat_g, sub_g, sp_g, gbar_i, eps2_i) ->
@@ -503,6 +631,10 @@ class SweepEngine:
         per-lane math is the ungrouped round's exactly (same key-split
         schedule, same coefficient derivation); only which lanes trace it
         changes.
+
+        With ws (worker sharding, non-strict), flat_g is the LOCAL
+        [S_g, u_loc, D] slice, the draws still happen at full U (replicated
+        — identical key schedule), and the combine is `ws.psum_combine`.
         """
         any_noise = self.spec.analog_noise
         any_jam = self.spec.analog_jamming
@@ -524,10 +656,14 @@ class SweepEngine:
             else:
                 noise_row = jnp.zeros((n_g, dim), jnp.float32)
             bias_row = bias_w * gbar
-            if wg is not None and not any_jam:
-                return batched_floa_step(
-                    wg, spg.alpha, coeff, fg, noise_row, bias_row, eps)
-            gagg = batched_floa_combine(coeff, fg, noise_row, bias_row, eps)
+            if ws is not None:
+                gagg = ws.psum_combine(coeff, fg, noise_row, bias_row, eps)
+            else:
+                if wg is not None and not any_jam:
+                    return batched_floa_step(
+                        wg, spg.alpha, coeff, fg, noise_row, bias_row, eps)
+                gagg = batched_floa_combine(
+                    coeff, fg, noise_row, bias_row, eps)
             if any_jam:
                 n2 = jax.vmap(
                     lambda k: jax.random.normal(k, (dim,), jnp.float32)
@@ -686,16 +822,31 @@ class SweepEngine:
         strict = self.strict_numerics
         local_slices = self._groups.local_slices
         has_analog = any(c == SC._FLOA_CODE for c, _, _ in local_slices)
-        analog_step = self._make_analog_group_step()
+        # Worker sharding: strict mode all-gathers the full slab up front
+        # and replays the unsharded reduction order verbatim (bitwise
+        # contract); the default keeps the slab local and distributes the
+        # combine as a psum.
+        ws = self._ws
+        ws_run = None if strict else ws
+        analog_step = self._make_analog_group_step(ws_run)
         kernels = self._digital_group_kernels()
 
         def flat_loss(w_row, batch):
             return loss_fn(unflatten_row(w_row), batch)
 
         def one_round(w, batch, sub_s, sp: SC.ScenarioParams):
-            grads = jax.vmap(
-                lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
-            )(w)  # [S, U, D]
+            if ws is None:
+                grads = jax.vmap(
+                    lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
+                )(w)  # [S, U, D]
+            else:
+                lb = ws.local_batch(batch)
+                grads = jax.vmap(
+                    lambda wr: per_worker_grads(flat_loss, wr, lb,
+                                                ws.u_loc)[0]
+                )(w)  # [S, u_loc, D]
+                if strict:
+                    grads = ws.gather_slab(grads)
             if strict and has_analog:
                 grads = jax.lax.optimization_barrier(grads)
             w_parts, g_parts = [], []
@@ -710,10 +861,14 @@ class SweepEngine:
                     else:
                         gbar_i, eps2_i = jax.vmap(
                             lambda g: S.flat_scalar_stats(g))(fg)
+                        if ws_run is not None:
+                            gbar_i, eps2_i = ws.gather_stats(gbar_i, eps2_i)
                     w_new_g, gagg_g = analog_step(wg, fg, sub_s[sl], spg,
                                                   gbar_i, eps2_i)
                 else:
-                    gagg_g = kernels[code](_digital_flip(fg, spg),
+                    fg_full = (ws.gather_slab(fg) if ws_run is not None
+                               else fg)
+                    gagg_g = kernels[code](_digital_flip(fg_full, spg),
                                            spg.def_trim, spg.def_f,
                                            spg.def_multi)
                     w_new_g = wg - spg.alpha[:, None] * gagg_g
@@ -834,16 +989,33 @@ class SweepEngine:
         all_digital = self.spec.all_digital
         digital_select = (self._make_digital_select()
                           if self.spec.any_digital else None)
+        # Worker sharding: strict mode (and the all-digital short-circuit,
+        # whose defenses are order statistics over the full worker axis)
+        # all-gathers the slab right after the local gradient pass and then
+        # runs the unsharded math verbatim; the default keeps the slab local
+        # — scalar stats all-gather, the OTA combine psums.
+        ws = self._ws
+        ws_run = None if strict else ws
 
         def flat_loss(w_row, batch):
             return loss_fn(unflatten_row(w_row), batch)
 
         def one_round(w, batch, sub_s, sp: SC.ScenarioParams):
             num, dim = w.shape
-            # 1. per-worker gradients, already flat: [S, U, D].
-            grads = jax.vmap(
-                lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
-            )(w)
+            # 1. per-worker gradients, already flat: [S, U, D] (the local
+            # [S, u_loc, D] slice under worker sharding).
+            if ws is None:
+                grads = jax.vmap(
+                    lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
+                )(w)
+            else:
+                lb = ws.local_batch(batch)
+                grads = jax.vmap(
+                    lambda wr: per_worker_grads(flat_loss, wr, lb,
+                                                ws.u_loc)[0]
+                )(w)
+                if strict or all_digital:
+                    grads = ws.gather_slab(grads)
 
             # All-digital sweeps skip the analog leg entirely (stats,
             # channel draw, coefficients, combine — their outputs would be
@@ -869,6 +1041,11 @@ class SweepEngine:
             else:
                 gbar_i, eps2_i = jax.vmap(
                     lambda g: S.flat_scalar_stats(g))(grads)
+                if ws_run is not None:
+                    # Local per-worker scalars -> full [S, U]: the global
+                    # mean then reduces the same vector the unsharded
+                    # engine reduces (bitwise-equal stats).
+                    gbar_i, eps2_i = ws.gather_stats(gbar_i, eps2_i)
             gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
             eps = jnp.sqrt(eps2)
 
@@ -894,16 +1071,22 @@ class SweepEngine:
             # sweeps take the two-step route; pure-FLOA sweeps use the fused
             # step.
             bias_row = bias_w * gbar
-            if any_jam or digital_select is not None:
-                gagg = batched_floa_combine(
-                    coeff, grads, noise_row, bias_row, eps)
+            if any_jam or digital_select is not None or ws_run is not None:
+                if ws_run is not None:
+                    gagg = ws.psum_combine(
+                        coeff, grads, noise_row, bias_row, eps)
+                else:
+                    gagg = batched_floa_combine(
+                        coeff, grads, noise_row, bias_row, eps)
                 if any_jam:
                     n2 = jax.vmap(
                         lambda k: jax.random.normal(k, (dim,), jnp.float32)
                     )(ks[:, 2])
                     gagg = gagg + jam_std[:, None] * n2
                 if digital_select is not None:
-                    gagg = digital_select(gagg, grads, sp)
+                    slab = (ws.gather_slab(grads) if ws_run is not None
+                            else grads)
+                    gagg = digital_select(gagg, slab, sp)
                 w_new = w - sp.alpha[:, None] * gagg
             else:
                 w_new, gagg = batched_floa_step(
@@ -938,14 +1121,19 @@ class SweepEngine:
                 self._make_run_grouped(sizes)
                 if self._groups is not None else self._make_run(sizes))
         if self.mesh is not None:
-            lane, rep = P("data"), P()
             # Prefix specs: lane axis 0 on state/keys/ScenarioParams, lane
             # axis 1 on the [R, S]-stacked scan outputs, batches replicated.
+            # A mesh without a "data" axis (pure worker sharding) keeps
+            # every operand replicated over the mesh — only the scan body's
+            # own all_gather/psum collectives distribute work.
+            has_data = "data" in self.mesh.axis_names
+            lane = P("data") if has_data else P()
+            lane_t = P(None, "data") if has_data else P()
+            rep = P()
             run = shard_map(
                 run, mesh=self.mesh,
                 in_specs=(lane, lane, rep, lane),
-                out_specs=(lane, P(None, "data"), P(None, "data"),
-                           P(None, "data")),
+                out_specs=(lane, lane_t, lane_t, lane_t),
                 check_rep=False)
             # The chunk program additionally threads the raw (state, keys)
             # carry out (lane-sharded) and takes the replicated scalar
@@ -954,8 +1142,7 @@ class SweepEngine:
             chunk = shard_map(
                 chunk, mesh=self.mesh,
                 in_specs=(lane, lane, rep, rep, rep, lane),
-                out_specs=(lane, lane, P(None, "data"), P(None, "data"),
-                           P(None, "data")),
+                out_specs=(lane, lane, lane_t, lane_t, lane_t),
                 check_rep=False)
         self._run_jit = jax.jit(run)
         self._chunk_jit = jax.jit(chunk)
@@ -1099,13 +1286,19 @@ class SweepEngine:
 
 def run_sweep(loss_fn: Callable, params0, batches, spec: SweepSpec,
               eval_fn: Optional[Callable] = None,
-              eval_every: int = 1, flat_state: bool = True,
+              eval_every: int = 1,
+              plan: Optional[ExecutionPlan] = None,
+              flat_state: bool = True,
               mesh: Optional[Mesh] = None,
               chunk_rounds: Optional[int] = None,
               async_staging: bool = False) -> SweepResult:
-    """One-shot convenience wrapper around SweepEngine (same knobs; see the
-    SweepEngine class docstring for each one's equivalence contract)."""
+    """One-shot convenience wrapper around SweepEngine (see the SweepEngine
+    class docstring for each plan knob's equivalence contract).  Prefer
+    plan=ExecutionPlan(...); the loose kwargs build one (and are ignored
+    when plan is given)."""
+    if plan is None:
+        plan = ExecutionPlan(flat_state=flat_state, mesh=mesh,
+                             chunk_rounds=chunk_rounds,
+                             async_staging=async_staging)
     return SweepEngine(loss_fn, spec, eval_fn=eval_fn,
-                       eval_every=eval_every, flat_state=flat_state,
-                       mesh=mesh, chunk_rounds=chunk_rounds,
-                       async_staging=async_staging).run(params0, batches)
+                       eval_every=eval_every, plan=plan).run(params0, batches)

@@ -9,15 +9,33 @@ network over the worker axis — U compare-exchange passes of `minimum`/
 `maximum` on [TILE_D]-wide rows, fully unrolled at trace time, one pass over
 the slab in VMEM.
 
+The unrolled network is an O(U^2) trace, so it is CAPPED at U <=
+UNROLL_MAX_U (32): at the paper's U=10 it is 45 min/max pairs, at U=1024 it
+would be ~524k — a multi-minute trace for a worse schedule than a real
+sort.  Above the cap, `sort_columns_bitonic` is the large-U successor: the
+classic bitonic network expressed as O(log^2 U) whole-block stages, each
+stage one roll + select + min/max over the [U_pad, TILE] block (U padded to
+the next power of two with +inf, which ascending-sorts to the bottom rows
+and is sliced away).  The stage count is static and tiny (log2(4096)^2 =
+144), so the trace stays small while the data movement stays one VMEM pass
+per tile.  Routing between the two (and the `jnp.sort` oracle) lives in
+`core.defenses.sorted_columns`.
+
 Shape contract and tiling mirror `floa_aggregate`:
 
-  sort_columns  [U, D] -> [U, D]  ascending along axis 0
+  sort_columns          [U, D] -> [U, D]  ascending along axis 0 (U <= 32)
+  sort_columns_bitonic  [U, D] -> [U, D]  ascending along axis 0
+                                          (U padded to a power of two,
+                                           U_pad <= BITONIC_MAX_U)
 
-Grid is (D // TILE_D); the [U, TILE_D] block lives in VMEM (U<=32,
-TILE_D=2048, f32: 256 KiB — comfortably inside the VMEM budget).  D is
-padded to the tile once, in the un-jitted public wrapper, before the jitted
-pallas_call core (columns sort independently, so zero-padded columns cannot
-perturb real ones; see the D-padding recursion note in floa_aggregate.py).
+Grid is (D // TILE); the [U(_pad), TILE] block lives in VMEM (unrolled:
+U<=32 x TILE_D=2048 f32 = 256 KiB; bitonic: the tile narrows as U_pad grows
+— `bitonic_tile_d` keeps block x ~3 live temporaries inside the ~16 MiB
+budget, bottoming out at the 128-lane minimum tile, which is what caps
+U_pad at BITONIC_MAX_U=8192).  D is padded to the tile once, in the
+un-jitted public wrappers, before the jitted pallas_call core (columns sort
+independently, so zero-padded columns cannot perturb real ones; see the
+D-padding recursion note in floa_aggregate.py).
 The sweep engine's defense kernels call this per lane under `jax.vmap`
 (grouped dispatch vmaps one family over its lane group); Pallas's batching
 rule lifts the vmap into a leading grid dimension, so there is no separate
@@ -42,6 +60,13 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 TILE_D = 2048
+# Largest U the fully-unrolled odd-even network may trace (O(U^2) min/max
+# pairs); larger slabs route to the bitonic kernel or the jnp.sort oracle.
+UNROLL_MAX_U = 32
+# Largest padded U the bitonic kernel accepts: at the 128-lane minimum tile
+# an [8192, 128] f32 block is 4 MiB, and the stage body keeps ~3 such
+# temporaries live — beyond this the block cannot fit VMEM at any tile.
+BITONIC_MAX_U = 8192
 
 
 def _pad_last(x: Array, pad: int) -> Array:
@@ -92,9 +117,113 @@ def _sort_columns_core(x: Array, interpret: bool, tile_d: int) -> Array:
 
 def sort_columns(x: Array, interpret: bool = False,
                  tile_d: int = TILE_D) -> Array:
-    """[U, D] -> [U, D], ascending along the worker axis (axis 0)."""
+    """[U, D] -> [U, D], ascending along the worker axis (axis 0).
+
+    U is bounded by UNROLL_MAX_U — the network fully unrolls at trace time,
+    so an unbounded U is an O(U^2) trace-size bomb.  Large-U slabs belong to
+    `sort_columns_bitonic` (the `core.defenses.sorted_columns` router picks
+    for you)."""
     u, d = x.shape
+    if u > UNROLL_MAX_U:
+        raise ValueError(
+            f"sort_columns unrolls an O(U^2) network: U={u} exceeds the "
+            f"U<={UNROLL_MAX_U} bound — use sort_columns_bitonic (or the "
+            f"jnp.sort oracle) for large worker populations")
     pad = -d % tile_d  # single pad before the jitted core
     out = _sort_columns_core(_pad_last(x, pad), interpret=interpret,
                              tile_d=tile_d)
     return out[:, :d] if pad else out
+
+
+# ---------------------------------------------------- large-U bitonic stages
+
+
+def bitonic_tile_d(u_pad: int) -> int:
+    """Widest D tile whose [u_pad, tile] f32 block (x ~3 live stage
+    temporaries) stays inside the VMEM budget, floored at the 128-lane
+    minimum tile."""
+    return max(128, min(TILE_D, (1 << 19) // u_pad))
+
+
+def _bitonic_stages(x: Array) -> Array:
+    """Bitonic sorting network over axis 0 of an [N, T] block, N a power of
+    two; ascending.
+
+    The pairwise compare-exchange with partner ``l = i ^ j`` is vectorized
+    as whole-block rolls: rows with ``i & j == 0`` pair downward (partner at
+    i + j, i.e. roll(-j)), the rest pair upward (roll(+j)); the merge
+    direction flips with ``i & k``.  Each of the log2(N)*(log2(N)+1)/2
+    stages is one roll + two selects + min/max over the block — no
+    data-dependent control flow, no per-row slicing, so the trace is
+    O(log^2 N) whole-block ops instead of the unrolled network's O(N^2)
+    pairs.
+
+    Same tie/NaN semantics as the odd-even network (min/max compare-
+    exchanges): exact `jnp.sort` agreement on finite inputs, finite-only
+    contract (see the module docstring).
+    """
+    n = x.shape[0]
+    assert n & (n - 1) == 0, f"bitonic stages need a power-of-two N, got {n}"
+    if n == 1:
+        return x
+    i = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            is_first = (i & j) == 0            # partner sits at i + j
+            partner = jnp.where(is_first, jnp.roll(x, -j, axis=0),
+                                jnp.roll(x, j, axis=0))
+            asc = (i & k) == 0                 # merge direction of this block
+            keep_lo = is_first == asc
+            x = jnp.where(keep_lo, jnp.minimum(x, partner),
+                          jnp.maximum(x, partner))
+            j //= 2
+        k *= 2
+    return x
+
+
+def _bitonic_kernel(x_ref, o_ref):
+    x = x_ref[:].astype(jnp.float32)                # [U_pad, tile]
+    o_ref[:] = _bitonic_stages(x).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
+def _sort_columns_bitonic_core(x: Array, interpret: bool,
+                               tile_d: int) -> Array:
+    u, d = x.shape
+    assert d % tile_d == 0, "core requires pre-padded D (see public wrapper)"
+    return pl.pallas_call(
+        _bitonic_kernel,
+        grid=(d // tile_d,),
+        in_specs=[pl.BlockSpec((u, tile_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((u, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((u, d), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def sort_columns_bitonic(x: Array, interpret: bool = False,
+                         tile_d: int = 0) -> Array:
+    """[U, D] -> [U, D], ascending along the worker axis — the large-U
+    successor to `sort_columns`.
+
+    U is padded to the next power of two with +inf rows (they ascending-sort
+    to the bottom and are sliced away), D to the tile; both pads happen once
+    here, outside the jitted core.  tile_d=0 picks the VMEM-fitting width
+    via `bitonic_tile_d`."""
+    u, d = x.shape
+    u_pad = 1 << max(u - 1, 0).bit_length()         # next power of two
+    if u_pad > BITONIC_MAX_U:
+        raise ValueError(
+            f"sort_columns_bitonic: padded U={u_pad} exceeds "
+            f"BITONIC_MAX_U={BITONIC_MAX_U} (the [U_pad, 128] block no "
+            f"longer fits VMEM) — use the jnp.sort oracle")
+    tile_d = tile_d or bitonic_tile_d(u_pad)
+    dpad = -d % tile_d
+    xp = _pad_last(x, dpad)
+    if u_pad > u:
+        fill = jnp.full((u_pad - u, xp.shape[1]), jnp.inf, xp.dtype)
+        xp = jnp.concatenate([xp, fill], axis=0)
+    out = _sort_columns_bitonic_core(xp, interpret=interpret, tile_d=tile_d)
+    return out[:u, :d]

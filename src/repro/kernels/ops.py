@@ -15,7 +15,12 @@ from repro.kernels.floa_aggregate import (
     floa_aggregate_batched as _floa_aggregate_batched,
 )
 from repro.kernels.floa_aggregate import floa_step_batched as _floa_step_batched
-from repro.kernels.defense_sort import sort_columns as _sort_columns
+from repro.kernels.defense_sort import (
+    BITONIC_MAX_U,
+    UNROLL_MAX_U,
+    sort_columns as _sort_columns,
+    sort_columns_bitonic as _sort_columns_bitonic,
+)
 from repro.kernels.grad_stats import grad_stats as _grad_stats
 
 Array = jax.Array
@@ -48,11 +53,21 @@ def floa_step_batched(w, coeffs, grads, noise, bias, eps, alpha,
 
 
 def sort_columns(x, interpret=None) -> Array:
-    """[U, D] ascending sort along the worker axis (odd-even network).
-    Batched use goes through `jax.vmap` (Pallas lifts it into a leading
-    grid dimension); `sort_columns_batched_ref` is that route's oracle."""
+    """[U, D] ascending sort along the worker axis (odd-even network,
+    U <= UNROLL_MAX_U).  Batched use goes through `jax.vmap` (Pallas lifts
+    it into a leading grid dimension); `sort_columns_batched_ref` is that
+    route's oracle."""
     interpret = _interpret_default() if interpret is None else interpret
     return _sort_columns(x, interpret=interpret)
+
+
+def sort_columns_bitonic(x, interpret=None) -> Array:
+    """[U, D] ascending sort along the worker axis — the large-U successor
+    to `sort_columns`: O(log^2 U) bitonic stages instead of an O(U^2)
+    unrolled network, U padded to a power of two (<= BITONIC_MAX_U).  Same
+    oracle (`sort_columns_ref`) and vmap route as `sort_columns`."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _sort_columns_bitonic(x, interpret=interpret)
 
 
 def grad_stats(grads, interpret=None) -> Array:

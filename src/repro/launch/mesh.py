@@ -6,9 +6,11 @@ Multi-pod:  2x16x16 ("pod","data","model") = 512 chips; the FL worker axis is
 ("pod","data") = 32 workers, each tensor-parallel over 16 "model" chips.
 
 The sweep-engine placement helpers (`lane_sharding` / `replicated_sharding` /
-`stage_batch_block`) centralize how sweep operands land on a 1-D ("data",)
-mesh: lane-stacked operands (state, keys, ScenarioParams) split on the lane
-axis, batch blocks replicate.  `stage_batch_block` is the host->device edge
+`stage_batch_block`) centralize how sweep operands land on a sweep mesh —
+1-D ("data",), 1-D ("workers",), or 2-D ("data", "workers"), built by
+`make_sweep_mesh`: lane-stacked operands (state, keys, ScenarioParams) split
+on the lane axis over "data" (replicated over "workers"), batch blocks
+replicate.  `stage_batch_block` is the host->device edge
 of the chunked engine's double-buffered input pipeline — `jax.device_put` is
 asynchronous, so a block staged while the previous chunk computes lands
 pre-sharded with no device idle time and no resharding inside the
@@ -38,8 +40,18 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
-def make_sweep_mesh(num_devices: Optional[int] = None) -> Mesh:
-    """1-D ("data",) mesh for sharding a sweep's scenario-lane axis.
+def make_sweep_mesh(num_devices: Optional[int] = None,
+                    worker_shards: int = 1) -> Mesh:
+    """Sweep mesh: 1-D ("data",) over the scenario-lane axis by default;
+    worker_shards=W > 1 adds a ("workers",) axis that the [S, U, D]
+    gradient slab's worker axis shards over (the OTA combine becomes a psum
+    over worker shards — see fl/sweep.py).
+
+    Shapes: worker_shards=1 keeps the 1-D ("data",) mesh (every prior
+    caller unchanged); worker_shards=num_devices is a 1-D ("workers",)
+    mesh (all parallelism spent on the worker axis); anything in between
+    is a 2-D ("data", "workers") mesh with num_devices // worker_shards
+    lane shards.
 
     num_devices=None uses every visible device.  On CPU hosts pair with
     XLA_FLAGS=--xla_force_host_platform_device_count=N (set before any jax
@@ -48,7 +60,16 @@ def make_sweep_mesh(num_devices: Optional[int] = None) -> Mesh:
     devices = jax.devices()
     n = len(devices) if num_devices is None else num_devices
     assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
-    return Mesh(np.asarray(devices[:n]), ("data",))
+    assert worker_shards >= 1, worker_shards
+    if worker_shards == 1:
+        return Mesh(np.asarray(devices[:n]), ("data",))
+    assert n % worker_shards == 0, (
+        f"num_devices={n} not divisible by worker_shards={worker_shards}")
+    if worker_shards == n:
+        return Mesh(np.asarray(devices[:n]), ("workers",))
+    return Mesh(np.asarray(devices[:n]).reshape(n // worker_shards,
+                                                worker_shards),
+                ("data", "workers"))
 
 
 def make_debug_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
@@ -59,8 +80,12 @@ def make_debug_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
 
 
 def lane_sharding(mesh: Mesh) -> NamedSharding:
-    """Sharding for lane-stacked sweep operands: axis 0 splits over "data"."""
-    return NamedSharding(mesh, PartitionSpec("data"))
+    """Sharding for lane-stacked sweep operands: axis 0 splits over "data"
+    (replicated over any "workers" axis; a 1-D ("workers",) mesh has no lane
+    axis to split, so everything lands replicated)."""
+    spec = (PartitionSpec("data") if "data" in mesh.axis_names
+            else PartitionSpec())
+    return NamedSharding(mesh, spec)
 
 
 def replicated_sharding(mesh: Mesh) -> NamedSharding:

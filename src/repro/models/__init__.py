@@ -1,1 +1,9 @@
 """Model zoo: assigned architectures + the paper's MLP."""
+from repro.models.mlp import (  # noqa: F401
+    init_mlp,
+    mlp_accuracy,
+    mlp_logits,
+    mlp_loss,
+)
+
+__all__ = ["init_mlp", "mlp_accuracy", "mlp_logits", "mlp_loss"]

@@ -121,3 +121,141 @@ def test_sort_property_random_shapes():
                                       np.asarray(jnp.sort(xb, axis=1)))
 
     prop()
+
+
+# ------------------------------------------------- large-U bitonic successor
+
+
+@pytest.mark.parametrize("u", [1, 3, 10, 33, 100, 1000])
+@pytest.mark.parametrize("d", [1, 130, 515])
+def test_sort_columns_bitonic_matches_oracle(u, d):
+    """The bitonic stages are a pure rewrite of the same pinned path as the
+    unrolled network: exact jnp.sort agreement on finite inputs, including
+    non-power-of-two U (padded with +inf rows, sliced away) and off-tile D."""
+    x = jax.random.normal(jax.random.PRNGKey(u * 1000 + d), (u, d))
+    got = ops.sort_columns_bitonic(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ops.sort_columns_ref(x)))
+
+
+def test_sort_columns_bitonic_duplicates_and_vmap():
+    """Ties survive the min/max compare-exchanges, and the grouped-dispatch
+    vmap route agrees with the batched oracle (same contract as the
+    unrolled kernel's)."""
+    x = jnp.asarray(np.tile(np.float32([[2.0], [2.0], [-1.0], [2.0], [0.0]]),
+                            (1, 257)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.sort_columns_bitonic(x, interpret=True)),
+        np.asarray(ops.sort_columns_ref(x)))
+    xb = jax.random.normal(jax.random.PRNGKey(7), (3, 40, 257))
+    got = jax.vmap(lambda m: ops.sort_columns_bitonic(m, interpret=True))(xb)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ops.sort_columns_batched_ref(xb)))
+
+
+def test_sort_columns_unrolled_guard_raises_above_bound():
+    """Regression for the silent O(U^2) trace: the unrolled network must
+    REFUSE U above UNROLL_MAX_U instead of tracing half a million min/max
+    pairs."""
+    x = jnp.zeros((ops.UNROLL_MAX_U + 1, 128))
+    with pytest.raises(ValueError, match="O\\(U\\^2\\)"):
+        ops.sort_columns(x, interpret=True)
+    with pytest.raises(ValueError, match="O\\(U\\^2\\)"):
+        from repro.kernels.defense_sort import sort_columns
+        sort_columns(np.zeros((1000, 128), np.float32))
+
+
+def test_sort_columns_bitonic_guard_raises_above_bound():
+    """Padded U beyond BITONIC_MAX_U no longer fits a VMEM block — refuse,
+    the router falls back to the jnp.sort oracle."""
+    from repro.kernels.defense_sort import BITONIC_MAX_U
+    x = jnp.zeros((BITONIC_MAX_U + 1, 8))
+    with pytest.raises(ValueError, match="BITONIC_MAX_U"):
+        ops.sort_columns_bitonic(x, interpret=True)
+
+
+def test_sorted_columns_routes_by_population():
+    """`defenses.sorted_columns(use_kernel=True)` must route U <= 32 to the
+    unrolled network, 32 < U (pad <= 8192) to the bitonic stages, and
+    larger slabs to jnp.sort — never into the unrolled trace bomb — and
+    every route must agree with the oracle."""
+    small = jax.random.normal(jax.random.PRNGKey(0), (10, 140))
+    large = jax.random.normal(jax.random.PRNGKey(1), (64, 140))
+    np.testing.assert_array_equal(
+        np.asarray(DEF.sorted_columns(small, use_kernel=True,
+                                      interpret=True)),
+        np.asarray(jnp.sort(small, axis=0)))
+    np.testing.assert_array_equal(
+        np.asarray(DEF.sorted_columns(large, use_kernel=True,
+                                      interpret=True)),
+        np.asarray(jnp.sort(large, axis=0)))
+    # Above the bitonic cap: the guard falls through to jnp.sort instead of
+    # raising (use_kernel=True is a request, not a contract for huge U).
+    huge = jax.random.normal(jax.random.PRNGKey(2),
+                             (ops.BITONIC_MAX_U + 1, 3))
+    np.testing.assert_array_equal(
+        np.asarray(DEF.sorted_columns(huge, use_kernel=True,
+                                      interpret=True)),
+        np.asarray(jnp.sort(huge, axis=0)))
+
+
+def test_bitonic_property_random_shapes():
+    """Hypothesis property for the large-U path: bitonic == jnp.sort across
+    odd/even/non-pow2 U spanning the unrolled bound, off-tile D, heavy
+    duplication, and the vmap route."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from repro.kernels.defense_sort import sort_columns_bitonic
+
+    @settings(max_examples=25, deadline=None)
+    @given(u=st.integers(1, 80), d=st.integers(1, 300),
+           dup=st.booleans(), seed=st.integers(0, 2**31 - 1))
+    def prop(u, d, dup, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (u, d))
+        if dup:
+            x = jnp.round(x * 2.0) / 2.0
+        got = sort_columns_bitonic(x, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jnp.sort(x, axis=0)))
+
+    prop()
+
+
+# --------------------------------------------------- blocked Krum (large U)
+
+
+def _krum_flat(seed: int, u: int, d: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(u, d)) * 0.7 + 0.1).astype(np.float32)
+
+
+def test_blocked_krum_scores_match_direct():
+    """The blocked [B, U]-distance formulation (expanded ||a||^2 + ||b||^2
+    - 2ab, clamped at 0, KRUM_BLOCK_ROWS rows at a time) must agree with
+    the direct [U, U, D] broadcast scores — rtol contract, the expanded
+    form reassociates the fp sums."""
+    from repro.core.defenses import _krum_scores, _krum_scores_blocked
+    for u, d in ((64, 37), (130, 16), (200, 8)):
+        flat = jnp.asarray(_krum_flat(u * d, u, d))
+        direct = np.asarray(_krum_scores(flat, 3))
+        blocked = np.asarray(_krum_scores_blocked(flat, 3))
+        np.testing.assert_allclose(blocked, direct, rtol=2e-4, atol=1e-3)
+
+
+def test_flat_krum_blocked_route_equivalence():
+    """flat_krum at U >= KRUM_BLOCK_MIN_U (blocked route — the [U, U]
+    distance matrix never materializes at once) returns the same selection
+    the direct-score formulation would."""
+    from repro.core.defenses import (KRUM_BLOCK_MIN_U, _krum_scores,
+                                     flat_krum)
+    u, d, f = KRUM_BLOCK_MIN_U + 9, 12, 2
+    flat = jnp.asarray(_krum_flat(5, u, d))
+    got = np.asarray(flat_krum(flat, f))
+    want = np.asarray(flat[int(np.argmin(np.asarray(_krum_scores(flat, f))))])
+    np.testing.assert_array_equal(got, want)
+    # multi-krum on the blocked route: mean of the m best-scored workers
+    got_m = np.asarray(flat_krum(flat, f, multi=3))
+    order = np.argsort(np.asarray(_krum_scores(flat, f)), kind="stable")[:3]
+    np.testing.assert_allclose(
+        got_m, np.asarray(jnp.mean(flat[jnp.asarray(order)], axis=0)),
+        rtol=1e-5, atol=1e-6)

@@ -186,3 +186,23 @@ def test_property_geometric_median_weiszfeld_fixed_point(u, d, seed):
     z_next = (w[:, None] * flat).sum(axis=0) / w.sum()
     scale = float(np.linalg.norm(flat, axis=1).mean())
     assert float(np.linalg.norm(z_next - z)) <= 1e-2 * scale + 1e-6
+
+
+# ------------------------------------------------------------- blocked Krum
+
+
+@given(u=st.integers(64, 150), d=st.integers(2, 24),
+       f=st.integers(0, 4), seed=st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_property_blocked_krum_selects_like_direct(u, d, f, seed):
+    """flat_krum routes U >= KRUM_BLOCK_MIN_U through the blocked scores;
+    the selected worker must match the direct formulation's argmin unless
+    the two best scores are fp-tied (assume a margin, as the other Krum
+    properties do)."""
+    from repro.core.defenses import _krum_scores, _krum_scores_blocked
+    flat = jnp.asarray(_flat(seed, u, d))
+    direct = np.asarray(_krum_scores(flat, f))
+    blocked = np.asarray(_krum_scores_blocked(flat, f))
+    srt = np.sort(direct)
+    assume(srt[1] - srt[0] > 1e-3 * max(1.0, abs(srt[0])))
+    assert int(np.argmin(blocked)) == int(np.argmin(direct))

@@ -1,0 +1,190 @@
+"""ExecutionPlan contract: construction-time validation, the deprecated
+legacy-kwargs path (warn + bitwise-equal execution), and the stable public
+API surface (`repro` / `repro.fl` package-root exports).
+
+The worker-sharding rules that need a multi-device mesh live in
+tests/test_sweep_workers.py (8 fake devices); everything here runs on any
+host.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.fl import ExecutionPlan, SweepEngine, SweepSpec
+from repro.launch.mesh import make_sweep_mesh
+
+import sweep_testlib as TL
+
+
+# ------------------------------------------------- construction-time rules
+
+
+def test_plan_defaults():
+    p = ExecutionPlan()
+    assert p.flat_state and p.grouped_dispatch
+    assert not p.strict_numerics and not p.async_staging
+    assert p.mesh is None and p.chunk_rounds is None
+    assert p.worker_shards == 1 and not p.worker_sharded
+    assert p.data_shards == 1
+
+
+def test_plan_chunk_rounds_validation():
+    with pytest.raises(ValueError, match="chunk_rounds must be a positive"):
+        ExecutionPlan(chunk_rounds=0)
+    with pytest.raises(ValueError, match="chunk_rounds must be a positive"):
+        ExecutionPlan(chunk_rounds=-3)
+    assert ExecutionPlan(chunk_rounds=4).chunk_rounds == 4
+
+
+def test_plan_async_requires_chunking():
+    with pytest.raises(ValueError, match="requires chunk_rounds"):
+        ExecutionPlan(async_staging=True)
+    p = ExecutionPlan(chunk_rounds=2, async_staging=True)
+    assert p.async_staging
+
+
+def test_plan_mesh_requires_flat_state():
+    # Same exception type the engine historically raised (AssertionError),
+    # so callers' error handling is unchanged.
+    with pytest.raises(AssertionError):
+        ExecutionPlan(flat_state=False, mesh=make_sweep_mesh(1))
+
+
+def test_plan_mesh_axis_names_validated():
+    from jax.sharding import Mesh
+    bad = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    with pytest.raises(AssertionError):
+        ExecutionPlan(mesh=bad)
+
+
+def test_plan_worker_shards_need_matching_mesh():
+    with pytest.raises(ValueError, match="worker_shards"):
+        ExecutionPlan(worker_shards=4)  # no mesh at all
+    with pytest.raises(ValueError, match="worker_shards"):
+        ExecutionPlan(worker_shards=4, mesh=make_sweep_mesh(1))
+    with pytest.raises(ValueError, match="worker_shards"):
+        ExecutionPlan(worker_shards=0, mesh=make_sweep_mesh(1))
+
+
+def test_plan_derives_worker_shards_from_mesh():
+    p = ExecutionPlan(mesh=make_sweep_mesh(1))
+    assert p.worker_shards == 1 and p.data_shards == 1
+
+
+# --------------------------------------------- engine plan/legacy plumbing
+
+
+def _problem():
+    loss, params, dim, batches = TL.tiny_problem(rounds=3)
+    spec = SweepSpec.build(TL.defense_grid_cases(dim, num=5))
+    return loss, params, batches, spec
+
+
+def test_engine_default_plan():
+    loss, params, batches, spec = _problem()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = SweepEngine(loss, spec)  # no knobs: no deprecation warning
+    assert eng.plan == ExecutionPlan()
+    assert eng.flat_state and eng.mesh is None
+
+
+def test_engine_legacy_kwargs_warn_and_build_plan():
+    loss, params, batches, spec = _problem()
+    with pytest.warns(DeprecationWarning, match="ExecutionPlan"):
+        eng = SweepEngine(loss, spec, strict_numerics=True, chunk_rounds=2)
+    assert eng.plan == ExecutionPlan(strict_numerics=True, chunk_rounds=2)
+    assert eng.strict_numerics and eng.chunk_rounds == 2
+
+
+def test_engine_rejects_plan_plus_legacy_kwargs():
+    loss, params, batches, spec = _problem()
+    with pytest.raises(ValueError, match="not both"):
+        SweepEngine(loss, spec, plan=ExecutionPlan(), chunk_rounds=2)
+
+
+def test_engine_legacy_validation_routes_through_plan():
+    """The historical constructor errors (types AND messages) must survive
+    the legacy -> plan translation."""
+    loss, params, batches, spec = _problem()
+    with pytest.raises(ValueError, match="chunk_rounds must be a positive"), \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        SweepEngine(loss, spec, chunk_rounds=0)
+    with pytest.raises(ValueError, match="requires chunk_rounds"), \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        SweepEngine(loss, spec, async_staging=True)
+    with pytest.raises(AssertionError), warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        SweepEngine(loss, spec, flat_state=False, mesh=make_sweep_mesh(1))
+
+
+def test_plan_path_matches_legacy_kwargs_bitwise():
+    """SweepEngine(plan=ExecutionPlan(...)) must reproduce the legacy-kwargs
+    trajectories bitwise under strict_numerics — the plan is plumbing, not
+    math."""
+    loss, params, batches, spec = _problem()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = SweepEngine(loss, spec, strict_numerics=True,
+                             chunk_rounds=2).run(params, batches)
+    planned = SweepEngine(loss, spec, plan=ExecutionPlan(
+        strict_numerics=True, chunk_rounds=2)).run(params, batches)
+    np.testing.assert_array_equal(legacy.loss, planned.loss)
+    np.testing.assert_array_equal(legacy.grad_norm, planned.grad_norm)
+    for a, b in zip(jax.tree_util.tree_leaves(legacy.params),
+                    jax.tree_util.tree_leaves(planned.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_sweep_accepts_plan():
+    from repro.fl import run_sweep
+    loss, params, batches, spec = _problem()
+    base = run_sweep(loss, params, batches, spec)
+    via_plan = run_sweep(loss, params, batches, spec, plan=ExecutionPlan())
+    np.testing.assert_array_equal(base.loss, via_plan.loss)
+
+
+# ------------------------------------------------------ public API surface
+
+
+def test_top_level_public_api():
+    """examples/ and benchmarks/ import only this surface; it must exist
+    and carry __all__."""
+    import repro
+    for name in ("SweepEngine", "ExecutionPlan", "SweepResult", "SweepSpec",
+                 "ScenarioCase", "DefenseSpec", "FLOAConfig", "AttackConfig",
+                 "AttackType", "ChannelConfig", "Policy", "PowerConfig",
+                 "first_n_mask", "noise_std_for_snr", "run_sweep",
+                 "FLTrainer", "RoundLog", "make_sweep_mesh"):
+        assert name in repro.__all__, name
+        assert hasattr(repro, name), name
+    import repro.fl as fl
+    assert "ExecutionPlan" in fl.__all__
+    from repro.configs import PAPER_MLP  # noqa: F401
+    from repro.models import init_mlp, mlp_accuracy, mlp_loss  # noqa: F401
+
+
+def test_examples_and_benchmarks_use_public_surface():
+    """No deep-module imports in the user-facing sweep entry points: the
+    examples and sweep benchmarks must only import repro package roots
+    (repro, repro.fl, repro.core, repro.configs, repro.models, repro.data)."""
+    import pathlib
+    import re
+    allowed = {"repro", "repro.fl", "repro.core", "repro.configs",
+               "repro.models", "repro.data", "repro.core.theory"}
+    root = pathlib.Path(__file__).resolve().parents[1]
+    files = [root / "examples" / "quickstart.py",
+             root / "examples" / "byzantine_showdown.py",
+             root / "benchmarks" / "common.py",
+             root / "benchmarks" / "defenses_bench.py",
+             root / "benchmarks" / "sweep_bench.py"]
+    pat = re.compile(r"^\s*from (repro[\w.]*) import", re.M)
+    for f in files:
+        for mod in pat.findall(f.read_text()):
+            assert mod in allowed, f"{f.name}: deep import of {mod}"

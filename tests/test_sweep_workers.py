@@ -1,0 +1,268 @@
+"""Worker-axis-sharded sweep engine: worker-sharded == unsharded.
+
+The [S, U, D] gradient slab's WORKER axis shards over a ("workers",) mesh
+axis (`ExecutionPlan(mesh=make_sweep_mesh(n, worker_shards=W))`): each shard
+computes gradients for its own ceil(U/W) workers from its slice of the
+batch, the standardization handshake all-gathers per-worker scalar stats,
+and the OTA combine becomes a `lax.psum` of per-shard partial
+superpositions.  These tests pin the contract:
+
+  - every lane's trajectory matches the unsharded engine (rtol 1e-6), on
+    1-D ("workers",) and 2-D ("data", "workers") meshes, for pure-FLOA,
+    jamming, and mixed-defense grids, composed with chunking/async staging
+    and the switch dispatch reference;
+  - U % W != 0 ghost-pads the worker axis (clipped batch gather + zeroed
+    combine coefficients) without perturbing any real worker;
+  - under strict_numerics the engine all-gathers the full slab and replays
+    the unsharded reduction order verbatim — bitwise equality;
+  - the U=4096 mixed-defense grid runs worker-sharded end to end (psum
+    combine + blocked Krum + large-U sort routing in one program).
+
+Multi-device cases need fake host devices; the CI `sweep-sharded` job runs
+this module with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+(set before any jax import).  Under plain tier-1 (1 device) they skip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core import (
+    AttackConfig,
+    AttackType,
+    ChannelConfig,
+    DefenseSpec,
+    FLOAConfig,
+    Policy,
+    PowerConfig,
+    first_n_mask,
+)
+from repro.fl import ExecutionPlan, ScenarioCase, SweepEngine, SweepSpec
+from repro.launch.mesh import make_sweep_mesh
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(see the CI sweep-sharded job)")
+
+
+def worker_problem(u, rounds=3, batch=2, d_in=6, d_h=5):
+    """tiny_problem with a configurable worker population (sweep_testlib
+    pins U=4; the worker-sharding suite needs non-divisible and large U)."""
+    def loss(params, b):
+        pred = jax.nn.relu(b["x"] @ params["w1"]) @ params["w2"]
+        return jnp.mean((pred - b["y"]) ** 2)
+
+    k = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(k, (d_in, d_h)),
+              "w2": jax.random.normal(k, (d_h, 1))}
+    dim = d_in * d_h + d_h * 1
+    rng = np.random.default_rng(u)
+    batches = {
+        "x": rng.normal(size=(rounds, u * batch, d_in)).astype(np.float32),
+        "y": rng.normal(size=(rounds, u * batch, 1)).astype(np.float32)}
+    return loss, params, dim, batches
+
+
+def floa_u(u, dim, policy, n_atk, noise=0.05, attack=AttackType.STRONGEST):
+    return FLOAConfig(
+        channel=ChannelConfig(num_workers=u, sigma=1.0,
+                              noise_std=0.0 if policy == Policy.EF
+                              else noise),
+        power=PowerConfig(num_workers=u, dim=dim, p_max=1.0, policy=policy),
+        attack=AttackConfig(attack=attack if n_atk else AttackType.NONE,
+                            byzantine_mask=first_n_mask(u, n_atk)))
+
+
+def analog_cases(u, dim, num, jam_lane=False):
+    """CI/BEV x attacker-count grid at population u, plus an optional
+    GAUSSIAN-jamming lane so every RNG stream is exercised."""
+    cells = [(pol, n) for n in (0, 1, 2) for pol in (Policy.CI, Policy.BEV)]
+    n_grid = num - 1 if jam_lane else num
+    cases = [ScenarioCase(f"{cells[i % 6][0].value}@N{cells[i % 6][1]}#{i}",
+                          floa_u(u, dim, cells[i % 6][0], cells[i % 6][1]),
+                          0.05, seed=100 + i)
+             for i in range(n_grid)]
+    if jam_lane:
+        cases.append(ScenarioCase(
+            "jam", floa_u(u, dim, Policy.BEV, max(1, u // 4),
+                          attack=AttackType.GAUSSIAN), 0.05, seed=99))
+    return cases
+
+
+def mixed_cases(u, dim, num, lr=0.05):
+    """Analog FLOA lanes interleaved with median / trimmed-mean / Krum /
+    multi-Krum screening lanes at population u."""
+    n_atk = max(1, u // 10)
+    defenses = [DefenseSpec(name="median"),
+                DefenseSpec(name="trimmed_mean", trim=n_atk),
+                DefenseSpec(name="krum", num_byzantine=n_atk),
+                DefenseSpec(name="multi_krum", num_byzantine=n_atk, multi=2)]
+    period = 2 + len(defenses)
+    cases = []
+    for i in range(num):
+        j = i % period
+        if j < 2:
+            pol = (Policy.BEV, Policy.CI)[j]
+            cases.append(ScenarioCase(f"{pol.value}@#{i}",
+                                      floa_u(u, dim, pol, n_atk), lr,
+                                      seed=200 + i))
+        else:
+            spec = defenses[j - 2]
+            cases.append(ScenarioCase(
+                f"{spec.name}@#{i}",
+                floa_u(u, dim, Policy.EF, n_atk, 0.0), lr,
+                seed=200 + i, defense=spec))
+    return cases
+
+
+def _eval_fn(p):
+    return {"pnorm": sum((x ** 2).sum()
+                         for x in jax.tree_util.tree_leaves(p))}
+
+
+def _assert_lanes_match(sharded, unsharded, rtol=5e-6, atol=1e-6):
+    """The psum OTA combine reduces partial superpositions in mesh order
+    instead of one big einsum, so float32 trajectories drift ~1e-6/round;
+    over a multi-round run we allow a few ulp more than the per-round
+    contract.  Exactness is pinned separately by the strict_numerics test."""
+    assert sharded.loss.shape == unsharded.loss.shape
+    np.testing.assert_allclose(sharded.loss, unsharded.loss,
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(sharded.grad_norm, unsharded.grad_norm,
+                               rtol=rtol, atol=atol)
+    for k in unsharded.metrics:
+        np.testing.assert_allclose(sharded.metrics[k], unsharded.metrics[k],
+                                   rtol=rtol, atol=atol)
+    for sleaf, uleaf in zip(jax.tree_util.tree_leaves(sharded.params),
+                            jax.tree_util.tree_leaves(unsharded.params)):
+        assert sleaf.shape == uleaf.shape
+        np.testing.assert_allclose(np.asarray(sleaf), np.asarray(uleaf),
+                                   rtol=rtol, atol=atol)
+
+
+@needs_8_devices
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_worker_sharded_matches_unsharded_analog(w):
+    """Pure-FLOA grid (with a jamming lane): psum OTA combine == einsum
+    combine at every worker-shard count, on 2-D ("data", "workers") meshes
+    (w < 8) and the 1-D ("workers",) mesh (w == 8)."""
+    u = 8
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(analog_cases(u, dim, 6, jam_lane=True))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    mesh = make_sweep_mesh(8, worker_shards=w)
+    sh = SweepEngine(loss, spec, eval_fn=_eval_fn,
+                     plan=ExecutionPlan(mesh=mesh)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_worker_sharded_matches_unsharded_mixed_defenses():
+    """Mixed analog + screening grid: the digital groups all-gather their
+    sub-slab, the analog group psums — every lane matches unsharded."""
+    u = 10
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(mixed_cases(u, dim, 8))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    mesh = make_sweep_mesh(8, worker_shards=4)   # ("data", "workers") 2x4
+    sh = SweepEngine(loss, spec, eval_fn=_eval_fn,
+                     plan=ExecutionPlan(mesh=mesh)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_worker_sharded_nondivisible_u_ghost_padding():
+    """U % W != 0: ghost workers (clipped batch gather, zeroed combine
+    coefficients) must not perturb any real worker's contribution."""
+    u = 6                                        # W=4 -> u_loc=2, 2 ghosts
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(mixed_cases(u, dim, 6))
+    eng = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(4, worker_shards=4)))
+    assert eng._ws is not None
+    assert eng._ws.u_loc == 2 and eng._ws.u_pad == 8
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    _assert_lanes_match(eng.run(params, batches), un)
+
+
+@needs_8_devices
+def test_worker_sharded_strict_numerics_bitwise():
+    """strict_numerics + worker sharding: the full slab is all-gathered and
+    the unsharded reduction replayed — trajectories are bit-identical."""
+    u = 8
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(mixed_cases(u, dim, 6))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        strict_numerics=True)).run(params, batches)
+    sh = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(8, worker_shards=4),
+        strict_numerics=True)).run(params, batches)
+    np.testing.assert_array_equal(sh.loss, un.loss)
+    np.testing.assert_array_equal(sh.grad_norm, un.grad_norm)
+    for k in un.metrics:
+        np.testing.assert_array_equal(sh.metrics[k], un.metrics[k])
+    for sleaf, uleaf in zip(jax.tree_util.tree_leaves(sh.params),
+                            jax.tree_util.tree_leaves(un.params)):
+        np.testing.assert_array_equal(np.asarray(sleaf), np.asarray(uleaf))
+
+
+@needs_8_devices
+def test_worker_sharded_composes_with_chunking_and_switch():
+    """Worker sharding must compose with the other plan knobs: chunked +
+    async-staged execution and the per-lane switch dispatch reference both
+    reproduce the unsharded trajectories."""
+    u = 8
+    loss, params, dim, batches = worker_problem(u, rounds=5)
+    spec = SweepSpec.build(mixed_cases(u, dim, 6))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    mesh = make_sweep_mesh(8, worker_shards=2)
+    ch = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=mesh, chunk_rounds=2, async_staging=True)).run(params, batches)
+    _assert_lanes_match(ch, un)
+    sw = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=mesh, grouped_dispatch=False)).run(params, batches)
+    _assert_lanes_match(sw, un)
+
+
+@needs_8_devices
+def test_u4096_mixed_defense_end_to_end():
+    """The large-U acceptance run: a mixed-defense sweep at U=4096 executes
+    worker-sharded end to end — psum OTA combine, blocked Krum (the [U, U]
+    distance matrix never materializes), and the large-U sort routing — and
+    its analog lanes track the unsharded engine."""
+    u = 4096
+    loss, params, dim, batches = worker_problem(u, rounds=2, batch=1)
+    # lr small enough that 409 STRONGEST attackers don't blow up the CI
+    # lane in two rounds; the point is the execution path, not robustness.
+    spec = SweepSpec.build(mixed_cases(u, dim, 6, lr=1e-3))
+    eng = SweepEngine(loss, spec, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(8, worker_shards=8)))
+    res = eng.run(params, batches)
+    assert res.loss.shape == (6, 2)
+    assert np.isfinite(res.loss).all() and np.isfinite(res.grad_norm).all()
+    # Spot-check against the unsharded engine (same tolerance contract).
+    un = SweepEngine(loss, spec).run(params, batches)
+    np.testing.assert_allclose(res.loss, un.loss, rtol=1e-5, atol=1e-4)
+
+
+def test_worker_plan_validation_runs_everywhere():
+    """Tier-1 (single-device) coverage: the plan rejects worker_shards
+    without a matching mesh, and a degenerate worker_shards=1 plan is the
+    plain engine."""
+    u = 4
+    loss, params, dim, batches = worker_problem(u, rounds=2)
+    spec = SweepSpec.build(analog_cases(u, dim, 3))
+    with pytest.raises(ValueError, match="worker_shards"):
+        ExecutionPlan(worker_shards=2)
+    eng = SweepEngine(loss, spec, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(1)))
+    assert eng._ws is None and eng.plan.worker_shards == 1
+    un = SweepEngine(loss, spec).run(params, batches)
+    np.testing.assert_allclose(eng.run(params, batches).loss, un.loss,
+                               rtol=1e-6, atol=1e-7)
