@@ -31,7 +31,8 @@ from repro.core import (
 )
 from repro.core import theory
 from repro.data import FederatedSampler, make_dataset, worker_split
-from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
+from repro.fl import (ExecutionPlan, FLTrainer, ScenarioCase, SweepEngine,
+                      SweepSpec)
 from repro.models import init_mlp, mlp_accuracy, mlp_loss
 
 jax.config.update("jax_threefry_partitionable", True)
@@ -108,8 +109,9 @@ def run_figure(exps: List[Experiment], eval_every: int = 10,
     ])
     batches = FederatedSampler(shards, mc.batch_per_worker,
                                seed=1).stack_rounds(rounds)
-    return SweepEngine(mlp_loss, spec, eval_fn=eval_fn,
-                       eval_every=eval_every, mesh=mesh).run(params, batches)
+    return SweepEngine(
+        mlp_loss, spec, eval_fn=eval_fn, eval_every=eval_every,
+        plan=ExecutionPlan(mesh=mesh)).run(params, batches)
 
 
 def run_experiment(exp: Experiment, eval_every: int = 10) -> List:

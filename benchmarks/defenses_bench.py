@@ -22,7 +22,7 @@ from benchmarks.render_tables import print_sweep_csv
 from repro.core import (AttackConfig, AttackType, ChannelConfig, DefenseSpec,
                         FLOAConfig, PowerConfig, first_n_mask)
 from repro.data import FederatedSampler
-from repro.fl import ScenarioCase, SweepEngine, SweepSpec
+from repro.fl import ExecutionPlan, ScenarioCase, SweepEngine, SweepSpec
 from repro.models import mlp_loss
 
 DEFENSES = [
@@ -55,10 +55,10 @@ def main(rounds: int = 120, eval_every: int = 10,
 
     batches = FederatedSampler(shards, mc.batch_per_worker,
                                seed=1).stack_rounds(rounds)
-    result = SweepEngine(mlp_loss, SweepSpec.build(cases), eval_fn=eval_fn,
-                         eval_every=eval_every,
-                         grouped_dispatch=(dispatch == "grouped")
-                         ).run(params, batches)
+    result = SweepEngine(
+        mlp_loss, SweepSpec.build(cases), eval_fn=eval_fn,
+        eval_every=eval_every, plan=ExecutionPlan(
+            grouped_dispatch=(dispatch == "grouped"))).run(params, batches)
     print_sweep_csv("defenses", result, eval_every)
 
 

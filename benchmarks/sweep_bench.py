@@ -65,6 +65,14 @@ defense section is sized explicitly rather than inheriting the headline
 shape), with per-defense cold/warm rounds-per-sec recorded under the JSON's
 "defenses" key and the grouped-vs-switch warm speedup at the top level.
 
+--scenario-axes benches the adaptive-adversary lane axes: one engine each
+for the legacy CI/BEV x STRONGEST grid, Gauss-Markov fading (the (state, h)
+scan-carry tuple), K-of-U participation (masked stats/combine/screening),
+colluding/omniscient directional cohorts (post-combine payload injection),
+and the all-axes mixed spec — recorded under the JSON's "scenario_axes" key so
+the cross-axis trace tax is tracked (each axis is a trace-time decision
+for the whole sweep).
+
 --workers benches the worker-population scaling series: the mixed-defense
 worker grid (analog FLOA + median / trimmed-mean / Krum lanes) at each U in
 --workers-series (default 10,1000,10000) on a deliberately tiny MLP, both
@@ -185,6 +193,84 @@ def bench_defenses(mc, shards, params, rounds: int, scenarios: int,
     print(f"# defense lanes: R={rounds} rounds x S={scenarios} lanes/family "
           f"(mixed: {len(mixed)}), D={mc.dim}, U={mc.num_workers}")
     print("defense,lanes,cold_rounds_per_sec,warm_rounds_per_sec")
+    out = {}
+    for name, lanes, _ in runners:
+        total = lanes * rounds
+        out[name] = dict(
+            lanes=lanes, rounds=rounds,
+            cold_rounds_per_sec=round(total / cold[name], 2),
+            warm_rounds_per_sec=round(total / best[name], 2))
+        print(f"{name},{lanes},{out[name]['cold_rounds_per_sec']:.1f},"
+              f"{out[name]['warm_rounds_per_sec']:.1f}")
+    return out
+
+
+MARKOV_RHO = 0.9
+
+
+def scenario_axes_grid(mc, axes: str, num: int):
+    """`num` lanes exercising one adaptive-adversary axis (or all of them):
+    `legacy` is the plain CI/BEV x STRONGEST grid, `markov` adds rho=0.9
+    Gauss-Markov fading, `participation` samples K=U-3 of U clients per
+    round, `directional` alternates COLLUDING/OMNISCIENT cohorts, and
+    `mixed_axes` stacks all of it in one spec (the worst-case trace)."""
+    u, d = mc.num_workers, mc.dim
+    cases = []
+    for i in range(num):
+        n = i % 4 + (0 if axes in ("legacy", "markov", "participation")
+                     else 1)
+        rho = MARKOV_RHO if axes in ("markov", "mixed_axes") and i % 2 else 0.0
+        part = u - 3 if axes in ("participation", "mixed_axes") and i % 3 \
+            else None
+        if axes == "directional" or (axes == "mixed_axes" and i % 2):
+            attack = (AttackType.COLLUDING if i % 4 < 2
+                      else AttackType.OMNISCIENT)
+        else:
+            attack = AttackType.STRONGEST if n else AttackType.NONE
+        floa = FLOAConfig(
+            channel=ChannelConfig(num_workers=u, sigma=1.0, noise_std=0.05,
+                                  markov_rho=rho),
+            power=PowerConfig(num_workers=u, dim=d, p_max=mc.p_max,
+                              policy=Policy.BEV if i % 2 else Policy.CI),
+            attack=AttackConfig(attack=attack,
+                                byzantine_mask=first_n_mask(u, n)))
+        cases.append(ScenarioCase(f"{axes}@N{n}#{i}", floa, 0.05,
+                                  seed=500 + i, participants=part))
+    return cases
+
+
+def bench_scenario_axes(mc, shards, params, rounds: int, scenarios: int,
+                        reps: int) -> dict:
+    """Adaptive-adversary axis throughput (--scenario-axes): what each new
+    lane axis costs on top of the legacy grid.  `markov` pays the (state, h)
+    scan-carry tuple, `participation` the masked stats/combine/screening
+    reductions, `directional` the post-combine payload injection, and
+    `mixed_axes` all three in one program — each axis is a trace-time
+    decision for the whole sweep, so these rows bound the cross-axis tax."""
+    batches = FederatedSampler(shards, mc.batch_per_worker,
+                               seed=1).stack_rounds(rounds)
+    grids = [(name, scenario_axes_grid(mc, name, scenarios))
+             for name in ("legacy", "markov", "participation", "directional",
+                          "mixed_axes")]
+    cold, runners = {}, []
+    for name, cases in grids:
+        engine = SweepEngine(mlp_loss, SweepSpec.build(cases))
+        run_once = (lambda e=engine: e.run(params, batches))
+        t0 = time.perf_counter()
+        run_once()
+        cold[name] = time.perf_counter() - t0
+        runners.append((name, len(cases), run_once))
+
+    best = {name: float("inf") for name, _, _ in runners}
+    for _ in range(reps):
+        for name, _, run_once in runners:
+            t0 = time.perf_counter()
+            run_once()
+            best[name] = min(best[name], time.perf_counter() - t0)
+
+    print(f"# scenario axes: R={rounds} rounds x S={scenarios} lanes/axis, "
+          f"D={mc.dim}, U={mc.num_workers}")
+    print("axis,lanes,cold_rounds_per_sec,warm_rounds_per_sec")
     out = {}
     for name, lanes, _ in runners:
         total = lanes * rounds
@@ -348,6 +434,16 @@ def check_regressions(fresh: dict, baseline: dict,
             notes.append(f"defenses/{name}: lane/round shape differs, skipped")
         else:
             gate("defenses", name, f_row, b_row)
+    for name, b_row in (baseline.get("scenario_axes") or {}).items():
+        f_row = (fresh.get("scenario_axes") or {}).get(name)
+        if f_row is None:
+            notes.append(f"scenario_axes/{name}: not in fresh run, skipped")
+        elif (f_row.get("lanes"), f_row.get("rounds")) != (
+                b_row.get("lanes"), b_row.get("rounds")):
+            notes.append(f"scenario_axes/{name}: lane/round shape differs, "
+                         "skipped")
+        else:
+            gate("scenario_axes", name, f_row, b_row)
     for name, b_row in (baseline.get("workers") or {}).items():
         f_row = (fresh.get("workers") or {}).get(name)
         if f_row is None:
@@ -384,7 +480,9 @@ def grid(num: int, rounds: int):
 def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
          reps: int = 3, skip_looped: bool = False, defenses: bool = False,
          defense_rounds: int = 10, defense_scenarios: int = 6,
-         chunk_rounds: int = 5, workers: bool = False,
+         chunk_rounds: int = 5, scenario_axes: bool = False,
+         scenario_rounds: int = 10, scenario_lanes: int = 8,
+         workers: bool = False,
          workers_series: str = "10,1000,10000", workers_rounds: int = 3,
          out_path: str = "BENCH_sweep.json",
          check_against: str = "", tolerance: float = 0.5) -> dict:
@@ -535,6 +633,9 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
                 / d["mixed_switch"]["warm_rounds_per_sec"], 3)
             print(f"# mixed grid grouped vs switch warm speedup: "
                   f"{record['mixed_grouped_vs_switch_warm_speedup']:.2f}x")
+    if scenario_axes:
+        record["scenario_axes"] = bench_scenario_axes(
+            mc, shards, params, scenario_rounds, scenario_lanes, reps)
     if workers:
         series = [int(s) for s in str(workers_series).split(",") if s]
         record["workers"] = bench_workers(series, workers_rounds, reps)
@@ -582,6 +683,14 @@ if __name__ == "__main__":
     ap.add_argument("--chunk-rounds", type=int, default=5,
                     help="chunk size C for the flat+chunk(+async) rows "
                          "(clamped to [1, rounds])")
+    ap.add_argument("--scenario-axes", action="store_true",
+                    help="also bench the adaptive-adversary lane axes "
+                         "(legacy / markov / participation / directional / "
+                         "mixed_axes, one engine per axis)")
+    ap.add_argument("--scenario-rounds", type=int, default=10,
+                    help="rounds per scenario-axis engine (--scenario-axes)")
+    ap.add_argument("--scenario-lanes", type=int, default=8,
+                    help="lanes per scenario-axis engine (--scenario-axes)")
     ap.add_argument("--workers", action="store_true",
                     help="also bench the worker-population scaling series "
                          "(mixed-defense grid at each U, unsharded + "
@@ -606,7 +715,10 @@ if __name__ == "__main__":
                skip_looped=args.skip_looped, defenses=args.defenses,
                defense_rounds=args.defense_rounds,
                defense_scenarios=args.defense_scenarios,
-               chunk_rounds=args.chunk_rounds, workers=args.workers,
+               chunk_rounds=args.chunk_rounds,
+               scenario_axes=args.scenario_axes,
+               scenario_rounds=args.scenario_rounds,
+               scenario_lanes=args.scenario_lanes, workers=args.workers,
                workers_series=args.workers_series,
                workers_rounds=args.workers_rounds, out_path=args.out,
                check_against=args.check_against, tolerance=args.tolerance)

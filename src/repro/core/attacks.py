@@ -24,6 +24,26 @@ Ablation attacks (beyond the paper's worst case, for experiments):
   SIGN_FLIP_PROTOCOL_POWER: -g at the *protocol* (standardized) power — a naive
     attacker that follows the power accounting of honest workers.
   NONE: behave honestly.
+
+Adaptive attacks (the cohort acts on shared round state, so their payload is a
+single rank-1 direction rather than per-worker gradients):
+  COLLUDING: the round's Byzantine cohort agrees on ONE shared unit-RMS
+    perturbation direction (drawn from a cohort-common key) and every member
+    transmits it at max power sqrt(p_max / D) — the transmitted power meets
+    eq. 32 with equality.  The received perturbation is
+    eps_t * sum_{n in B} |h_n| sqrt(p_n^max / D) * d  (`colluding_dir_weight`).
+  OMNISCIENT: attackers observe the round's honest mean and transmit its
+    negation at the eq. 18 max accounting power phat — the adaptive
+    generalization of the strongest attack (eq. 17 with ghat = -mean of the
+    HONEST gradients instead of -g_n).  Received perturbation weight is
+    sum_{n in B} (-eps_t phat_n |h_n|)  (`omniscient_dir_weight`); a cohort of
+    size 1 on identical worker shards degenerates to STRONGEST exactly.
+
+Both adaptive attacks need round state the stateless `signed_coefficients`
+path cannot carry (the cohort key / the honest mean of the round's slab), so
+the branching path models only their per-worker payload (zero) + bias; the
+full directional term lives in the sweep engine (fl/sweep.py), which pins the
+degenerate contracts in tests/test_scenario_axes.py.
 """
 from __future__ import annotations
 
@@ -45,6 +65,14 @@ class AttackType(str, enum.Enum):
     STRONGEST = "strongest"  # Thm 1: sign flip at max accounting power
     SIGN_FLIP_PROTOCOL_POWER = "sign_flip_protocol_power"
     GAUSSIAN = "gaussian"
+    COLLUDING = "colluding"    # shared rank-1 direction at max power
+    OMNISCIENT = "omniscient"  # negated honest mean at eq. 18 max power
+
+
+# Attacks whose payload is one shared direction (rank-1 across the cohort)
+# instead of per-worker gradients; the sweep engine injects it after the OTA
+# combine.
+DIRECTIONAL_ATTACKS = (AttackType.COLLUDING, AttackType.OMNISCIENT)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,7 +135,10 @@ def signed_coefficients(
         attacker_s = -eps * phat * h_abs
     elif attack.attack == AttackType.SIGN_FLIP_PROTOCOL_POWER:
         attacker_s = -honest_s
-    elif attack.attack == AttackType.GAUSSIAN:
+    elif attack.attack in (AttackType.GAUSSIAN,) + DIRECTIONAL_ATTACKS:
+        # No per-worker gradient payload: GAUSSIAN jams (gaussian_jam_std),
+        # COLLUDING/OMNISCIENT transmit one shared direction (the
+        # *_dir_weight helpers; the sweep engine owns the direction itself).
         attacker_s = jnp.zeros_like(honest_s)
     else:
         raise ValueError(f"unknown attack {attack.attack}")
@@ -129,6 +160,37 @@ def jam_std_arrays(
     max-power white noise from masked workers, scaled by eps_t."""
     amp = jnp.sqrt(p_maxes / dim) * h_abs  # max power jam
     return jnp.sqrt(eps2 * jnp.sum(jnp.where(mask, amp, 0.0) ** 2))
+
+
+def colluding_dir_weight(
+    h_abs: Array, p_maxes: Array, dim, mask: Array, eps2: Array
+) -> Array:
+    """Received weight of the COLLUDING cohort's shared unit-RMS direction d:
+    every masked worker transmits sqrt(p_max/D) * d (eq. 32 with equality,
+    since E||sqrt(p/D) d||^2 = (p/D) * D = p_max), the MAC superposes their
+    |h|-scaled copies, and the PS's de-standardization multiplies by eps_t:
+
+        weight = eps_t * sum_{n in B} |h_n| sqrt(p_n^max / D).
+    """
+    amp = jnp.sqrt(p_maxes / dim)
+    return jnp.sqrt(eps2) * jnp.sum(jnp.where(mask, amp * h_abs, 0.0))
+
+
+def omniscient_dir_weight(
+    h_abs: Array, p_maxes: Array, dim, mask: Array, gbar: Array, eps2: Array
+) -> Array:
+    """Received weight of the OMNISCIENT cohort's shared payload (the negated
+    honest mean, transmitted raw at the eq. 18 amplitude phat — the same power
+    accounting as the strongest attack, eq. 32 with equality):
+
+        weight = sum_{n in B} (-eps_t phat_n |h_n|),
+
+    i.e. exactly the strongest attack's per-worker coefficient summed over the
+    cohort — which is what makes a cohort of size 1 on identical shards
+    degenerate to STRONGEST.
+    """
+    phat = strongest_attack_amplitude(p_maxes, dim, gbar, eps2)
+    return -jnp.sqrt(eps2) * jnp.sum(jnp.where(mask, phat * h_abs, 0.0))
 
 
 def gaussian_jam_std(

@@ -10,6 +10,16 @@ Channels are resampled independently every round (block fading) and are known
 perfectly at workers and PS (perfect CSI; the phase is pre-compensated at the
 workers so only |h| matters — exactly the paper's model).
 
+Time-varying extension (beyond the paper's block-i.i.d. model): Gauss-Markov
+fading with per-round correlation rho,
+
+    h_t = rho * h_{t-1} + sqrt(1 - rho^2) * w_t,   w_t ~ CN(0, 2 sigma^2),
+
+on the COMPLEX gain (kept as a [..., 2] re/im state so |h_t| stays Rayleigh
+under the stationary law: each component is N(0, sigma^2) at every t).
+rho = 0 degenerates to the i.i.d. model; the sweep engine keeps rho = 0 lanes
+bitwise on the legacy `rayleigh_gains` draw (tests/test_scenario_axes.py).
+
 AWGN: z_t ~ N(0, z^2 I_D) added to the received superposition.  The paper sets
 the receive SNR via p_max/(D z^2) = 10 dB; `noise_std_for_snr` inverts that.
 """
@@ -30,11 +40,21 @@ class ChannelConfig:
 
     sigma: per-worker Rayleigh scale sigma_i (scalar broadcast or [U] vector).
     noise_std: AWGN std z (per received symbol).
+    markov_rho: Gauss-Markov round-to-round fading correlation in [0, 1);
+        0 (default) is the paper's block-i.i.d. model.
     """
 
     num_workers: int
     sigma: Union[float, tuple] = 1.0
     noise_std: float = 0.0
+    markov_rho: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.markov_rho < 1.0:
+            raise ValueError(
+                f"markov_rho must be in [0, 1), got {self.markov_rho} "
+                f"(rho = 1 freezes the channel forever; use a static sigma "
+                f"instead)")
 
     def sigmas(self) -> Array:
         s = jnp.asarray(self.sigma, dtype=jnp.float32)
@@ -55,6 +75,30 @@ def rayleigh_gains(key: Array, sigmas: Array) -> Array:
 def sample_channel_gains(key: Array, cfg: ChannelConfig) -> Array:
     """Draw |h_{i,t}| for all U workers for one round.  Shape [U]."""
     return rayleigh_gains(key, cfg.sigmas())
+
+
+def complex_gain_init(key: Array, sigmas: Array) -> Array:
+    """Stationary complex-gain state for Gauss-Markov fading: re/im each
+    N(0, sigma^2), shape sigmas.shape + (2,) — so `complex_gain_abs` of the
+    init is Rayleigh(sigma), the same marginal as `rayleigh_gains`."""
+    z = jax.random.normal(key, sigmas.shape + (2,), dtype=jnp.float32)
+    return sigmas[..., None] * z
+
+
+def gauss_markov_step(h_prev: Array, innovation: Array, rho) -> Array:
+    """One Gauss-Markov update h_t = rho h_{t-1} + sqrt(1-rho^2) w_t.
+
+    h_prev / innovation: [..., 2] complex states; `innovation` must be a
+    fresh draw of the SAME stationary law (`complex_gain_init`), which keeps
+    every marginal Rayleigh.  rho may be a traced per-lane scalar (broadcast
+    against the state), so one trace serves a whole sweep's lane axis.
+    """
+    return rho * h_prev + jnp.sqrt(jnp.maximum(1.0 - rho**2, 0.0)) * innovation
+
+
+def complex_gain_abs(h: Array) -> Array:
+    """|h| from the [..., 2] re/im state."""
+    return jnp.sqrt(jnp.sum(jnp.square(h), axis=-1))
 
 
 def expected_abs_gain(cfg: ChannelConfig) -> Array:

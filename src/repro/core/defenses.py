@@ -231,6 +231,126 @@ def flat_geometric_median(flat: Array, iters: int = 8,
     return z
 
 
+# ------------------------------------- masked (partial-participation) kernels
+#
+# K-of-U client sampling (fl/sweep.py): non-participating workers never report
+# a gradient, so every screening defense must run on the participating rows
+# only.  Each masked kernel reduces BITWISE to its unmasked twin at a full
+# mask (the K=U == full-participation sweep contract): selects with an
+# all-True mask are identity, counts equal the static U, and means are
+# rescaled by exactly-1.0 (mean * (U/count)) instead of re-divided — a
+# sum/traced-count spelling would round differently from jnp.mean under jit
+# (XLA strength-reduces the divide-by-constant into a reciprocal multiply).
+
+
+def flat_masked_mean(flat: Array, mask: Array) -> Array:
+    """Mean of the participating rows (== flat_mean at a full mask)."""
+    u = flat.shape[0]
+    scale = u / jnp.sum(mask.astype(flat.dtype))
+    return jnp.mean(jnp.where(mask[:, None], flat, 0.0), axis=0) * scale
+
+
+def flat_masked_median(flat: Array, mask: Array) -> Array:
+    """Coordinate median over the participating rows: non-participants are
+    +inf-padded so the sort pushes them past the end, and the two middle
+    indices come from the traced participant count."""
+    srt = sorted_columns(jnp.where(mask[:, None], flat, jnp.inf))
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    return (srt[(cnt - 1) // 2] + srt[cnt // 2]) / 2
+
+
+def flat_masked_trimmed_mean(flat: Array, trim, mask: Array) -> Array:
+    """Trimmed mean over the participating rows: drop the `trim` largest and
+    smallest PARTICIPATING values per coordinate, mean the rest."""
+    u = flat.shape[0]
+    srt = sorted_columns(jnp.where(mask[:, None], flat, jnp.inf))
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    idx = jnp.arange(u)
+    keep = (idx >= trim) & (idx < cnt - trim)
+    kept = jnp.sum(jnp.where(keep[:, None], srt, 0.0), axis=0)
+    return kept / (cnt - 2 * trim)
+
+
+def _masked_krum_scores(flat: Array, num_byzantine, mask: Array) -> Array:
+    """`_krum_scores` over the participating rows: distances to (or from) a
+    non-participant are +inf, the closest-count comes from the participant
+    count, and non-participant scores are +inf so ranking never picks them."""
+    u = flat.shape[0]
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    closest = jnp.maximum(cnt - num_byzantine - 2, 1)
+    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    pair_ok = mask[:, None] & mask[None, :] & ~jnp.eye(u, dtype=bool)
+    d2 = jnp.where(pair_ok, d2, jnp.inf)
+    srt = jnp.sort(d2, axis=1)
+    j = jnp.arange(u)
+    scores = jnp.sum(jnp.where(j[None, :] < closest, srt, 0.0), axis=1)
+    return jnp.where(mask, scores, jnp.inf)
+
+
+def _masked_krum_scores_blocked(flat: Array, num_byzantine, mask: Array,
+                                block_rows: int = KRUM_BLOCK_ROWS) -> Array:
+    """`_krum_scores_blocked` with the participation mask applied per block
+    (columns of non-participants +inf before the row sort, rows of
+    non-participants +inf after)."""
+    u, d = flat.shape
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    closest = jnp.maximum(cnt - num_byzantine - 2, 1)
+    nb = -(-u // block_rows)
+    pad = nb * block_rows - u
+    fpad = jnp.pad(flat, ((0, pad), (0, 0)))
+    sq = jnp.sum(jnp.square(flat), axis=1)
+    sq_pad = jnp.pad(sq, (0, pad))
+    blocks = fpad.reshape(nb, block_rows, d)
+    sq_blocks = sq_pad.reshape(nb, block_rows)
+    ids = jnp.arange(nb * block_rows).reshape(nb, block_rows)
+    j = jnp.arange(u)
+
+    def score_block(args):
+        xb, sb, rb = args
+        d2 = sb[:, None] + sq[None, :] - 2.0 * (xb @ flat.T)
+        d2 = jnp.maximum(d2, 0.0)
+        d2 = jnp.where(rb[:, None] == j[None, :], jnp.inf, d2)
+        d2 = jnp.where(mask[None, :], d2, jnp.inf)
+        srt = jnp.sort(d2, axis=1)
+        return jnp.sum(jnp.where(j[None, :] < closest, srt, 0.0), axis=1)
+
+    scores = jax.lax.map(score_block, (blocks, sq_blocks, ids)).reshape(-1)[:u]
+    return jnp.where(mask, scores, jnp.inf)
+
+
+def flat_masked_krum(flat: Array, num_byzantine, multi, mask: Array) -> Array:
+    """(Multi-)Krum over the participating rows (same large-U routing as
+    `flat_krum`; non-participants score +inf, so `multi <= K` — enforced by
+    the sweep spec validation — keeps them out of the averaged prefix)."""
+    u = flat.shape[0]
+    scores = (_masked_krum_scores_blocked(flat, num_byzantine, mask)
+              if u >= KRUM_BLOCK_MIN_U
+              else _masked_krum_scores(flat, num_byzantine, mask))
+    ranked = flat[jnp.argsort(scores)]
+    keep = jnp.arange(u) < multi
+    sel = jnp.sum(jnp.where(keep[:, None], ranked, 0.0), axis=0)
+    return sel / jnp.asarray(multi, flat.dtype)
+
+
+def flat_masked_geometric_median(flat: Array, mask: Array, iters: int = 8,
+                                 eps: float = 1e-8) -> Array:
+    """Weiszfeld over the participating rows: non-participants get zero
+    weight and the iteration starts from the participants' mean."""
+    u = flat.shape[0]
+    scale = u / jnp.sum(mask.astype(flat.dtype))
+
+    def body(z, _):
+        w = jnp.where(
+            mask, 1.0 / jnp.maximum(jnp.linalg.norm(flat - z, axis=1), eps),
+            0.0)
+        z = jnp.sum(w[:, None] * flat, axis=0) / jnp.sum(w)
+        return z, None
+
+    z0 = jnp.mean(jnp.where(mask[:, None], flat, 0.0), axis=0) * scale
+    z, _ = jax.lax.scan(body, z0, None, length=iters)
+    return z
+
+
 # ------------------------------------------------ branchless lane dispatch
 
 # code -> flat kernel taking the uniform operand tuple (flat, trim, f, multi).
@@ -248,19 +368,39 @@ _FLAT_KERNELS_BY_CODE: Dict[int, Callable] = {
         lambda op, it: flat_geometric_median(op[0], iters=it),
 }
 
+# Masked twins for K-of-U partial participation: uniform operand tuple
+# (flat, trim, f, multi, mask).  The sweep engine selects this table at
+# BUILD time only when the sweep contains participation lanes, so
+# full-participation sweeps trace zero masking ops.
+_MASKED_FLAT_KERNELS_BY_CODE: Dict[int, Callable] = {
+    DEFENSE_CODES["floa"]: lambda op, it: flat_masked_mean(op[0], op[4]),
+    DEFENSE_CODES["mean"]: lambda op, it: flat_masked_mean(op[0], op[4]),
+    DEFENSE_CODES["median"]: lambda op, it: flat_masked_median(op[0], op[4]),
+    DEFENSE_CODES["trimmed_mean"]:
+        lambda op, it: flat_masked_trimmed_mean(op[0], op[1], op[4]),
+    DEFENSE_CODES["krum"]:
+        lambda op, it: flat_masked_krum(op[0], op[2], op[3], op[4]),
+    DEFENSE_CODES["multi_krum"]:
+        lambda op, it: flat_masked_krum(op[0], op[2], op[3], op[4]),
+    DEFENSE_CODES["geometric_median"]:
+        lambda op, it: flat_masked_geometric_median(op[0], op[4], iters=it),
+}
+
 
 def make_flat_defense_selector(codes: Optional[Sequence[int]] = None,
-                               gm_iters: int = 8) -> Callable:
+                               gm_iters: int = 8,
+                               masked: bool = False) -> Callable:
     """Branchless defense dispatch for one lane: a `lax.switch` over the
     defense codes present in a sweep.
 
-    Returns fn(code, flat, trim, num_byzantine, multi) -> [D].  Under `vmap`
-    (code varying across lanes) the switch lowers to computing every listed
-    branch and selecting per lane — which is why `codes` should be the codes
-    a sweep actually contains (the default is all of DEFENSE_CODES): absent
-    defenses then cost nothing.  Codes outside the list (e.g. analog lanes'
-    0 in a digital-only list) are remapped to the first branch; the caller
-    overrides those lanes' output anyway.
+    Returns fn(code, flat, trim, num_byzantine, multi) -> [D], taking a
+    trailing [U] bool participation-mask operand when masked=True.  Under
+    `vmap` (code varying across lanes) the switch lowers to computing every
+    listed branch and selecting per lane — which is why `codes` should be
+    the codes a sweep actually contains (the default is all of
+    DEFENSE_CODES): absent defenses then cost nothing.  Codes outside the
+    list (e.g. analog lanes' 0 in a digital-only list) are remapped to the
+    first branch; the caller overrides those lanes' output anyway.
     """
     if codes is None:
         codes = sorted(DEFENSE_CODES.values())
@@ -270,24 +410,41 @@ def make_flat_defense_selector(codes: Optional[Sequence[int]] = None,
     for i, c in enumerate(codes):
         lookup[c] = i
     lookup_j = jnp.asarray(lookup)
-    branches = [functools.partial(_FLAT_KERNELS_BY_CODE[c], it=gm_iters)
-                for c in codes]
+    table = _MASKED_FLAT_KERNELS_BY_CODE if masked else _FLAT_KERNELS_BY_CODE
+    branches = [functools.partial(table[c], it=gm_iters) for c in codes]
 
-    def select(code, flat, trim, num_byzantine, multi):
-        return jax.lax.switch(lookup_j[code], branches,
-                              (flat, trim, num_byzantine, multi))
+    if masked:
+        def select(code, flat, trim, num_byzantine, multi, mask):
+            return jax.lax.switch(lookup_j[code], branches,
+                                  (flat, trim, num_byzantine, multi, mask))
+    else:
+        def select(code, flat, trim, num_byzantine, multi):
+            return jax.lax.switch(lookup_j[code], branches,
+                                  (flat, trim, num_byzantine, multi))
 
     return select
 
 
-def make_group_defense_kernel(code: int, gm_iters: int = 8) -> Callable:
+def make_group_defense_kernel(code: int, gm_iters: int = 8,
+                              masked: bool = False) -> Callable:
     """Static single-family dispatch for a grouped lane partition
     (`scenario.build_lane_groups`): `code` is a concrete Python int, so the
     returned fn(flat [S_g, U, D], trim, f, multi each [S_g]) -> [S_g, D] is
     ONE family's kernel vmapped over its contiguous group — no `lax.switch`,
     no other family traced.  Per-lane math is identical to the switch
-    selector's branch for `code` (same `_FLAT_KERNELS_BY_CODE` entry), which
-    is what makes grouped == switch dispatch exact."""
+    selector's branch for `code` (same kernel-table entry), which is what
+    makes grouped == switch dispatch exact.  masked=True appends a [S_g, U]
+    bool participation-mask argument (same table as the masked selector)."""
+    if masked:
+        mfn = functools.partial(_MASKED_FLAT_KERNELS_BY_CODE[int(code)],
+                                it=gm_iters)
+
+        def apply_masked(flat, trim, num_byzantine, multi, mask):
+            return jax.vmap(lambda f, t, nb, m, pk: mfn((f, t, nb, m, pk)))(
+                flat, trim, num_byzantine, multi, mask)
+
+        return apply_masked
+
     fn = functools.partial(_FLAT_KERNELS_BY_CODE[int(code)], it=gm_iters)
 
     def apply(flat, trim, num_byzantine, multi):

@@ -44,9 +44,12 @@ ATTACK_CODES = {
     A.AttackType.STRONGEST: 1,
     A.AttackType.SIGN_FLIP_PROTOCOL_POWER: 2,
     A.AttackType.GAUSSIAN: 3,
+    A.AttackType.COLLUDING: 4,
+    A.AttackType.OMNISCIENT: 5,
 }
 _CI, _BEV, _EF, _TCI = 0, 1, 2, 3
 _NONE, _STRONGEST, _SIGN_FLIP, _GAUSSIAN = 0, 1, 2, 3
+_COLLUDING, _OMNISCIENT = 4, 5
 
 # Defense-code lane axis: 0 selects the analog FLOA combine (the paper's
 # scheme); every other code selects a digital screening defense applied to
@@ -161,6 +164,11 @@ class ScenarioParams(NamedTuple):
     def_trim: Array    # int32 []  trimmed_mean trim count
     def_f: Array       # int32 []  (multi-)Krum assumed attacker count f
     def_multi: Array   # int32 []  multi-Krum average count m
+    # Adaptive-adversary axis (PR 8); the numpy-scalar defaults keep older
+    # direct constructions (tests, notebooks) valid and inert.
+    chan_rho: Array = jnp.float32(0.0)   # f32 [] Gauss-Markov fading rho
+    part_k: Array = jnp.int32(1 << 30)   # int32 [] K-of-U participation count
+    #                                      (>= U means full participation)
 
     @property
     def num_workers(self) -> int:
@@ -168,7 +176,8 @@ class ScenarioParams(NamedTuple):
 
 
 def from_floa(cfg, alpha: float,
-              defense: Optional[DefenseSpec] = None) -> ScenarioParams:
+              defense: Optional[DefenseSpec] = None,
+              participants: Optional[int] = None) -> ScenarioParams:
     """FLOAConfig (frozen dataclass) -> traceable ScenarioParams.
 
     EF scenarios get noise_std forced to 0 here (the dataclass path simply
@@ -179,10 +188,19 @@ def from_floa(cfg, alpha: float,
     Digital lanes keep the full channel/power params (their branchless floa
     half still traces) but the lane's update consumes the screening defense
     output instead.
+
+    participants: optional K for K-of-U per-round client sampling (the sweep
+    engine draws the round's K participants from the lane key); None means
+    full participation.  K = U is a valid — bitwise-pinned — degenerate case
+    but still exercises the masked machinery, which is exactly what the
+    K=U == full-participation contract tests.
     """
     cfg.validate()
     u = cfg.num_workers
     defense = (defense or DefenseSpec()).validate(u)
+    if participants is not None and not 1 <= participants <= u:
+        raise ValueError(
+            f"participants={participants} invalid for U={u}: need 1 <= K <= U")
     mask = (jnp.asarray(cfg.attack.byzantine_mask, dtype=bool)
             if cfg.attack.byzantine_mask else jnp.zeros((u,), dtype=bool))
     is_ef = cfg.power.policy == Policy.EF
@@ -199,6 +217,8 @@ def from_floa(cfg, alpha: float,
         def_trim=jnp.int32(defense.trim),
         def_f=jnp.int32(defense.num_byzantine),
         def_multi=jnp.int32(defense.multi),
+        chan_rho=jnp.float32(cfg.channel.markov_rho),
+        part_k=jnp.int32(u if participants is None else participants),
     )
 
 
@@ -323,16 +343,34 @@ def sample_gains(key: Array, sp: ScenarioParams) -> Array:
     return rayleigh_gains(key, sp.sigma)
 
 
+def participation_mask(key: Array, part_k: Array, num_workers: int) -> Array:
+    """K-of-U per-round client sampling: the K workers with the smallest
+    uniform scores participate (rank-of-rank top-K, so exactly K of U and
+    every subset is equally likely).  part_k may be traced; part_k >= U is
+    an all-True mask (full participation)."""
+    scores = jax.random.uniform(key, (num_workers,))
+    rank = jnp.argsort(jnp.argsort(scores))
+    return rank < part_k
+
+
 def scenario_coefficients(
-    h_abs: Array, sp: ScenarioParams, gbar: Array, eps2: Array
-) -> Tuple[Array, Array, Array, Array]:
+    h_abs: Array, sp: ScenarioParams, gbar: Array, eps2: Array,
+    part: Optional[Array] = None,
+) -> Tuple[Array, Array, Array, Array, Array]:
     """Branchless eq. (7) coefficient derivation for one scenario.
 
-    Returns (s, bias_w, jam_std, noise_std):
+    Returns (s, bias_w, jam_std, noise_std, dir_w):
       s [U]       signed per-worker payload coefficients (attacks.py semantics)
       bias_w []   de-standardization bias weight (x gbar x 1)
       jam_std []  GAUSSIAN jamming noise std (0 unless that attack is active)
       noise_std []  effective receiver AWGN std (0 under EF)
+      dir_w []    received weight of the COLLUDING/OMNISCIENT cohort's shared
+                  rank-1 direction (0 for every other attack; the caller owns
+                  the direction row itself — see fl/sweep.py)
+
+    part: optional [U] bool participation mask (`participation_mask`); None
+    is full participation with zero masking ops traced, and an all-True mask
+    is bitwise-identical to None (the K=U contract).
 
     Every policy/attack formula is computed, then selected with jnp.where on
     the int32 codes — so the whole thing vmaps over a stacked scenario axis.
@@ -344,6 +382,9 @@ def scenario_coefficients(
     dim = sp.dim   # power-accounting D from the config, NOT the model's size
     is_ef = sp.policy == _EF
     mask = sp.byz_mask
+    # Non-participants transmit nothing: they drop out of the payload, the
+    # bias/jamming/directional cohort sums, and the EF mean share.
+    eff_mask = mask if part is None else (mask & part)
     eps = jnp.sqrt(eps2)
 
     # --- power_control.transmit_amplitudes, all policies at once (the
@@ -355,7 +396,13 @@ def scenario_coefficients(
     amp = jnp.where(sp.policy == _CI, ci_amp,
                     jnp.where(sp.policy == _TCI,
                               jnp.minimum(ci_amp, bev_amp), bev_amp))
-    honest_s = jnp.where(is_ef, 1.0 / u, amp * h_abs)
+    if part is None:
+        ef_share = 1.0 / u
+    else:
+        # (1/u) * (u/K): == 1.0/u bitwise at the full mask (the scale is
+        # exactly 1.0), the 1/K mean share otherwise.
+        ef_share = (1.0 / u) * (u / jnp.sum(part.astype(jnp.float32)))
+    honest_s = jnp.where(is_ef, ef_share, amp * h_abs)
 
     # --- attacks.signed_coefficients (+ the EF early-return's sign flip).
     phat = A.strongest_attack_amplitude(sp.p_max, dim, gbar, eps2)
@@ -366,16 +413,33 @@ def scenario_coefficients(
     attacker_s = jnp.where(is_ef, -honest_s, attacker_s)
     active = sp.attack != _NONE
     s = jnp.where(active & mask, attacker_s, honest_s)
+    if part is not None:
+        s = jnp.where(part, s, 0.0)
 
     # PS de-standardizes assuming protocol power for every worker; attackers
-    # that never standardized (STRONGEST/GAUSSIAN) leave the bias behind.
+    # that never standardized (STRONGEST/GAUSSIAN/COLLUDING/OMNISCIENT)
+    # leave the bias behind.
     has_bias = active & (~is_ef) & ((sp.attack == _STRONGEST)
-                                    | (sp.attack == _GAUSSIAN))
-    bias_w = jnp.where(has_bias, jnp.sum(jnp.where(mask, honest_s, 0.0)), 0.0)
+                                    | (sp.attack == _GAUSSIAN)
+                                    | (sp.attack == _COLLUDING)
+                                    | (sp.attack == _OMNISCIENT))
+    bias_w = jnp.where(has_bias,
+                       jnp.sum(jnp.where(eff_mask, honest_s, 0.0)), 0.0)
 
     # --- attacks.gaussian_jam_std.
-    jam = A.jam_std_arrays(h_abs, sp.p_max, dim, mask, eps2)
+    jam = A.jam_std_arrays(h_abs, sp.p_max, dim, eff_mask, eps2)
     jam_std = jnp.where(active & (~is_ef) & (sp.attack == _GAUSSIAN), jam, 0.0)
 
+    # --- adaptive rank-1 attacks: the cohort's shared-direction weight
+    # (attacks.colluding_dir_weight / omniscient_dir_weight; unused outputs
+    # are dead code XLA drops when no directional lane is present).
+    collude_w = A.colluding_dir_weight(h_abs, sp.p_max, dim, eff_mask, eps2)
+    omni_w = A.omniscient_dir_weight(h_abs, sp.p_max, dim, eff_mask,
+                                     gbar, eps2)
+    directional = active & (~is_ef)
+    dir_w = jnp.where(directional & (sp.attack == _COLLUDING), collude_w,
+                      jnp.where(directional & (sp.attack == _OMNISCIENT),
+                                omni_w, 0.0))
+
     noise_std = jnp.where(is_ef, 0.0, sp.noise_std)
-    return s, bias_w, jam_std, noise_std
+    return s, bias_w, jam_std, noise_std, dir_w

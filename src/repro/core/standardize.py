@@ -86,6 +86,24 @@ def global_stats(gbar_i: Array, eps2_i: Array) -> Tuple[Array, Array]:
     return jnp.mean(gbar_i), jnp.mean(eps2_i)
 
 
+def masked_global_stats(gbar_i: Array, eps2_i: Array,
+                        mask: Array) -> Tuple[Array, Array]:
+    """`global_stats` over the participating workers only (K-of-U sampling:
+    non-participants never report, so the PS averages the K masked entries).
+
+    Computed as mean(where(mask, x, 0)) * (U / count) rather than
+    sum(where)/count: at a full mask the scale is exactly 1.0, making this
+    BITWISE-identical to `global_stats` under jit (a sum/traced-count
+    spelling is not — XLA strength-reduces mean's divide-by-constant into a
+    reciprocal multiply, which rounds differently from a true divide).  The
+    K=U == full-participation sweep contract rests on this.
+    """
+    u = mask.shape[-1]
+    scale = u / jnp.sum(mask.astype(jnp.float32))
+    return (jnp.mean(jnp.where(mask, gbar_i, 0.0)) * scale,
+            jnp.mean(jnp.where(mask, eps2_i, 0.0)) * scale)
+
+
 def standardize(tree, gbar: Array, eps2: Array):
     """eq. (3): (g - gbar 1) / eps, elementwise over the pytree."""
     inv = jax.lax.rsqrt(eps2)

@@ -1,6 +1,8 @@
-from repro.data.pipeline import FederatedSampler, TokenBatcher, iter_chunk_blocks
+from repro.data.pipeline import (FederatedSampler, TokenBatcher,
+                                 dirichlet_worker_split, iter_chunk_blocks)
 from repro.data.synthetic_digits import make_dataset, worker_split
 from repro.data.text import sample_tokens
 
-__all__ = ["FederatedSampler", "TokenBatcher", "iter_chunk_blocks",
+__all__ = ["FederatedSampler", "TokenBatcher", "dirichlet_worker_split",
+           "iter_chunk_blocks",
            "make_dataset", "worker_split", "sample_tokens"]

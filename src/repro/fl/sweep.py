@@ -81,6 +81,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import channel as CH
 from repro.core import defenses as DEF
 from repro.core import scenario as SC
 from repro.core import standardize as S
@@ -91,7 +92,7 @@ from repro.core.aggregation import (
     flatten_worker_grads,
     per_worker_grads,
 )
-from repro.core.attacks import AttackType
+from repro.core.attacks import DIRECTIONAL_ATTACKS, AttackType
 from repro.core.power_control import Policy
 from repro.core.scenario import DefenseSpec
 from repro.data.pipeline import iter_chunk_blocks
@@ -107,6 +108,16 @@ Array = jax.Array
 # warning and participate in building the implicit ExecutionPlan.
 _UNSET = object()
 
+# Per-round RNG schedule: every lane splits its round subkey into 3 slots
+# (0 = channel gains, 1 = receiver noise, 2 = jamming) — UNCHANGED since
+# PR 1, so pre-existing scenario codes keep a bitwise-identical key stream.
+# The adaptive-adversary axis draws from `fold_in(subkey, const)` side
+# channels instead of widening the split:
+_FOLD_COLLUDE = 3   # colluding cohort's shared direction
+_FOLD_MARKOV = 4    # Gauss-Markov fading innovation
+_FOLD_PART = 5      # K-of-U participation mask
+_FOLD_H_INIT = 7    # folded on the lane BASE key: stationary h_0 state
+
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioCase:
@@ -117,6 +128,13 @@ class ScenarioCase:
     Krum / ... — see core.scenario.DEFENSE_CODES) applied to the gathered
     [U, D] gradient slab, with digital attackers modelled as sign-flipped
     reported gradients (the FLTrainer mode="digital" semantics).
+
+    participants selects K-of-U per-round client sampling: each round the
+    lane draws K participants from its own key stream (non-participants
+    transmit nothing; digital defenses screen the K participating rows
+    only).  None (default) is full participation with zero masking ops
+    traced; participants=U runs the masked machinery and is pinned bitwise
+    equal to None (tests/test_scenario_axes.py).
     """
 
     name: str
@@ -124,6 +142,7 @@ class ScenarioCase:
     alpha: float
     seed: int = 0
     defense: DefenseSpec = dataclasses.field(default_factory=DefenseSpec)
+    participants: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +168,30 @@ class SweepSpec:
             c.floa.validate()
             assert c.floa.num_workers == u, "sweep scenarios must share U"
             c.defense.validate(u)
+            if c.participants is not None:
+                k = c.participants
+                if not 1 <= k <= u:
+                    raise ValueError(
+                        f"lane {c.name!r}: participants={k} invalid for "
+                        f"U={u}: need 1 <= K <= U")
+                # Digital screening bounds must hold for the K PARTICIPATING
+                # rows, not just U (DefenseSpec.validate's bound): the masked
+                # kernels screen K rows per round.
+                d = c.defense
+                if d.name == "trimmed_mean" and not 2 * d.trim < k:
+                    raise ValueError(
+                        f"lane {c.name!r}: trimmed_mean trim={d.trim} "
+                        f"invalid for K={k} participants: need 2*trim < K")
+                if d.name in ("krum", "multi_krum"):
+                    if d.num_byzantine > k - 3:
+                        raise ValueError(
+                            f"lane {c.name!r}: krum num_byzantine="
+                            f"{d.num_byzantine} invalid for K={k} "
+                            f"participants: need f <= K - 3")
+                    if d.multi > k:
+                        raise ValueError(
+                            f"lane {c.name!r}: krum multi={d.multi} invalid "
+                            f"for K={k} participants: need multi <= K")
         gm_iters = {c.defense.gm_iters for c in self.cases
                     if c.defense.name == "geometric_median"}
         if len(gm_iters) > 1:  # ValueError like every other defense bound:
@@ -171,8 +214,10 @@ class SweepSpec:
 
     def stacked_params(self) -> SC.ScenarioParams:
         """Frozen dataclass configs -> traceable struct-of-arrays, [S, ...]."""
-        return SC.stack(tuple(SC.from_floa(c.floa, c.alpha, c.defense)
-                              for c in self.cases))
+        return SC.stack(tuple(
+            SC.from_floa(c.floa, c.alpha, c.defense,
+                         participants=c.participants)
+            for c in self.cases))
 
     def keys(self) -> Array:
         return jnp.stack([jax.random.PRNGKey(c.seed) for c in self.cases])
@@ -236,6 +281,35 @@ class SweepSpec:
         its = {c.defense.gm_iters for c in self.cases
                if c.defense.name == "geometric_median"}
         return its.pop() if its else 8
+
+    # Adaptive-adversary axis (PR 8) — three more static trace gates.  Each
+    # is False for every pre-existing scenario code, so sweeps without the
+    # new axes trace the exact program (and key stream) they always did.
+    @property
+    def any_markov(self) -> bool:
+        """Gauss-Markov fading consumers: rho > 0 on an analog, non-EF lane
+        (digital lanes ignore the channel; EF ignores |h|).  Gates the
+        [S, U, 2] complex-gain scan carry."""
+        return any(c.floa.channel.markov_rho > 0.0
+                   and c.floa.power.policy != Policy.EF
+                   and not c.defense.is_digital for c in self.cases)
+
+    @property
+    def any_partial(self) -> bool:
+        """K-of-U participation: any lane with participants set.  NOTE an
+        explicit participants=U still counts — it runs the masked machinery,
+        which is exactly what the K=U == full-participation bitwise contract
+        exercises."""
+        return any(c.participants is not None for c in self.cases)
+
+    @property
+    def any_directional(self) -> bool:
+        """COLLUDING/OMNISCIENT cohorts with someone in them, on an analog
+        non-EF lane: gates the post-combine rank-1 direction injection."""
+        return any(c.floa.attack.attack in DIRECTIONAL_ATTACKS
+                   and c.floa.attack.num_attackers > 0
+                   and c.floa.power.policy != Policy.EF
+                   and not c.defense.is_digital for c in self.cases)
 
 
 @dataclasses.dataclass
@@ -587,21 +661,30 @@ class SweepEngine:
     def _make_digital_select(self):
         """Defense-code lane axis: [S, U, D] slab -> per-lane aggregate select.
 
-        Returns apply(gagg_floa, flat, sp) -> [S, D]: digital attackers'
-        rows are sign-flipped (the FLTrainer mode="digital" semantics — a
-        digital Byzantine worker reports -g, it has no channel to cheat on),
-        the lane's screening defense runs on the flipped slab via a vmapped
-        `lax.switch` over the codes present in the spec, and analog lanes
-        (code 0) keep their OTA combine output.  Both state paths share this
-        helper so strict_numerics stays bitwise across them.
+        Returns apply(gagg_floa, flat, sp[, part]) -> [S, D]: digital
+        attackers' rows are sign-flipped (the FLTrainer mode="digital"
+        semantics — a digital Byzantine worker reports -g, it has no channel
+        to cheat on), the lane's screening defense runs on the flipped slab
+        via a vmapped `lax.switch` over the codes present in the spec, and
+        analog lanes (code 0) keep their OTA combine output.  Both state
+        paths share this helper so strict_numerics stays bitwise across
+        them.  When the spec has participation lanes the selector switches
+        over the MASKED kernel table and `part` ([S, U] bool) excludes
+        non-participating rows from every screen.
         """
+        masked = self.spec.any_partial
         selector = DEF.make_flat_defense_selector(
-            self.spec.digital_codes, gm_iters=self.spec.gm_iters)
+            self.spec.digital_codes, gm_iters=self.spec.gm_iters,
+            masked=masked)
 
-        def apply(gagg_floa, flat, sp: SC.ScenarioParams):
+        def apply(gagg_floa, flat, sp: SC.ScenarioParams, part=None):
             flipped = _digital_flip(flat, sp)
-            dig = jax.vmap(selector)(sp.defense, flipped, sp.def_trim,
-                                     sp.def_f, sp.def_multi)
+            if masked:
+                dig = jax.vmap(selector)(sp.defense, flipped, sp.def_trim,
+                                         sp.def_f, sp.def_multi, part)
+            else:
+                dig = jax.vmap(selector)(sp.defense, flipped, sp.def_trim,
+                                         sp.def_f, sp.def_multi)
             if gagg_floa is None:  # all-digital sweep: no analog leg at all
                 return dig
             return jnp.where((sp.defense == 0)[:, None], gagg_floa, dig)
@@ -612,42 +695,109 @@ class SweepEngine:
 
     def _digital_group_kernels(self) -> Dict[int, Callable]:
         """code -> single-family [S_g, U, D] kernel, for each digital group
-        in the partition (codes are concrete build-time config)."""
+        in the partition (codes are concrete build-time config).  With
+        participation lanes in the spec the kernels take the masked form
+        (trailing [S_g, U] bool participation argument)."""
         return {code: DEF.make_group_defense_kernel(
-                    code, gm_iters=self.spec.gm_iters)
+                    code, gm_iters=self.spec.gm_iters,
+                    masked=self.spec.any_partial)
                 for code, _, _ in self._groups.local_slices
                 if code != SC._FLOA_CODE}
 
-    def _make_analog_group_step(self, ws: Optional[_WorkerShards] = None):
-        """The analog (code 0) group's leg of a grouped round.
+    # ----- adaptive-adversary axis helpers (PR 8) -----
 
-        (w_g | None, flat_g, sub_g, sp_g, gbar_i, eps2_i) ->
-        (w_new_g | None, gagg_g): channel draw + power/attack coefficients +
-        receiver noise + OTA combine on the group's [S_g, U, D] sub-slab
-        only.  With w_g given and no jamming lane in the spec the combine
-        and PS update stay fused (`batched_floa_step`) — the grouped engine
-        restores the pure-FLOA fast route to the analog lanes of MIXED
-        grids, which the switch path's shared two-step route gives up.  The
-        per-lane math is the ungrouped round's exactly (same key-split
-        schedule, same coefficient derivation); only which lanes trace it
-        changes.
+    def _make_part_draw(self):
+        """Per-round K-of-U participation masks, full lane axis: [S, U] bool
+        from each lane's fold_in(subkey, _FOLD_PART) side channel — the
+        3-way round split is untouched, so non-participation draws are
+        unchanged."""
+        u = self._u
 
-        With ws (worker sharding, non-strict), flat_g is the LOCAL
+        def draw(sub_s, sp: SC.ScenarioParams):
+            return jax.vmap(lambda k, pk: SC.participation_mask(
+                jax.random.fold_in(k, _FOLD_PART), pk, u))(sub_s, sp.part_k)
+
+        return draw
+
+    def _make_markov_update(self):
+        """One Gauss-Markov fading step over the full lane axis.
+
+        (h [S, U, 2], sub_s, sp) -> (h_new, h_abs [S, U]).  The legacy
+        i.i.d. draw off key slot 0 happens for EVERY lane exactly as before
+        (so slots 1/2 — noise/jam — see an identical key stream), and
+        rho = 0 lanes keep that draw via the per-lane where: their |h| is
+        BITWISE the block-i.i.d. engine's.  rho > 0 lanes take |h| off the
+        evolving complex state instead, with innovations from the
+        fold_in(subkey, _FOLD_MARKOV) side channel.
+        """
+        def update(h, sub_s, sp: SC.ScenarioParams):
+            ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)
+            h_iid = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
+            w_in = jax.vmap(lambda k, sg: CH.complex_gain_init(
+                jax.random.fold_in(k, _FOLD_MARKOV), sg))(sub_s, sp.sigma)
+            h_new = CH.gauss_markov_step(h, w_in, sp.chan_rho[:, None, None])
+            h_abs = jnp.where((sp.chan_rho > 0.0)[:, None],
+                              CH.complex_gain_abs(h_new), h_iid)
+            return h_new, h_abs
+
+        return update
+
+    def _h0_init(self, keys, sp: SC.ScenarioParams):
+        """Stationary complex-gain init [S, U, 2] from each lane's BASE key
+        (fold_in const _FOLD_H_INIT — the per-round split schedule never
+        sees it), so every marginal is Rayleigh(sigma) from round 0."""
+        return jax.vmap(lambda k, sg: CH.complex_gain_init(
+            jax.random.fold_in(k, _FOLD_H_INIT), sg))(keys, sp.sigma)
+
+    def _make_analog_step(self, ws: Optional[_WorkerShards] = None,
+                          grouped: bool = False):
+        """The analog leg of one round — ONE definition shared by all four
+        builders (tree/flat state x grouped/switch dispatch), which is what
+        keeps their per-lane math (and the equivalence contracts) aligned.
+
+        step(wg | None, fg, sub_g, spg, gbar_i, eps2_i, part=None,
+             h_abs=None) -> (w_new | None, gagg):
+        standardization stats + channel draw + power/attack coefficients +
+        receiver noise + OTA combine (+ jamming + adaptive rank-1 cohort
+        direction) on a [S_g, U, D] (sub-)slab.  With wg given and neither
+        jamming nor a directional attack in the spec, the combine and PS
+        update stay fused (`batched_floa_step`).  grouped=True narrows the
+        noise/jam trace gates to the analog group's lanes (analog_noise /
+        analog_jamming).
+
+        part: optional [S_g, U] participation masks — stats then average the
+        K participating workers only (`masked_global_stats`, bitwise equal
+        to the plain mean at a full mask) and non-participants drop out of
+        the coefficients.  h_abs: optional pre-drawn |h| (the Gauss-Markov
+        carry path); None draws the legacy block-i.i.d. gains off key
+        slot 0.
+
+        With ws (worker sharding, non-strict), fg is the LOCAL
         [S_g, u_loc, D] slice, the draws still happen at full U (replicated
         — identical key schedule), and the combine is `ws.psum_combine`.
         """
-        any_noise = self.spec.analog_noise
-        any_jam = self.spec.analog_jamming
+        any_noise = self.spec.analog_noise if grouped else self.spec.any_noise
+        any_jam = (self.spec.analog_jamming if grouped
+                   else self.spec.any_jamming)
+        any_dir = self.spec.any_directional
 
-        def step(wg, fg, sub_g, spg, gbar_i, eps2_i):
-            n_g, _, dim = fg.shape
-            gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
+        def step(wg, fg, sub_g, spg, gbar_i, eps2_i, part=None, h_abs=None):
+            n_g = fg.shape[0]
+            dim = fg.shape[-1]
+            if part is None:
+                gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
+            else:
+                gbar, eps2 = jax.vmap(S.masked_global_stats)(
+                    gbar_i, eps2_i, part)
             eps = jnp.sqrt(eps2)
             ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_g)  # [Sg,3,2]
-            h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], spg)
-            coeff, bias_w, jam_std, noise_std = jax.vmap(
-                SC.scenario_coefficients
-            )(h_abs, spg, gbar, eps2)
+            if h_abs is None:
+                h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], spg)
+            args = (h_abs, spg, gbar, eps2)
+            if part is not None:
+                args = args + (part,)
+            coeff, bias_w, jam_std, noise_std, dir_w = jax.vmap(
+                SC.scenario_coefficients)(*args)
             if any_noise:
                 z = jax.vmap(
                     lambda k: jax.random.normal(k, (dim,), jnp.float32)
@@ -659,7 +809,7 @@ class SweepEngine:
             if ws is not None:
                 gagg = ws.psum_combine(coeff, fg, noise_row, bias_row, eps)
             else:
-                if wg is not None and not any_jam:
+                if wg is not None and not (any_jam or any_dir):
                     return batched_floa_step(
                         wg, spg.alpha, coeff, fg, noise_row, bias_row, eps)
                 gagg = batched_floa_combine(
@@ -669,6 +819,33 @@ class SweepEngine:
                     lambda k: jax.random.normal(k, (dim,), jnp.float32)
                 )(ks[:, 2])
                 gagg = gagg + jam_std[:, None] * n2
+            if any_dir:
+                # The cohort's shared rank-1 payload, injected after the OTA
+                # combine: COLLUDING transmits a cohort-common unit-RMS
+                # random direction (fold_in side channel), OMNISCIENT the
+                # round's honest (participating) mean gradient; dir_w
+                # carries the |h|-weighted received amplitude and is 0.0 for
+                # every other attack code.
+                d = jax.vmap(lambda k: jax.random.normal(
+                    jax.random.fold_in(k, _FOLD_COLLUDE), (dim,),
+                    jnp.float32))(sub_g)
+                rms = jnp.sqrt(jnp.mean(jnp.square(d), axis=-1,
+                                        keepdims=True))
+                d = d / jnp.maximum(rms, 1e-20)
+                hmaskf = (~spg.byz_mask).astype(jnp.float32)
+                if part is not None:
+                    hmaskf = hmaskf * part.astype(jnp.float32)
+                cnt = jnp.maximum(jnp.sum(hmaskf, axis=-1), 1.0)
+                if ws is not None:
+                    hpart = jnp.einsum("su,sud->sd",
+                                       ws.local_coeff(hmaskf), fg)
+                    hsum = jax.lax.psum(hpart, "workers")
+                else:
+                    hsum = jnp.einsum("su,sud->sd", hmaskf, fg)
+                hm = hsum / cnt[:, None]
+                dir_row = jnp.where(
+                    (spg.attack == SC._COLLUDING)[:, None], d, hm)
+                gagg = gagg + dir_w[:, None] * dir_row
             w_new = None if wg is None else wg - spg.alpha[:, None] * gagg
             return w_new, gagg
 
@@ -756,14 +933,19 @@ class SweepEngine:
         family's kernel trace once over their own contiguous sub-slab, and
         the per-lane aggregates concatenate back in group order.  No
         `lax.switch`, no family traced for lanes that don't run it."""
-        loss_fn = self.loss_fn
+        loss_fn, eval_fn = self.loss_fn, self.eval_fn
         u = self._u
         strict = self.strict_numerics
         local_slices = self._groups.local_slices
-        analog_step = self._make_analog_group_step()
+        analog_step = self._make_analog_step(grouped=True)
         kernels = self._digital_group_kernels()
+        any_markov = self.spec.any_markov
+        any_partial = self.spec.any_partial
+        markov_update = self._make_markov_update() if any_markov else None
+        part_draw = self._make_part_draw() if any_partial else None
 
-        def one_round(params_s, batch, sub_s, sp: SC.ScenarioParams):
+        def one_round(state, batch, sub_s, sp: SC.ScenarioParams):
+            params_s = state[0] if any_markov else state
             grads = jax.vmap(
                 lambda p: per_worker_grads(loss_fn, p, batch, u)[0]
             )(params_s)
@@ -771,11 +953,17 @@ class SweepEngine:
             if strict:
                 flat = jax.lax.optimization_barrier(flat)
             num = flat.shape[0]
+            if any_markov:
+                h_new, h_abs_all = markov_update(state[1], sub_s, sp)
+            else:
+                h_new, h_abs_all = None, None
+            part_all = part_draw(sub_s, sp) if any_partial else None
             parts = []
             for code, start, end in local_slices:
                 sl = slice(start, end)
                 fg = flat[sl]
                 spg = jax.tree_util.tree_map(lambda x: x[sl], sp)
+                part_g = None if part_all is None else part_all[sl]
                 if code == SC._FLOA_CODE:
                     if strict:
                         gbar_i, eps2_i = jax.vmap(
@@ -785,12 +973,19 @@ class SweepEngine:
                             lambda x: x[sl], grads)
                         gbar_i, eps2_i = jax.vmap(
                             S.per_worker_scalar_stats)(grads_g)
-                    _, gagg_g = analog_step(None, fg, sub_s[sl], spg,
-                                            gbar_i, eps2_i)
+                    _, gagg_g = analog_step(
+                        None, fg, sub_s[sl], spg, gbar_i, eps2_i,
+                        part=part_g,
+                        h_abs=None if h_abs_all is None else h_abs_all[sl])
                 else:
-                    gagg_g = kernels[code](_digital_flip(fg, spg),
-                                           spg.def_trim, spg.def_f,
-                                           spg.def_multi)
+                    flipped = _digital_flip(fg, spg)
+                    if any_partial:
+                        gagg_g = kernels[code](flipped, spg.def_trim,
+                                               spg.def_f, spg.def_multi,
+                                               part_g)
+                    else:
+                        gagg_g = kernels[code](flipped, spg.def_trim,
+                                               spg.def_f, spg.def_multi)
                 parts.append(gagg_g)
             gagg_flat = jnp.concatenate(parts, axis=0)
 
@@ -801,9 +996,15 @@ class SweepEngine:
                 params_s, gagg)
             gn = jnp.sqrt(jnp.sum(jnp.square(gagg_flat), axis=-1))
             loss = jax.vmap(lambda p: loss_fn(p, batch))(new_params)
-            return new_params, loss, gn
+            new_state = (new_params, h_new) if any_markov else new_params
+            return new_state, loss, gn
 
-        return self._scan_driver(one_round, self.eval_fn)
+        if any_markov:
+            eval_lane = (None if eval_fn is None
+                         else lambda st: eval_fn(st[0]))
+            return self._scan_driver(one_round, eval_lane,
+                                     finalize=lambda st: st[0])
+        return self._scan_driver(one_round, eval_fn)
 
     def _make_run_flat_grouped(self, unflatten_row, sizes):
         """Flat-state warm path with grouped defense dispatch.
@@ -828,13 +1029,18 @@ class SweepEngine:
         # combine as a psum.
         ws = self._ws
         ws_run = None if strict else ws
-        analog_step = self._make_analog_group_step(ws_run)
+        analog_step = self._make_analog_step(ws_run, grouped=True)
         kernels = self._digital_group_kernels()
+        any_markov = self.spec.any_markov
+        any_partial = self.spec.any_partial
+        markov_update = self._make_markov_update() if any_markov else None
+        part_draw = self._make_part_draw() if any_partial else None
 
         def flat_loss(w_row, batch):
             return loss_fn(unflatten_row(w_row), batch)
 
-        def one_round(w, batch, sub_s, sp: SC.ScenarioParams):
+        def one_round(state, batch, sub_s, sp: SC.ScenarioParams):
+            w = state[0] if any_markov else state
             if ws is None:
                 grads = jax.vmap(
                     lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
@@ -849,11 +1055,17 @@ class SweepEngine:
                     grads = ws.gather_slab(grads)
             if strict and has_analog:
                 grads = jax.lax.optimization_barrier(grads)
+            if any_markov:
+                h_new, h_abs_all = markov_update(state[1], sub_s, sp)
+            else:
+                h_new, h_abs_all = None, None
+            part_all = part_draw(sub_s, sp) if any_partial else None
             w_parts, g_parts = [], []
             for code, start, end in local_slices:
                 sl = slice(start, end)
                 wg, fg = w[sl], grads[sl]
                 spg = jax.tree_util.tree_map(lambda x: x[sl], sp)
+                part_g = None if part_all is None else part_all[sl]
                 if code == SC._FLOA_CODE:
                     if strict:
                         gbar_i, eps2_i = jax.vmap(
@@ -863,14 +1075,21 @@ class SweepEngine:
                             lambda g: S.flat_scalar_stats(g))(fg)
                         if ws_run is not None:
                             gbar_i, eps2_i = ws.gather_stats(gbar_i, eps2_i)
-                    w_new_g, gagg_g = analog_step(wg, fg, sub_s[sl], spg,
-                                                  gbar_i, eps2_i)
+                    w_new_g, gagg_g = analog_step(
+                        wg, fg, sub_s[sl], spg, gbar_i, eps2_i,
+                        part=part_g,
+                        h_abs=None if h_abs_all is None else h_abs_all[sl])
                 else:
                     fg_full = (ws.gather_slab(fg) if ws_run is not None
                                else fg)
-                    gagg_g = kernels[code](_digital_flip(fg_full, spg),
-                                           spg.def_trim, spg.def_f,
-                                           spg.def_multi)
+                    flipped = _digital_flip(fg_full, spg)
+                    if any_partial:
+                        gagg_g = kernels[code](flipped, spg.def_trim,
+                                               spg.def_f, spg.def_multi,
+                                               part_g)
+                    else:
+                        gagg_g = kernels[code](flipped, spg.def_trim,
+                                               spg.def_f, spg.def_multi)
                     w_new_g = wg - spg.alpha[:, None] * gagg_g
                 w_parts.append(w_new_g)
                 g_parts.append(gagg_g)
@@ -878,12 +1097,18 @@ class SweepEngine:
             gagg = jnp.concatenate(g_parts, axis=0)
             gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
             loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
-            return w_new, loss, gn
+            new_state = (w_new, h_new) if any_markov else w_new
+            return new_state, loss, gn
 
-        eval_lane = (None if eval_fn is None
-                     else lambda wr: eval_fn(unflatten_row(wr)))
-        return self._scan_driver(one_round, eval_lane,
-                                 finalize=jax.vmap(unflatten_row))
+        if any_markov:
+            eval_lane = (None if eval_fn is None
+                         else lambda st: eval_fn(unflatten_row(st[0])))
+            finalize = lambda st: jax.vmap(unflatten_row)(st[0])
+        else:
+            eval_lane = (None if eval_fn is None
+                         else lambda wr: eval_fn(unflatten_row(wr)))
+            finalize = jax.vmap(unflatten_row)
+        return self._scan_driver(one_round, eval_lane, finalize=finalize)
 
     def _make_run(self, sizes):
         """PR-1 tree-state path: params stay a pytree; every round pays the
@@ -894,27 +1119,36 @@ class SweepEngine:
         stats for the barrier + leaf-segmented reduction off the flattened
         slab, pinning the fp reduction tree both engines use so the
         flat-state path can match it bitwise."""
-        loss_fn = self.loss_fn
+        loss_fn, eval_fn = self.loss_fn, self.eval_fn
         u = self._u
         strict = self.strict_numerics
-        any_noise = self.spec.any_noise
-        any_jam = self.spec.any_jamming
         all_digital = self.spec.all_digital
         digital_select = (self._make_digital_select()
                           if self.spec.any_digital else None)
+        analog_step = self._make_analog_step()
+        any_markov = self.spec.any_markov
+        any_partial = self.spec.any_partial
+        markov_update = self._make_markov_update() if any_markov else None
+        part_draw = self._make_part_draw() if any_partial else None
 
-        def one_round(params_s, batch, sub_s, sp: SC.ScenarioParams):
+        def one_round(state, batch, sub_s, sp: SC.ScenarioParams):
+            params_s = state[0] if any_markov else state
             # 1. per-worker local SGD gradients, per scenario: leaves [S, U, ...]
             grads = jax.vmap(
                 lambda p: per_worker_grads(loss_fn, p, batch, u)[0]
             )(params_s)
+            if any_markov:
+                h_new, h_abs = markov_update(state[1], sub_s, sp)
+            else:
+                h_new, h_abs = None, None
+            part = part_draw(sub_s, sp) if any_partial else None
 
             if all_digital:
                 # No analog leg to trace (mirrors the flat-state path, so
                 # strict_numerics stays bitwise across representations).
                 flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
                 num = flat.shape[0]
-                gagg_flat = digital_select(None, flat, sp)
+                gagg_flat = digital_select(None, flat, sp, part)
             else:
                 # 2. scalar-stat standardization handshake.
                 if strict:
@@ -928,36 +1162,17 @@ class SweepEngine:
                 else:
                     gbar_i, eps2_i = jax.vmap(S.per_worker_scalar_stats)(grads)
                     flat, unflatten = flatten_worker_grads(grads, batch_dims=2)
-                num, dim = flat.shape[0], flat.shape[-1]
-                gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
-                eps = jnp.sqrt(eps2)
-
-                # 3. channel draw + power control + attack, branchless per lane.
-                ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)  # [S, 3, 2]
-                h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
-                coeff, bias_w, jam_std, noise_std = jax.vmap(
-                    SC.scenario_coefficients
-                )(h_abs, sp, gbar, eps2)
-
-                # 4. OTA superposition + bias + receiver AWGN, one fused combine.
-                if any_noise:
-                    z = jax.vmap(
-                        lambda k: jax.random.normal(k, (dim,), jnp.float32)
-                    )(ks[:, 1])
-                    noise_row = noise_std[:, None] * z
-                else:
-                    noise_row = jnp.zeros((num, dim), jnp.float32)
-                gagg_flat = batched_floa_combine(
-                    coeff, flat, noise_row, bias_w * gbar, eps)
-                if any_jam:  # GAUSSIAN ablation: unstructured max-power jamming
-                    n2 = jax.vmap(
-                        lambda k: jax.random.normal(k, (dim,), jnp.float32)
-                    )(ks[:, 2])
-                    gagg_flat = gagg_flat + jam_std[:, None] * n2
+                num = flat.shape[0]
+                # 3+4. channel draw + coefficients + OTA combine (+ jam +
+                # directional cohort), the shared analog leg; wg=None keeps
+                # the two-step route the tree update needs.
+                _, gagg_flat = analog_step(None, flat, sub_s, sp,
+                                           gbar_i, eps2_i,
+                                           part=part, h_abs=h_abs)
                 if digital_select is not None:
                     # Defense lanes override the analog combine with their
                     # screening defense on the same (already materialized) slab.
-                    gagg_flat = digital_select(gagg_flat, flat, sp)
+                    gagg_flat = digital_select(gagg_flat, flat, sp, part)
 
             # 5. PS update w <- w - alpha * gagg (per-scenario alpha).
             gagg = unflatten(gagg_flat)
@@ -968,9 +1183,15 @@ class SweepEngine:
 
             gn = jnp.sqrt(jnp.sum(jnp.square(gagg_flat), axis=-1))
             loss = jax.vmap(lambda p: loss_fn(p, batch))(new_params)
-            return new_params, loss, gn
+            new_state = (new_params, h_new) if any_markov else new_params
+            return new_state, loss, gn
 
-        return self._scan_driver(one_round, self.eval_fn)
+        if any_markov:
+            eval_lane = (None if eval_fn is None
+                         else lambda st: eval_fn(st[0]))
+            return self._scan_driver(one_round, eval_lane,
+                                     finalize=lambda st: st[0])
+        return self._scan_driver(one_round, eval_fn)
 
     def _make_run_flat(self, unflatten_row, sizes):
         """Flat-state warm path: the carry is one [S, D] f32 matrix.
@@ -984,8 +1205,8 @@ class SweepEngine:
         loss_fn, eval_fn = self.loss_fn, self.eval_fn
         u = self._u
         strict = self.strict_numerics
-        any_noise = self.spec.any_noise
         any_jam = self.spec.any_jamming
+        any_dir = self.spec.any_directional
         all_digital = self.spec.all_digital
         digital_select = (self._make_digital_select()
                           if self.spec.any_digital else None)
@@ -996,12 +1217,23 @@ class SweepEngine:
         # — scalar stats all-gather, the OTA combine psums.
         ws = self._ws
         ws_run = None if strict else ws
+        analog_step = self._make_analog_step(ws_run)
+        # Jamming and the directional cohort land AFTER the combine (neither
+        # fuses into `batched_floa_step`), and defense lanes select their
+        # screening aggregate before the update — those sweeps take the
+        # two-step route; pure-FLOA sweeps keep the fused combine + update.
+        fused = not (any_jam or any_dir or digital_select is not None
+                     or ws_run is not None)
+        any_markov = self.spec.any_markov
+        any_partial = self.spec.any_partial
+        markov_update = self._make_markov_update() if any_markov else None
+        part_draw = self._make_part_draw() if any_partial else None
 
         def flat_loss(w_row, batch):
             return loss_fn(unflatten_row(w_row), batch)
 
-        def one_round(w, batch, sub_s, sp: SC.ScenarioParams):
-            num, dim = w.shape
+        def one_round(state, batch, sub_s, sp: SC.ScenarioParams):
+            w = state[0] if any_markov else state
             # 1. per-worker gradients, already flat: [S, U, D] (the local
             # [S, u_loc, D] slice under worker sharding).
             if ws is None:
@@ -1016,13 +1248,18 @@ class SweepEngine:
                 )(w)
                 if strict or all_digital:
                     grads = ws.gather_slab(grads)
+            if any_markov:
+                h_new, h_abs = markov_update(state[1], sub_s, sp)
+            else:
+                h_new, h_abs = None, None
+            part = part_draw(sub_s, sp) if any_partial else None
 
             # All-digital sweeps skip the analog leg entirely (stats,
             # channel draw, coefficients, combine — their outputs would be
             # discarded by the defense select anyway, and XLA cannot DCE
             # through the per-lane jnp.where).
             if all_digital:
-                gagg = digital_select(None, grads, sp)
+                gagg = digital_select(None, grads, sp, part)
                 w_new = w - sp.alpha[:, None] * gagg
                 gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
                 loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
@@ -1046,61 +1283,35 @@ class SweepEngine:
                     # mean then reduces the same vector the unsharded
                     # engine reduces (bitwise-equal stats).
                     gbar_i, eps2_i = ws.gather_stats(gbar_i, eps2_i)
-            gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
-            eps = jnp.sqrt(eps2)
 
-            # 3. channel draw + power control + attack, branchless per lane.
-            ks = jax.vmap(lambda k: jax.random.split(k, 3))(sub_s)  # [S, 3, 2]
-            h_abs = jax.vmap(SC.sample_gains)(ks[:, 0], sp)
-            coeff, bias_w, jam_std, noise_std = jax.vmap(
-                SC.scenario_coefficients
-            )(h_abs, sp, gbar, eps2)
-
-            if any_noise:
-                z = jax.vmap(
-                    lambda k: jax.random.normal(k, (dim,), jnp.float32)
-                )(ks[:, 1])
-                noise_row = noise_std[:, None] * z
-            else:
-                noise_row = jnp.zeros((num, dim), jnp.float32)
-
-            # 4+5. OTA superposition + bias + AWGN + PS update, one fused
-            # pass over the [S, U, D] slab.  Jamming lands after the combine
-            # (it is not eps-scaled) and defense lanes select their screening
-            # aggregate before the update, so GAUSSIAN or defense-carrying
-            # sweeps take the two-step route; pure-FLOA sweeps use the fused
-            # step.
-            bias_row = bias_w * gbar
-            if any_jam or digital_select is not None or ws_run is not None:
-                if ws_run is not None:
-                    gagg = ws.psum_combine(
-                        coeff, grads, noise_row, bias_row, eps)
-                else:
-                    gagg = batched_floa_combine(
-                        coeff, grads, noise_row, bias_row, eps)
-                if any_jam:
-                    n2 = jax.vmap(
-                        lambda k: jax.random.normal(k, (dim,), jnp.float32)
-                    )(ks[:, 2])
-                    gagg = gagg + jam_std[:, None] * n2
+            # 3+4(+5). the shared analog leg: channel draw + coefficients +
+            # OTA combine (+ jam + directional cohort); with wg given it
+            # fuses the PS update too.
+            w_new, gagg = analog_step(w if fused else None, grads, sub_s,
+                                      sp, gbar_i, eps2_i,
+                                      part=part, h_abs=h_abs)
+            if not fused:
                 if digital_select is not None:
                     slab = (ws.gather_slab(grads) if ws_run is not None
                             else grads)
-                    gagg = digital_select(gagg, slab, sp)
+                    gagg = digital_select(gagg, slab, sp, part)
                 w_new = w - sp.alpha[:, None] * gagg
-            else:
-                w_new, gagg = batched_floa_step(
-                    w, sp.alpha, coeff, grads, noise_row, bias_row, eps)
 
             gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
             loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
-            return w_new, loss, gn
+            new_state = (w_new, h_new) if any_markov else w_new
+            return new_state, loss, gn
 
-        eval_lane = (None if eval_fn is None
-                     else lambda wr: eval_fn(unflatten_row(wr)))
-        # The only unflatten outside the loss closure: once, at the end.
-        return self._scan_driver(one_round, eval_lane,
-                                 finalize=jax.vmap(unflatten_row))
+        if any_markov:
+            eval_lane = (None if eval_fn is None
+                         else lambda st: eval_fn(unflatten_row(st[0])))
+            finalize = lambda st: jax.vmap(unflatten_row)(st[0])
+        else:
+            eval_lane = (None if eval_fn is None
+                         else lambda wr: eval_fn(unflatten_row(wr)))
+            # The only unflatten outside the loss closure: once, at the end.
+            finalize = jax.vmap(unflatten_row)
+        return self._scan_driver(one_round, eval_lane, finalize=finalize)
 
     def _build(self, template):
         """Compile-cache the run programs (lazy: needs the params template).
@@ -1231,6 +1442,12 @@ class SweepEngine:
             state, _ = flatten_worker_grads(params0, batch_dims=1)  # [S, D] f32
         else:
             state = params0
+        if self.spec.any_markov:
+            # Gauss-Markov fading: the scan carry grows a [S, U, 2] complex
+            # gain state (stationary init off each lane's base key).  Tuples
+            # thread through permute/pad/device_put/shard specs unchanged —
+            # they are all pytree-prefix operations.
+            state = (state, self._h0_init(keys, self._sp))
         if self._groups is not None:
             # Grouped dispatch: gather lanes (and their per-group ghosts)
             # into LaneGroups execution order; results un-permute below.

@@ -1,0 +1,32 @@
+"""Shared pytest configuration for the suite.
+
+Hypothesis (optional — tier-1 may run without it) executes under named
+profiles so failures are reproducible across machines:
+
+  dev (default) : randomized example search, no deadline (JIT compiles
+                  inside tests), print_blob so a local failure prints its
+                  reproduction blob.
+  ci            : everything dev has plus derandomize=True — example
+                  generation is a pure function of each test, so a CI
+                  failure reproduces exactly with a plain local rerun (no
+                  flaky property tests in the gate).
+
+CI jobs export HYPOTHESIS_PROFILE=ci; anything else (or unset) gets dev.
+Per-test @settings decorators still apply — they override only the fields
+they name, so max_examples stays per-suite while the profile controls
+determinism.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # tier-1 without the test extra: profiles are moot
+    settings = None
+
+if settings is not None:
+    settings.register_profile(
+        "dev", settings(deadline=None, print_blob=True))
+    settings.register_profile(
+        "ci", settings(deadline=None, print_blob=True, derandomize=True,
+                       suppress_health_check=[HealthCheck.too_slow]))
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

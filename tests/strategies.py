@@ -1,0 +1,104 @@
+"""Shared data generators and hypothesis strategies for the test suites.
+
+One module owns the random-input recipes the property and equivalence suites
+previously duplicated: the [U, D] worker-gradient matrix, the gradient
+pytree, the stacked regression batch stream, and the toy federated shard
+dict.  Keeping them here means a change to the input distribution (scale,
+dtype, layout) lands in every suite at once — and the hypothesis suites draw
+their integer/float axes from the same named strategies, so the search-space
+bounds are defined exactly once.
+
+The deterministic generators need only numpy/jax.  The strategy factories
+need hypothesis, which tier-1 may not have installed — callers must
+`pytest.importorskip("hypothesis")` (see HYPOTHESIS_REASON) before touching
+them; importing THIS module stays safe either way.
+"""
+import jax
+import numpy as np
+
+HYPOTHESIS_REASON = ("hypothesis not installed (pip install -e '.[test]'; "
+                     "CI's tier-1 job has it)")
+
+try:
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 without the test extra
+    st = None
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------- deterministic generators
+
+def flat_grads(seed: int, u: int, d: int) -> np.ndarray:
+    """[U, D] float32 worker-gradient matrix, mildly off-center — the input
+    the defense-kernel property suite screens."""
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(u, d)) * 0.7 + 0.1).astype(np.float32)
+
+
+def worker_grad_tree(key, u: int, d: int):
+    """One-leaf gradient pytree with a leading worker axis ([U, D])."""
+    g = jax.random.normal(key, (u, d)) * 0.5 + 0.1
+    return {"w": g}
+
+
+def regression_batches(seed: int, rounds: int, rows: int,
+                       d_in: int) -> dict:
+    """Stacked [R, rows, d_in] / [R, rows, 1] regression batches — the batch
+    stream every tiny-MLP sweep problem consumes (rows = U * batch)."""
+    rng = np.random.default_rng(seed)
+    return {"x": rng.normal(size=(rounds, rows, d_in)).astype(np.float32),
+            "y": rng.normal(size=(rounds, rows, 1)).astype(np.float32)}
+
+
+def toy_shards(seed: int, u: int, n: int = 20, d: int = 3,
+               classes: int = 4) -> dict:
+    """{worker: (x [n, d], y [n])} shard dict for FederatedSampler tests."""
+    rng = np.random.default_rng(seed)
+    return {i: (rng.normal(size=(n, d)).astype(np.float32),
+                rng.integers(0, classes, size=n)) for i in range(u)}
+
+
+# ------------------------------------------------------ hypothesis strategies
+
+def _needs_hypothesis():
+    if not HAVE_HYPOTHESIS:
+        raise RuntimeError(
+            "hypothesis strategies requested without hypothesis installed; "
+            "pytest.importorskip('hypothesis') first — " + HYPOTHESIS_REASON)
+
+
+def worker_counts(lo: int = 3, hi: int = 10):
+    """Number of workers U (most kernels need U >= 3)."""
+    _needs_hypothesis()
+    return st.integers(lo, hi)
+
+
+def dims(lo: int = 2, hi: int = 64):
+    """Gradient dimension D."""
+    _needs_hypothesis()
+    return st.integers(lo, hi)
+
+
+def seeds(hi: int = 10**6):
+    """PRNG seeds for the deterministic generators above."""
+    _needs_hypothesis()
+    return st.integers(0, hi)
+
+
+def byz_counts(hi: int = 4, lo: int = 0):
+    """Byzantine cohort sizes (callers clamp to their U-dependent bound)."""
+    _needs_hypothesis()
+    return st.integers(lo, hi)
+
+
+def shifts(bound: float = 5.0):
+    """Translation offsets for equivariance properties."""
+    _needs_hypothesis()
+    return st.floats(-bound, bound)
+
+
+def attack_scales(lo: float = 1e2, hi: float = 1e6):
+    """Magnitudes of Byzantine junk rows for breakdown-point properties."""
+    _needs_hypothesis()
+    return st.floats(lo, hi)

@@ -6,7 +6,6 @@ a change to FLOAConfig/ScenarioCase construction lands in every suite at
 once."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.aggregation import FLOAConfig
 from repro.core.attacks import AttackConfig, AttackType, first_n_mask
@@ -14,6 +13,7 @@ from repro.core.channel import ChannelConfig
 from repro.core.power_control import Policy, PowerConfig
 from repro.core.scenario import DefenseSpec
 from repro.fl import ScenarioCase
+from strategies import regression_batches
 
 U = 4
 
@@ -26,9 +26,7 @@ def tiny_problem(rounds=5, batch=8, d_in=6, d_h=5):
     params = {"w1": jax.random.normal(k, (d_in, d_h)),
               "w2": jax.random.normal(k, (d_h, 1))}
     dim = sum(p.size for p in jax.tree_util.tree_leaves(params))
-    rng = np.random.default_rng(0)
-    batches = {"x": rng.normal(size=(rounds, U * batch, d_in)).astype(np.float32),
-               "y": rng.normal(size=(rounds, U * batch, 1)).astype(np.float32)}
+    batches = regression_batches(0, rounds, U * batch, d_in)
     return loss, params, dim, batches
 
 

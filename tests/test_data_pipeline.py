@@ -1,0 +1,111 @@
+"""Dirichlet(alpha) non-IID partition contracts (data/pipeline.py).
+
+The adaptive-adversary experiments need label-skew shards; these tests pin
+the degenerate and monotonicity contracts so the sampler can be trusted as a
+scenario axis: alpha = inf is a deterministic stratified IID split (balanced
+per class to +-1), smaller alpha is strictly more skewed, every partition is
+a true partition of the dataset, and the min_per_worker floor always holds.
+"""
+import numpy as np
+import pytest
+
+from repro.data import dirichlet_worker_split
+from repro.data.pipeline import FederatedSampler
+from repro.data.synthetic_digits import make_dataset
+
+U = 4
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_dataset(400, seed=1)
+
+
+def _class_tv_skew(shards, y):
+    """Sum over classes of total-variation distance between the realized
+    worker proportions and uniform 1/U — 0 iff perfectly class-balanced."""
+    u = len(shards)
+    tv = 0.0
+    for c in np.unique(y):
+        per = np.array([np.sum(shards[i][1] == c) for i in range(u)], float)
+        per /= max(per.sum(), 1.0)
+        tv += 0.5 * np.abs(per - 1.0 / u).sum()
+    return tv
+
+
+def test_alpha_inf_is_stratified_and_balanced(dataset):
+    x, y = dataset
+    shards = dirichlet_worker_split(x, y, U, np.inf, seed=3)
+    assert len(shards) == U
+    for c in np.unique(y):
+        per = [int(np.sum(shards[i][1] == c)) for i in range(U)]
+        assert max(per) - min(per) <= 1, f"class {c} unbalanced: {per}"
+
+
+def test_partition_is_exact(dataset):
+    """Union of shards == dataset, no sample duplicated or dropped."""
+    x, y = dataset
+    for alpha in (np.inf, 1.0, 0.1):
+        shards = dirichlet_worker_split(x, y, U, alpha, seed=5)
+        ys = np.concatenate([shards[i][1] for i in range(U)])
+        assert len(ys) == len(y)
+        np.testing.assert_array_equal(np.sort(ys), np.sort(y))
+        xsums = np.concatenate([shards[i][0].sum(axis=1) for i in range(U)])
+        np.testing.assert_allclose(np.sort(xsums), np.sort(x.sum(axis=1)),
+                                   rtol=1e-6)
+
+
+def test_deterministic_in_seed(dataset):
+    x, y = dataset
+    a = dirichlet_worker_split(x, y, U, 0.5, seed=11)
+    b = dirichlet_worker_split(x, y, U, 0.5, seed=11)
+    for i in range(U):
+        np.testing.assert_array_equal(a[i][1], b[i][1])
+        np.testing.assert_array_equal(a[i][0], b[i][0])
+    c = dirichlet_worker_split(x, y, U, 0.5, seed=12)
+    assert any(not np.array_equal(a[i][1], c[i][1]) for i in range(U))
+
+
+def test_skew_increases_as_alpha_shrinks(dataset):
+    """Averaged over seeds, alpha=0.1 shards are more label-skewed than
+    alpha=100 shards, which in turn sit near the alpha=inf stratified split."""
+    x, y = dataset
+    skew = lambda alpha: np.mean([
+        _class_tv_skew(dirichlet_worker_split(x, y, U, alpha, seed=s), y)
+        for s in range(5)])
+    s_inf, s_hi, s_lo = skew(np.inf), skew(100.0), skew(0.1)
+    assert s_lo > s_hi > s_inf
+
+
+def test_min_per_worker_floor(dataset):
+    x, y = dataset
+    shards = dirichlet_worker_split(x, y, U, 0.01, seed=7, min_per_worker=5)
+    assert all(len(shards[i][1]) >= 5 for i in range(U))
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([shards[i][1] for i in range(U)])), np.sort(y))
+
+
+def test_validation_errors(dataset):
+    x, y = dataset
+    with pytest.raises(ValueError):
+        dirichlet_worker_split(x, y, U, 0.0)
+    with pytest.raises(ValueError):
+        dirichlet_worker_split(x, y, U, float("nan"))
+    with pytest.raises(ValueError):
+        dirichlet_worker_split(x, y, 0, 1.0)
+    with pytest.raises(ValueError):
+        dirichlet_worker_split(x[:3], y[:3], U, 1.0)
+
+
+def test_sampler_classmethod_batches(dataset):
+    x, y = dataset
+    fs = FederatedSampler.dirichlet(x, y, U, 0.5, batch_per_worker=8, seed=2)
+    assert fs.num_workers == U
+    b = fs.next_round()
+    assert b["x"].shape == (U * 8, x.shape[1])
+    assert b["y"].shape == (U * 8,)
+    # Worker-ordered concatenation: block i draws only from shard i's labels.
+    shards = dirichlet_worker_split(x, y, U, 0.5, seed=2)
+    for i in range(U):
+        block = b["y"][i * 8:(i + 1) * 8]
+        assert set(np.unique(block)) <= set(np.unique(shards[i][1]))

@@ -24,7 +24,8 @@ from repro.core.attacks import AttackConfig, AttackType, first_n_mask
 from repro.core.channel import ChannelConfig
 from repro.core.power_control import Policy, PowerConfig
 from repro.core.scenario import DEFENSE_CODES, DefenseSpec
-from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
+from repro.fl import (ExecutionPlan, FLTrainer, ScenarioCase, SweepEngine,
+                      SweepSpec)
 
 U = 4
 
@@ -237,8 +238,9 @@ def test_defense_lanes_match_per_defense_run_scan(flat_state):
     compiled sweep."""
     loss, params, dim, batches = _tiny_problem(rounds=6)
     cases = _showdown_cases(dim)
-    res = SweepEngine(loss, SweepSpec.build(cases),
-                      flat_state=flat_state).run(params, batches)
+    res = SweepEngine(
+        loss, SweepSpec.build(cases),
+        plan=ExecutionPlan(flat_state=flat_state)).run(params, batches)
     for i, case in enumerate(cases):
         if not case.defense.is_digital:
             continue
@@ -264,9 +266,12 @@ def test_defense_lanes_strict_flat_matches_tree_bitwise():
     defense lanes in the grid (the digital select is shared by both paths)."""
     loss, params, dim, batches = _tiny_problem(rounds=6)
     spec = SweepSpec.build(_showdown_cases(dim))
-    tree = SweepEngine(loss, spec, flat_state=False,
-                       strict_numerics=True).run(params, batches)
-    flat = SweepEngine(loss, spec, strict_numerics=True).run(params, batches)
+    tree = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            flat_state=False, strict_numerics=True)).run(params, batches)
+    flat = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(strict_numerics=True)).run(params, batches)
     np.testing.assert_array_equal(tree.loss, flat.loss)
     np.testing.assert_array_equal(tree.grad_norm, flat.grad_norm)
     for k in tree.params:
@@ -343,9 +348,12 @@ def test_all_digital_shortcut_matches_mixed_lanes(flat_state):
     digital_cases = [c for c in mixed_cases if c.defense.is_digital]
     spec = SweepSpec.build(digital_cases)
     assert spec.all_digital
-    dig = SweepEngine(loss, spec, flat_state=flat_state).run(params, batches)
-    mixed = SweepEngine(loss, SweepSpec.build(mixed_cases),
-                        flat_state=flat_state).run(params, batches)
+    dig = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(flat_state=flat_state)).run(params, batches)
+    mixed = SweepEngine(
+        loss, SweepSpec.build(mixed_cases),
+        plan=ExecutionPlan(flat_state=flat_state)).run(params, batches)
     for i, case in enumerate(digital_cases):
         j = mixed.index(case.name)
         np.testing.assert_array_equal(dig.loss[i], mixed.loss[j],
@@ -394,11 +402,16 @@ def test_grouped_matches_switch_dispatch(flat_state):
     showdown grid — the acceptance contract for the static lane partition."""
     loss, params, dim, batches = _tiny_problem(rounds=6)
     spec = SweepSpec.build(_showdown_cases(dim))
-    grouped = SweepEngine(loss, spec, flat_state=flat_state).run(
+    grouped = SweepEngine(
+        loss, spec, plan=ExecutionPlan(flat_state=flat_state)).run(
         params, batches)
-    assert SweepEngine(loss, spec, flat_state=flat_state)._groups is not None
-    switch = SweepEngine(loss, spec, flat_state=flat_state,
-                         grouped_dispatch=False).run(params, batches)
+    assert SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(flat_state=flat_state))._groups is not None
+    switch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            flat_state=flat_state,
+            grouped_dispatch=False)).run(params, batches)
     np.testing.assert_allclose(grouped.loss, switch.loss,
                                rtol=1e-6, atol=1e-7)
     np.testing.assert_allclose(grouped.grad_norm, switch.grad_norm,
@@ -416,11 +429,13 @@ def test_grouped_matches_switch_bitwise_strict(flat_state):
     schedule), only which lanes trace which family changes."""
     loss, params, dim, batches = _tiny_problem(rounds=6)
     spec = SweepSpec.build(_showdown_cases(dim))
-    grouped = SweepEngine(loss, spec, flat_state=flat_state,
-                          strict_numerics=True).run(params, batches)
-    switch = SweepEngine(loss, spec, flat_state=flat_state,
-                         grouped_dispatch=False,
-                         strict_numerics=True).run(params, batches)
+    grouped = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            flat_state=flat_state, strict_numerics=True)).run(params, batches)
+    switch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            flat_state=flat_state, grouped_dispatch=False,
+            strict_numerics=True)).run(params, batches)
     np.testing.assert_array_equal(grouped.loss, switch.loss)
     np.testing.assert_array_equal(grouped.grad_norm, switch.grad_norm)
     for k in switch.params:
@@ -437,8 +452,9 @@ def test_grouped_all_digital_and_analog_fused_route():
     assert eng._groups is not None
     assert all(code != 0 for code, _, _ in eng._groups.local_slices)
     grouped = eng.run(params, batches)
-    switch = SweepEngine(loss, SweepSpec.build(digital),
-                         grouped_dispatch=False).run(params, batches)
+    switch = SweepEngine(
+        loss, SweepSpec.build(digital),
+        plan=ExecutionPlan(grouped_dispatch=False)).run(params, batches)
     np.testing.assert_array_equal(grouped.loss, switch.loss)
     # pure-FLOA: the defense axis (and the grouped flag) must not touch it
     floa_cases = [ScenarioCase("bev", _floa(dim, Policy.BEV, 1), 0.05, seed=5)]

@@ -22,9 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed "
-                    "(pip install -e '.[test]'; CI's tier-1 job has it)")
-from hypothesis import assume, given, settings, strategies as st
+from strategies import HYPOTHESIS_REASON
+
+pytest.importorskip("hypothesis", reason=HYPOTHESIS_REASON)
+from hypothesis import assume, given, settings
 
 jax.config.update("jax_threefry_partitionable", True)
 
@@ -36,6 +37,15 @@ from repro.core.defenses import (
     flat_median,
     flat_trimmed_mean,
 )
+from strategies import (
+    attack_scales,
+    byz_counts,
+    dims,
+    flat_grads as _flat,
+    seeds,
+    shifts,
+    worker_counts,
+)
 
 COORDWISE = {
     "mean": lambda f: flat_mean(f),
@@ -45,16 +55,11 @@ COORDWISE = {
 }
 
 
-def _flat(seed: int, u: int, d: int) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    return (rng.normal(size=(u, d)) * 0.7 + 0.1).astype(np.float32)
-
-
 # ------------------------------------------------------ permutation invariance
 
 
 @pytest.mark.parametrize("name", sorted(COORDWISE))
-@given(u=st.integers(3, 10), d=st.integers(2, 64), seed=st.integers(0, 10**6))
+@given(u=worker_counts(), d=dims(), seed=seeds())
 @settings(max_examples=20, deadline=None)
 def test_property_permutation_invariant(name, u, d, seed):
     flat = _flat(seed, u, d)
@@ -64,8 +69,8 @@ def test_property_permutation_invariant(name, u, d, seed):
     np.testing.assert_allclose(permuted, base, rtol=1e-3, atol=1e-4)
 
 
-@given(u=st.integers(4, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6),
-       f=st.integers(0, 2))
+@given(u=worker_counts(4, 10), d=dims(2, 32), seed=seeds(),
+       f=byz_counts(2))
 @settings(max_examples=20, deadline=None)
 def test_property_krum_permutation_invariant(u, d, seed, f):
     """Krum scores permute with the workers; the selected aggregate is
@@ -88,8 +93,7 @@ def test_property_krum_permutation_invariant(u, d, seed, f):
 
 
 @pytest.mark.parametrize("name", sorted(COORDWISE))
-@given(u=st.integers(3, 10), d=st.integers(2, 64), seed=st.integers(0, 10**6),
-       c=st.floats(-5.0, 5.0))
+@given(u=worker_counts(), d=dims(), seed=seeds(), c=shifts())
 @settings(max_examples=20, deadline=None)
 def test_property_translation_equivariant(name, u, d, seed, c):
     flat = _flat(seed, u, d)
@@ -99,8 +103,7 @@ def test_property_translation_equivariant(name, u, d, seed, c):
                                rtol=1e-3, atol=1e-3 * (1.0 + abs(c)))
 
 
-@given(u=st.integers(4, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6),
-       c=st.floats(-5.0, 5.0))
+@given(u=worker_counts(4, 10), d=dims(2, 32), seed=seeds(), c=shifts())
 @settings(max_examples=20, deadline=None)
 def test_property_krum_translation_equivariant(u, d, seed, c):
     f = 1
@@ -117,8 +120,8 @@ def test_property_krum_translation_equivariant(u, d, seed, c):
 
 
 @pytest.mark.parametrize("name", ["median", "trimmed_mean"])
-@given(u=st.integers(3, 12), d=st.integers(2, 32), seed=st.integers(0, 10**6),
-       f=st.integers(1, 5), scale=st.floats(1e2, 1e6))
+@given(u=worker_counts(3, 12), d=dims(2, 32), seed=seeds(),
+       f=byz_counts(5, lo=1), scale=attack_scales())
 @settings(max_examples=25, deadline=None)
 def test_property_breakdown_box(name, u, d, seed, f, scale):
     """With 2f < U, coordinate-wise median and trimmed-mean(trim=f) stay
@@ -138,8 +141,8 @@ def test_property_breakdown_box(name, u, d, seed, f, scale):
     assert np.all(out >= lo - pad) and np.all(out <= hi + pad)
 
 
-@given(u=st.integers(4, 12), d=st.integers(2, 32), seed=st.integers(0, 10**6),
-       f=st.integers(1, 4), scale=st.floats(1e2, 1e4))
+@given(u=worker_counts(4, 12), d=dims(2, 32), seed=seeds(),
+       f=byz_counts(4, lo=1), scale=attack_scales(1e2, 1e4))
 @settings(max_examples=25, deadline=None)
 def test_property_krum_selects_honest_under_large_norm_attacker(u, d, seed, f,
                                                                 scale):
@@ -159,7 +162,7 @@ def test_property_krum_selects_honest_under_large_norm_attacker(u, d, seed, f,
 # ------------------------------------------------------- geometric median
 
 
-@given(u=st.integers(3, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6))
+@given(u=worker_counts(), d=dims(2, 32), seed=seeds())
 @settings(max_examples=20, deadline=None)
 def test_property_geometric_median_descends_from_mean(u, d, seed):
     """Weiszfeld is a descent method on sum_i ||g_i - z||, started at the
@@ -170,7 +173,7 @@ def test_property_geometric_median_descends_from_mean(u, d, seed):
     assert obj(z) <= obj(flat.mean(axis=0)) * (1 + 1e-5) + 1e-6
 
 
-@given(u=st.integers(3, 10), d=st.integers(2, 32), seed=st.integers(0, 10**6))
+@given(u=worker_counts(), d=dims(2, 32), seed=seeds())
 @settings(max_examples=20, deadline=None)
 def test_property_geometric_median_weiszfeld_fixed_point(u, d, seed):
     """Enough Weiszfeld iterations reach an approximate fixed point: one more
@@ -191,8 +194,8 @@ def test_property_geometric_median_weiszfeld_fixed_point(u, d, seed):
 # ------------------------------------------------------------- blocked Krum
 
 
-@given(u=st.integers(64, 150), d=st.integers(2, 24),
-       f=st.integers(0, 4), seed=st.integers(0, 10**6))
+@given(u=worker_counts(64, 150), d=dims(2, 24),
+       f=byz_counts(), seed=seeds())
 @settings(max_examples=15, deadline=None)
 def test_property_blocked_krum_selects_like_direct(u, d, f, seed):
     """flat_krum routes U >= KRUM_BLOCK_MIN_U through the blocked scores;

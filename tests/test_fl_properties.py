@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed "
-                    "(pip install -e '.[test]'; CI's tier-1 job has it)")
+from strategies import HYPOTHESIS_REASON
+
+pytest.importorskip("hypothesis", reason=HYPOTHESIS_REASON)
 from hypothesis import given, settings, strategies as st
 
 jax.config.update("jax_threefry_partitionable", True)
@@ -17,14 +18,11 @@ from repro.core import (
 from repro.core import power_control as PC
 from repro.core import standardize as S
 from repro.core.channel import sample_channel_gains
+from strategies import byz_counts, dims, seeds, worker_counts, \
+    worker_grad_tree as _grads
 
 
-def _grads(key, u, d):
-    g = jax.random.normal(key, (u, d)) * 0.5 + 0.1
-    return {"w": g}
-
-
-@given(u=st.integers(2, 12), d=st.integers(8, 200), seed=st.integers(0, 999))
+@given(u=worker_counts(2, 12), d=dims(8, 200), seed=seeds(999))
 @settings(max_examples=30, deadline=None)
 def test_property_ef_aggregate_is_exact_mean(u, d, seed):
     key = jax.random.PRNGKey(seed)
@@ -39,7 +37,7 @@ def test_property_ef_aggregate_is_exact_mean(u, d, seed):
                                rtol=1e-4, atol=1e-6)
 
 
-@given(u=st.integers(2, 12), seed=st.integers(0, 999),
+@given(u=worker_counts(2, 12), seed=seeds(999),
        pmax=st.floats(0.05, 8.0))
 @settings(max_examples=40, deadline=None)
 def test_property_power_constraints_hold(u, seed, pmax):
@@ -58,7 +56,7 @@ def test_property_power_constraints_hold(u, seed, pmax):
     assert b0 > 0 and np.isfinite(b0)
 
 
-@given(u=st.integers(3, 10), n=st.integers(0, 4), seed=st.integers(0, 99))
+@given(u=worker_counts(), n=byz_counts(), seed=seeds(99))
 @settings(max_examples=30, deadline=None)
 def test_property_attack_flips_make_aggregate_worse(u, n, seed):
     """The strongest attack never increases the aggregate's alignment with
@@ -85,7 +83,7 @@ def test_property_attack_flips_make_aggregate_worse(u, n, seed):
     assert align_atk <= align_clean + 1e-5
 
 
-@given(u=st.integers(2, 10), d=st.integers(16, 256), seed=st.integers(0, 99))
+@given(u=worker_counts(2, 10), d=dims(16, 256), seed=seeds(99))
 @settings(max_examples=30, deadline=None)
 def test_property_standardized_unit_stats(u, d, seed):
     """eq. (3): standardized symbols have ~zero mean, ~unit variance when a
@@ -99,7 +97,7 @@ def test_property_standardized_unit_stats(u, d, seed):
     assert abs(arr.var() - 1.0) < 1e-2
 
 
-@given(seed=st.integers(0, 200))
+@given(seed=seeds(200))
 @settings(max_examples=25, deadline=None)
 def test_property_aggregate_linear_in_grads(seed):
     """The received aggregate is linear in the payload gradients for fixed

@@ -1,0 +1,143 @@
+"""Hypothesis property suite for the adaptive-adversary attack axes.
+
+Two structural properties the plain contract tests (test_scenario_axes.py)
+cannot pin with single examples:
+
+  - COLLUDING is a rank-1 perturbation: whatever the channel draw, power
+    budget, or cohort composition, the difference between the attacked
+    aggregate and the honest aggregate lies on ONE shared direction — the
+    defining property of a colluding cohort (every member transmits the same
+    unit-RMS vector).
+  - OMNISCIENT dominates STRONGEST against plain FLOA-CI: knowing the
+    round's honest mean lets the cohort cancel it at least as effectively
+    as per-worker sign flips, so the attacked aggregate's alignment with
+    the honest mean is never better (up to fp slack) under OMNISCIENT.
+
+Both properties are checked on the branchless scenario-coefficient path the
+sweep engine compiles, with the directional term applied exactly as the
+engine applies it (post-combine injection).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from strategies import HYPOTHESIS_REASON
+
+pytest.importorskip("hypothesis", reason=HYPOTHESIS_REASON)
+from hypothesis import assume, given, settings
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core import attacks as A
+from repro.core import channel as CH
+from strategies import byz_counts, dims, seeds, worker_counts
+
+DIM_FLOOR = 8
+
+
+def _round(seed, u, d, n_atk):
+    """One round's raw materials: channel draw, honest per-worker gradients,
+    round stats, cohort mask."""
+    k = jax.random.PRNGKey(seed)
+    h = CH.rayleigh_gains(jax.random.fold_in(k, 0),
+                          jnp.ones((u,), jnp.float32))
+    g = jax.random.normal(jax.random.fold_in(k, 1), (u, d)) * 0.5 + 0.1
+    gbar = jnp.mean(g)
+    eps2 = jnp.maximum(jnp.var(g), 1e-20)
+    mask = jnp.arange(u) < n_atk
+    return h, g, gbar, eps2, mask
+
+
+def _honest_aggregate(h, g, mask, p_maxes, d):
+    """Noiseless CI-style aggregate of the HONEST workers at amplitude
+    sqrt(p/D) (the directional attacks leave honest coefficients alone, so
+    any fixed honest weighting exposes the perturbation)."""
+    w = jnp.where(mask, 0.0, jnp.sqrt(p_maxes / d) * h)
+    return jnp.einsum("u,ud->d", w, g)
+
+
+@given(u=worker_counts(4, 10), d=dims(DIM_FLOOR, 64), seed=seeds(),
+       n_atk=byz_counts(4, lo=1))
+@settings(max_examples=25, deadline=None)
+def test_property_colluding_perturbation_is_rank_one(u, d, seed, n_atk):
+    """For ANY two disjoint sub-cohorts of the colluding mask, the induced
+    perturbations are parallel: the cohort transmits one shared direction,
+    so varying WHO transmits only rescales the same vector."""
+    n_atk = min(n_atk, u - 1)
+    h, g, gbar, eps2, mask = _round(seed, u, d, n_atk)
+    p_maxes = jnp.ones((u,), jnp.float32)
+    dirn = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,), jnp.float32)
+    dirn = dirn / jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(dirn))), 1e-20)
+
+    def perturbation(cohort):
+        w = A.colluding_dir_weight(h, p_maxes, float(d), cohort, eps2)
+        return np.asarray(w * dirn, dtype=np.float64)
+
+    full = perturbation(mask)
+    # every single-member sub-cohort produces a PARALLEL perturbation
+    for n in range(n_atk):
+        solo = perturbation(jnp.arange(u) == n)
+        cross = np.outer(full, solo) - np.outer(solo, full)
+        scale = np.linalg.norm(full) * np.linalg.norm(solo) + 1e-12
+        assert np.abs(cross).max() <= 1e-5 * scale
+    # and the full cohort's weight is the sum of the member weights
+    np.testing.assert_allclose(
+        full, sum(perturbation(jnp.arange(u) == n) for n in range(n_atk)),
+        rtol=1e-5, atol=1e-7)
+
+
+@given(u=worker_counts(4, 10), d=dims(DIM_FLOOR, 64), seed=seeds(),
+       n_atk=byz_counts(3, lo=1))
+@settings(max_examples=20, deadline=None)
+def test_property_omniscient_no_better_aligned_than_strongest(u, d, seed,
+                                                              n_atk):
+    """Against plain FLOA (no screening), the OMNISCIENT cohort is at least
+    as damaging as STRONGEST in EXPECTATION: transmitting -mean(honest) at
+    the eq. 18 power spends the whole budget cancelling the honest signal,
+    where per-worker sign flips waste power on each attacker's gradient
+    noise around the mean.  Per-realization either can win (an attacker's
+    own gradient may overshoot the mean), so the property is on the
+    batch-averaged alignment with the honest mean — 64 i.i.d. rounds per
+    example."""
+    n_atk = min(n_atk, u - 1)
+    p_maxes = jnp.ones((u,), jnp.float32)
+    mask = jnp.arange(u) < n_atk
+
+    def one(k):
+        h = CH.rayleigh_gains(jax.random.fold_in(k, 0),
+                              jnp.ones((u,), jnp.float32))
+        g = jax.random.normal(jax.random.fold_in(k, 1), (u, d)) * 0.5 + 0.1
+        gbar = jnp.mean(g)
+        eps2 = jnp.maximum(jnp.var(g), 1e-20)
+        base = _honest_aggregate(h, g, mask, p_maxes, d)
+        hmean = jnp.mean(jnp.where(~mask[:, None], g, 0.0), axis=0) \
+            * (u / jnp.maximum(jnp.sum(~mask), 1))
+        phat = A.strongest_attack_amplitude(p_maxes, float(d), gbar, eps2)
+        sw = jnp.where(mask, -jnp.sqrt(eps2) * phat * h, 0.0)
+        agg_strong = base + jnp.einsum("u,ud->d", sw, g)
+        ow = A.omniscient_dir_weight(h, p_maxes, float(d), mask, gbar, eps2)
+        agg_omni = base + ow * hmean
+        return jnp.dot(agg_strong, hmean), jnp.dot(agg_omni, hmean)
+
+    ks = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(seed), i))(
+        jnp.arange(64))
+    align_strong, align_omni = jax.vmap(one)(ks)
+    ms, mo = float(jnp.mean(align_strong)), float(jnp.mean(align_omni))
+    assert mo <= ms + 1e-4 * (1.0 + abs(ms))
+
+
+@given(u=worker_counts(4, 10), d=dims(DIM_FLOOR, 64), seed=seeds(),
+       n_atk=byz_counts(3, lo=1))
+@settings(max_examples=25, deadline=None)
+def test_property_omniscient_always_damages_alignment(u, d, seed, n_atk):
+    """The omniscient perturbation's projection on the honest mean is always
+    negative — it can only subtract honest signal, never add."""
+    n_atk = min(n_atk, u - 1)
+    h, g, gbar, eps2, mask = _round(seed, u, d, n_atk)
+    p_maxes = jnp.ones((u,), jnp.float32)
+    hmean = jnp.mean(jnp.where(~mask[:, None], g, 0.0), axis=0) \
+        * (u / jnp.maximum(jnp.sum(~mask), 1))
+    ow = A.omniscient_dir_weight(h, p_maxes, float(d), mask, gbar, eps2)
+    proj = float(ow) * float(jnp.dot(hmean, hmean))
+    assert proj <= 0.0

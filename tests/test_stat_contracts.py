@@ -1,0 +1,203 @@
+"""Statistical contracts of the channel and attack models.
+
+The scenario axes only mean what the paper says they mean if the underlying
+distributions do: |h| must actually be Rayleigh(sigma) (its moments feed
+Thm 2/3 via eqs. 21/25), the Gauss-Markov chain must preserve that marginal
+at every lag while mixing at rate rho, and every attack code must satisfy
+the eq. 32 transmit-power accounting E||x_n||^2 <= p_n^max (with equality
+for the max-power attacks).  Empirical moments use fixed keys and generous
+sample sizes so the checks are deterministic, not flaky.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core import attacks as A
+from repro.core import channel as CH
+from repro.core.power_control import Policy, PowerConfig, transmit_amplitudes
+
+SIGMA = 1.3
+N = 200_000
+
+
+@pytest.fixture(scope="module")
+def abs_samples():
+    """[N] i.i.d. |h| draws through the canonical `rayleigh_gains` recipe."""
+    sig = jnp.full((N,), SIGMA, jnp.float32)
+    return np.asarray(CH.rayleigh_gains(jax.random.PRNGKey(0), sig))
+
+
+def test_rayleigh_mean_abs(abs_samples):
+    np.testing.assert_allclose(abs_samples.mean(), SIGMA * np.sqrt(np.pi / 2),
+                               rtol=5e-3)
+
+
+def test_rayleigh_mean_sq(abs_samples):
+    np.testing.assert_allclose((abs_samples ** 2).mean(), 2 * SIGMA**2,
+                               rtol=1e-2)
+
+
+def test_rayleigh_sq_exponential_tail(abs_samples):
+    """|h|^2 ~ Exp(mean 2 sigma^2): survival P(|h|^2 > t) = exp(-t/2sigma^2)."""
+    sq = abs_samples ** 2
+    mean = 2 * SIGMA**2
+    for t in (0.5, 1.0, 2.0, 4.0):
+        emp = np.mean(sq > t * mean)
+        np.testing.assert_allclose(emp, np.exp(-t), rtol=0.05, atol=2e-3)
+
+
+def test_expected_gain_helpers_match_moments():
+    cfg = CH.ChannelConfig(num_workers=3, sigma=(0.5, 1.0, 2.0))
+    np.testing.assert_allclose(CH.expected_abs_gain(cfg),
+                               np.array([0.5, 1.0, 2.0]) * np.sqrt(np.pi / 2),
+                               rtol=1e-6)
+    np.testing.assert_allclose(CH.expected_sq_gain(cfg),
+                               2 * np.array([0.5, 1.0, 2.0]) ** 2, rtol=1e-6)
+
+
+def test_complex_init_marginal_is_rayleigh():
+    """complex_gain_abs(complex_gain_init) has the same Rayleigh moments as
+    the i.i.d. draw — the Markov chain starts in its stationary law."""
+    sig = jnp.full((N,), SIGMA, jnp.float32)
+    h0 = CH.complex_gain_init(jax.random.PRNGKey(1), sig)
+    ab = np.asarray(CH.complex_gain_abs(h0))
+    np.testing.assert_allclose(ab.mean(), SIGMA * np.sqrt(np.pi / 2),
+                               rtol=5e-3)
+    np.testing.assert_allclose((ab ** 2).mean(), 2 * SIGMA**2, rtol=1e-2)
+
+
+def test_gauss_markov_preserves_marginal_and_mixes_at_rho():
+    """After T steps at rho=0.7 the marginal is still Rayleigh(sigma) and the
+    lag-1 autocorrelation of each complex component is rho."""
+    rho, steps = 0.7, 6
+    sig = jnp.full((N,), SIGMA, jnp.float32)
+    key = jax.random.PRNGKey(2)
+    h = CH.complex_gain_init(key, sig)
+    for t in range(steps):
+        w = CH.complex_gain_init(jax.random.fold_in(key, t + 1), sig)
+        prev, h = h, CH.gauss_markov_step(h, w, rho)
+    ab = np.asarray(CH.complex_gain_abs(h))
+    np.testing.assert_allclose(ab.mean(), SIGMA * np.sqrt(np.pi / 2),
+                               rtol=5e-3)
+    np.testing.assert_allclose((ab ** 2).mean(), 2 * SIGMA**2, rtol=1e-2)
+    p, c = np.asarray(prev), np.asarray(h)
+    for comp in (0, 1):
+        corr = np.corrcoef(p[:, comp], c[:, comp])[0, 1]
+        np.testing.assert_allclose(corr, rho, atol=0.01)
+
+
+def test_gauss_markov_rho0_is_innovation():
+    """rho=0 returns the innovation bitwise — the i.i.d. degenerate."""
+    sig = jnp.full((8,), SIGMA, jnp.float32)
+    h = CH.complex_gain_init(jax.random.PRNGKey(3), sig)
+    w = CH.complex_gain_init(jax.random.PRNGKey(4), sig)
+    np.testing.assert_array_equal(np.asarray(CH.gauss_markov_step(h, w, 0.0)),
+                                  np.asarray(w))
+
+
+# ------------------------------------------------------- eq. 32 accounting
+
+U, DIM = 4, 41
+
+
+def _round_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    h = CH.rayleigh_gains(k, jnp.ones((U,), jnp.float32))
+    gbar, eps2 = jnp.float32(0.13), jnp.float32(0.7)
+    return h, gbar, eps2
+
+
+def test_strongest_amplitude_meets_power_budget_exactly():
+    """eq. 18/32: phat^2 * D * (gbar^2 + eps^2) == p_max — the strongest
+    attacker spends exactly its budget under the accounting E||g||^2 =
+    D (gbar^2 + eps^2)."""
+    _, gbar, eps2 = _round_state()
+    p_max = jnp.array([1.0, 2.5, 0.3, 1.0], jnp.float32)
+    phat = A.strongest_attack_amplitude(p_max, DIM, gbar, eps2)
+    np.testing.assert_allclose(phat**2 * DIM * (gbar**2 + eps2), p_max,
+                               rtol=1e-6)
+
+
+def test_colluding_transmit_power_is_p_max():
+    """Each colluding member transmits sqrt(p_max/D) * d with d unit-RMS:
+    ||x||^2 = (p_max/D) * ||d||^2 = p_max exactly (eq. 32 with equality).
+    Uses the same unit-RMS normalization recipe as the sweep engine."""
+    d = jax.random.normal(jax.random.PRNGKey(5), (DIM,), jnp.float32)
+    d = d / jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(d))), 1e-20)
+    p_max = 1.7
+    x = jnp.sqrt(p_max / DIM) * d
+    np.testing.assert_allclose(jnp.sum(x**2), p_max, rtol=1e-5)
+
+
+def test_colluding_dir_weight_formula():
+    """weight = eps * sum_B |h_n| sqrt(p_n/D), attackers only."""
+    h, _, eps2 = _round_state()
+    p_max = jnp.full((U,), 1.5, jnp.float32)
+    mask = jnp.array([True, True, False, False])
+    w = A.colluding_dir_weight(h, p_max, float(DIM), mask, eps2)
+    expect = np.sqrt(float(eps2)) * np.sum(
+        np.asarray(mask) * np.sqrt(1.5 / DIM) * np.asarray(h))
+    np.testing.assert_allclose(w, expect, rtol=1e-6)
+
+
+def test_omniscient_weight_is_summed_strongest_coefficient():
+    """The omniscient cohort's received weight == the strongest attack's
+    per-worker coefficient -eps phat |h| summed over the cohort; a cohort of
+    one therefore reproduces the STRONGEST lane coefficient exactly."""
+    h, gbar, eps2 = _round_state()
+    p_max = jnp.ones((U,), jnp.float32)
+    phat = A.strongest_attack_amplitude(p_max, float(DIM), gbar, eps2)
+    for n in (1, 2, 3):
+        mask = jnp.arange(U) < n
+        w = A.omniscient_dir_weight(h, p_max, float(DIM), mask, gbar, eps2)
+        expect = -np.sqrt(float(eps2)) * np.sum(
+            np.asarray(phat * h)[:n])
+        np.testing.assert_allclose(w, expect, rtol=1e-6)
+
+
+def test_gaussian_jam_power_accounting():
+    """GAUSSIAN attackers transmit white noise at per-entry std sqrt(p/D),
+    so E||x||^2 = p_max; the received jam std aggregates |h|-scaled copies:
+    jam_std^2 = eps^2 sum_B (p/D) |h|^2."""
+    h, _, eps2 = _round_state()
+    p_max = jnp.full((U,), 2.0, jnp.float32)
+    mask = jnp.array([True, False, True, False])
+    std = A.jam_std_arrays(h, p_max, float(DIM), mask, eps2)
+    expect = np.sqrt(float(eps2) * np.sum(
+        np.asarray(mask) * (2.0 / DIM) * np.asarray(h) ** 2))
+    np.testing.assert_allclose(std, expect, rtol=1e-6)
+
+
+def test_honest_protocol_power_within_budget():
+    """Honest CI/BEV transmit amplitudes respect b_i^2 * D <= p_i^max (the
+    standardized gradient has unit per-entry second moment)."""
+    h, _, _ = _round_state()
+    for policy in (Policy.CI, Policy.BEV):
+        power = PowerConfig(num_workers=U, dim=DIM, p_max=1.0, policy=policy)
+        chan = CH.ChannelConfig(num_workers=U, sigma=1.0)
+        b = transmit_amplitudes(h, power, chan)
+        assert np.all(np.asarray(b) >= 0.0)
+        assert np.all(np.asarray(b**2 * DIM) <= 1.0 + 1e-6), policy
+
+
+@pytest.mark.parametrize("attack", [A.AttackType.GAUSSIAN,
+                                    A.AttackType.COLLUDING,
+                                    A.AttackType.OMNISCIENT])
+def test_no_gradient_payload_for_jamming_and_directional(attack):
+    """GAUSSIAN/COLLUDING/OMNISCIENT carry no per-worker gradient payload in
+    `signed_coefficients` (s=0 on the cohort) but DO incur the PS's
+    de-standardization bias (they never standardized)."""
+    h, gbar, eps2 = _round_state()
+    power = PowerConfig(num_workers=U, dim=DIM, p_max=1.0, policy=Policy.BEV)
+    chan = CH.ChannelConfig(num_workers=U, sigma=1.0)
+    cfg = A.AttackConfig(attack=attack, byzantine_mask=A.first_n_mask(U, 2))
+    s, bias = A.signed_coefficients(h, power, chan, cfg, gbar, eps2)
+    honest_s, _ = A.signed_coefficients(
+        h, power, chan, A.AttackConfig(), gbar, eps2)
+    np.testing.assert_array_equal(np.asarray(s[:2]), 0.0)
+    np.testing.assert_array_equal(np.asarray(s[2:]), np.asarray(honest_s[2:]))
+    np.testing.assert_allclose(bias, np.sum(np.asarray(honest_s[:2])),
+                               rtol=1e-6)

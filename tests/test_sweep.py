@@ -15,8 +15,10 @@ from repro.core.attacks import AttackConfig, AttackType, first_n_mask
 from repro.core.channel import ChannelConfig, sample_channel_gains
 from repro.core.power_control import Policy, PowerConfig, transmit_amplitudes
 from repro.data import FederatedSampler
-from repro.fl import FLTrainer, ScenarioCase, SweepEngine, SweepSpec
+from repro.fl import (ExecutionPlan, FLTrainer, ScenarioCase, SweepEngine,
+                      SweepSpec)
 from repro.kernels import ops
+from strategies import regression_batches, toy_shards
 
 U = 4
 
@@ -103,7 +105,9 @@ def test_scenario_coefficients_match_dataclass(policy, attack, n_atk):
                                   np.asarray(h))
     gbar, eps2 = jnp.float32(0.02), jnp.float32(1.7)
     assert float(sp.dim) == cfg.power.dim  # power-accounting D, not model size
-    s, bias_w, jam_std, noise_std = SC.scenario_coefficients(h, sp, gbar, eps2)
+    s, bias_w, jam_std, noise_std, dir_w = SC.scenario_coefficients(
+        h, sp, gbar, eps2)
+    assert float(dir_w) == 0.0  # no directional attack in this grid
 
     if policy == Policy.EF:
         sign = (jnp.where(cfg.attack.mask(), -1.0, 1.0)
@@ -162,9 +166,7 @@ def _tiny_problem(rounds=6, batch=8, d_in=6, d_h=5):
     params = {"w1": jax.random.normal(k, (d_in, d_h)),
               "w2": jax.random.normal(k, (d_h, 1))}
     dim = sum(p.size for p in jax.tree_util.tree_leaves(params))
-    rng = np.random.default_rng(0)
-    batches = {"x": rng.normal(size=(rounds, U * batch, d_in)).astype(np.float32),
-               "y": rng.normal(size=(rounds, U * batch, 1)).astype(np.float32)}
+    batches = regression_batches(0, rounds, U * batch, d_in)
     return loss, params, dim, batches
 
 
@@ -305,10 +307,12 @@ def test_flat_state_strict_matches_tree_state_bitwise():
     loss, params, dim, batches = _tiny_problem(rounds=7)
     spec = SweepSpec.build(_grid_cases(dim))
     eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
-    tree = SweepEngine(loss, spec, eval_fn=eval_fn, flat_state=False,
-                       strict_numerics=True).run(params, batches)
-    flat = SweepEngine(loss, spec, eval_fn=eval_fn,
-                       strict_numerics=True).run(params, batches)
+    tree = SweepEngine(
+        loss, spec, eval_fn=eval_fn, plan=ExecutionPlan(
+            flat_state=False, strict_numerics=True)).run(params, batches)
+    flat = SweepEngine(
+        loss, spec, eval_fn=eval_fn,
+        plan=ExecutionPlan(strict_numerics=True)).run(params, batches)
     np.testing.assert_array_equal(tree.loss, flat.loss)
     np.testing.assert_array_equal(tree.grad_norm, flat.grad_norm)
     np.testing.assert_array_equal(
@@ -324,7 +328,8 @@ def test_flat_state_default_matches_tree_state():
     gradient producer, so it only agrees with the tree path to fp rounding."""
     loss, params, dim, batches = _tiny_problem(rounds=7)
     spec = SweepSpec.build(_grid_cases(dim))
-    tree = SweepEngine(loss, spec, flat_state=False).run(params, batches)
+    tree = SweepEngine(
+        loss, spec, plan=ExecutionPlan(flat_state=False)).run(params, batches)
     flat = SweepEngine(loss, spec).run(params, batches)
     np.testing.assert_allclose(tree.loss, flat.loss, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(tree.grad_norm, flat.grad_norm,
@@ -448,9 +453,7 @@ def test_sweep_metrics_and_logs_schedule():
 
 
 def test_stack_rounds_replays_sampler_stream():
-    rng = np.random.default_rng(0)
-    shards = {i: (rng.normal(size=(20, 3)).astype(np.float32),
-                  rng.integers(0, 4, size=20)) for i in range(U)}
+    shards = toy_shards(0, U)
     a = FederatedSampler(shards, batch_per_worker=4, seed=11)
     b = FederatedSampler(shards, batch_per_worker=4, seed=11)
     stacked = a.stack_rounds(3)

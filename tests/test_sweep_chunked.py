@@ -1,6 +1,6 @@
 """Scan-of-chunks sweep execution: chunked == monolithic.
 
-`SweepEngine(chunk_rounds=C)` splits the one R-round scan into an outer
+`ExecutionPlan(chunk_rounds=C)` splits the one R-round scan into an outer
 Python loop over ceil(R/C) inner scans, threading the (state, keys,
 absolute-round-offset) carry through the chunk boundaries;
 `async_staging=True` additionally double-buffers the per-chunk host->device
@@ -26,9 +26,10 @@ import pytest
 jax.config.update("jax_threefry_partitionable", True)
 
 from repro.data import FederatedSampler, iter_chunk_blocks
-from repro.fl import SweepEngine, SweepSpec
+from repro.fl import ExecutionPlan, SweepEngine, SweepSpec
 from repro.launch.mesh import make_sweep_mesh
 import sweep_testlib as LIB
+from strategies import toy_shards
 
 U = LIB.U
 
@@ -93,9 +94,7 @@ def test_iter_chunk_blocks_partitions_exactly():
 def test_iter_round_chunks_replays_stack_rounds():
     """FederatedSampler.iter_round_chunks draws the same stream as one big
     stack_rounds call (the chunked engine's incremental host pipeline)."""
-    rng = np.random.default_rng(0)
-    shards = {i: (rng.normal(size=(20, 3)).astype(np.float32),
-                  rng.integers(0, 4, size=20)) for i in range(U)}
+    shards = toy_shards(0, U)
     stacked = FederatedSampler(shards, batch_per_worker=4, seed=7).stack_rounds(7)
     blocks = list(FederatedSampler(shards, batch_per_worker=4,
                                    seed=7).iter_round_chunks(7, 3))
@@ -118,8 +117,9 @@ def test_chunked_matches_monolithic_flat(chunk):
     eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
     mono = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=2).run(
         params, batches)
-    ch = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=2,
-                     chunk_rounds=chunk).run(params, batches)
+    ch = SweepEngine(
+        loss, spec, eval_fn=eval_fn, eval_every=2,
+        plan=ExecutionPlan(chunk_rounds=chunk)).run(params, batches)
     _assert_results_match(ch, mono)
 
 
@@ -127,8 +127,10 @@ def test_chunked_matches_monolithic_tree_state():
     """Tree-state path: the chunk carry is the stacked params pytree."""
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 5))
-    mono = SweepEngine(loss, spec, flat_state=False).run(params, batches)
-    ch = SweepEngine(loss, spec, flat_state=False, chunk_rounds=3).run(
+    mono = SweepEngine(
+        loss, spec, plan=ExecutionPlan(flat_state=False)).run(params, batches)
+    ch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(flat_state=False, chunk_rounds=3)).run(
         params, batches)
     _assert_results_match(ch, mono)
 
@@ -139,10 +141,13 @@ def test_chunked_strict_numerics_bitwise(flat_state):
     to the monolithic scan on both state paths (R % C != 0)."""
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 5))
-    mono = SweepEngine(loss, spec, flat_state=flat_state,
-                       strict_numerics=True).run(params, batches)
-    ch = SweepEngine(loss, spec, flat_state=flat_state, strict_numerics=True,
-                     chunk_rounds=3).run(params, batches)
+    mono = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            flat_state=flat_state, strict_numerics=True)).run(params, batches)
+    ch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            flat_state=flat_state, strict_numerics=True,
+            chunk_rounds=3)).run(params, batches)
     _assert_results_match(ch, mono, bitwise=True)
 
 
@@ -153,9 +158,12 @@ def test_chunked_rng_continuity_with_custom_keys():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 4))
     keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(4) + 42)
-    mono = SweepEngine(loss, spec, strict_numerics=True).run(
+    mono = SweepEngine(
+        loss, spec, plan=ExecutionPlan(strict_numerics=True)).run(
         params, batches, keys=keys)
-    ch = SweepEngine(loss, spec, strict_numerics=True, chunk_rounds=2).run(
+    ch = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(strict_numerics=True, chunk_rounds=2)).run(
         params, batches, keys=keys)
     _assert_results_match(ch, mono, bitwise=True)
 
@@ -165,9 +173,11 @@ def test_async_staging_bit_identical_to_sync():
     operands, so bit-identical results."""
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 4))
-    sync = SweepEngine(loss, spec, chunk_rounds=3).run(params, batches)
-    asy = SweepEngine(loss, spec, chunk_rounds=3,
-                      async_staging=True).run(params, batches)
+    sync = SweepEngine(
+        loss, spec, plan=ExecutionPlan(chunk_rounds=3)).run(params, batches)
+    asy = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            chunk_rounds=3, async_staging=True)).run(params, batches)
     _assert_results_match(asy, sync, bitwise=True)
 
 
@@ -178,10 +188,12 @@ def test_chunked_grouped_dispatch_mixed_grid():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_defense_grid_cases(dim, 8))
     mono = SweepEngine(loss, spec).run(params, batches)
-    ch = SweepEngine(loss, spec, chunk_rounds=3).run(params, batches)
+    ch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(chunk_rounds=3)).run(params, batches)
     _assert_results_match(ch, mono)
-    switch = SweepEngine(loss, spec, grouped_dispatch=False,
-                         chunk_rounds=3).run(params, batches)
+    switch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            grouped_dispatch=False, chunk_rounds=3)).run(params, batches)
     _assert_results_match(switch, mono)
 
 
@@ -191,8 +203,9 @@ def test_chunked_eval_schedule_anchored_to_absolute_round():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 3))
     eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
-    ch = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=3,
-                     chunk_rounds=2).run(params, batches)
+    ch = SweepEngine(
+        loss, spec, eval_fn=eval_fn, eval_every=3,
+        plan=ExecutionPlan(chunk_rounds=2)).run(params, batches)
     acc = np.asarray(ch.metrics["accuracy"])
     due = [0, 3, 6]  # t % 3 == 0 plus the final round (6 == R-1 here)
     assert not np.isnan(acc[:, due]).any()
@@ -208,7 +221,8 @@ def test_chunked_zero_rounds_matches_monolithic():
     spec = SweepSpec.build(_grid_cases(dim, 2))
     eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
     mono = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
-    ch = SweepEngine(loss, spec, eval_fn=eval_fn, chunk_rounds=3).run(
+    ch = SweepEngine(
+        loss, spec, eval_fn=eval_fn, plan=ExecutionPlan(chunk_rounds=3)).run(
         params, batches)
     assert ch.loss.shape == mono.loss.shape == (2, 0)
     for cleaf, mleaf in zip(jax.tree_util.tree_leaves(ch.params),
@@ -220,9 +234,11 @@ def test_chunk_knob_validation():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 2))
     with pytest.raises(ValueError):
-        SweepEngine(loss, spec, chunk_rounds=0)
+        SweepEngine(loss, spec, plan=ExecutionPlan(chunk_rounds=0))
     with pytest.raises(ValueError):
-        SweepEngine(loss, spec, async_staging=True)  # needs chunk_rounds
+        SweepEngine(
+            loss, spec,
+            plan=ExecutionPlan(async_staging=True))  # needs chunk_rounds
 
 
 # ------------------------------------------------------------------- mesh
@@ -235,8 +251,10 @@ def test_single_device_mesh_chunked_matches_unsharded_monolithic():
     spec = SweepSpec.build(_grid_cases(dim, 6))
     eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
     mono = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
-    ch = SweepEngine(loss, spec, eval_fn=eval_fn, mesh=make_sweep_mesh(1),
-                     chunk_rounds=3, async_staging=True).run(params, batches)
+    ch = SweepEngine(
+        loss, spec, eval_fn=eval_fn, plan=ExecutionPlan(
+            mesh=make_sweep_mesh(1), chunk_rounds=3,
+            async_staging=True)).run(params, batches)
     _assert_results_match(ch, mono)
 
 
@@ -248,8 +266,10 @@ def test_sharded_chunked_matches_unsharded_monolithic():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 13))
     mono = SweepEngine(loss, spec).run(params, batches)
-    ch = SweepEngine(loss, spec, mesh=make_sweep_mesh(8), chunk_rounds=3,
-                     async_staging=True).run(params, batches)
+    ch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            mesh=make_sweep_mesh(8), chunk_rounds=3,
+            async_staging=True)).run(params, batches)
     assert ch.loss.shape[0] == 13  # ghosts dropped
     _assert_results_match(ch, mono)
 
@@ -263,15 +283,20 @@ def test_sharded_chunked_grouped_defense_grid():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_defense_grid_cases(dim, 13))
     mono = SweepEngine(loss, spec).run(params, batches)
-    eng = SweepEngine(loss, spec, mesh=make_sweep_mesh(8), chunk_rounds=3)
+    eng = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(mesh=make_sweep_mesh(8), chunk_rounds=3))
     assert eng._groups is not None and eng._groups.exec_lanes % 8 == 0
     ch = eng.run(params, batches)
     assert ch.loss.shape[0] == 13
     _assert_results_match(ch, mono)
 
-    sh_mono = SweepEngine(loss, spec, mesh=make_sweep_mesh(8),
-                          strict_numerics=True).run(params, batches)
-    sh_ch = SweepEngine(loss, spec, mesh=make_sweep_mesh(8),
-                        strict_numerics=True, chunk_rounds=2,
-                        async_staging=True).run(params, batches)
+    sh_mono = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            mesh=make_sweep_mesh(8),
+            strict_numerics=True)).run(params, batches)
+    sh_ch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            mesh=make_sweep_mesh(8), strict_numerics=True, chunk_rounds=2,
+            async_staging=True)).run(params, batches)
     _assert_results_match(sh_ch, sh_mono, bitwise=True)

@@ -1,7 +1,7 @@
 """Mesh-sharded sweep engine: sharded lanes == unsharded lanes.
 
-The lane axis is embarrassingly parallel, so `SweepEngine(mesh=...)` shard_maps
-the flat-state scan over a 1-D ("data",) mesh.  These tests pin the contract:
+The lane axis is embarrassingly parallel, so a plan with `mesh=...`
+shard_maps the flat-state scan over a 1-D ("data",) mesh.  These tests pin the contract:
 every real lane's trajectory matches the unsharded engine (acceptance:
 allclose rtol=1e-6), including when S is not a multiple of the device count
 and ghost lanes are padded in and dropped.
@@ -21,7 +21,7 @@ import pytest
 
 jax.config.update("jax_threefry_partitionable", True)
 
-from repro.fl import FLTrainer, SweepEngine, SweepSpec
+from repro.fl import ExecutionPlan, FLTrainer, SweepEngine, SweepSpec
 from repro.launch.mesh import make_sweep_mesh
 from sweep_testlib import (
     defense_grid_cases as _defense_grid_cases,
@@ -58,8 +58,9 @@ def test_single_device_mesh_matches_unsharded():
     spec = SweepSpec.build(_grid_cases(dim, 6))
     eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
     un = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
-    sh = SweepEngine(loss, spec, eval_fn=eval_fn,
-                     mesh=make_sweep_mesh(1)).run(params, batches)
+    sh = SweepEngine(
+        loss, spec, eval_fn=eval_fn,
+        plan=ExecutionPlan(mesh=make_sweep_mesh(1))).run(params, batches)
     _assert_lanes_match(sh, un)
 
 
@@ -70,8 +71,9 @@ def test_sharded_matches_unsharded_grid16():
     spec = SweepSpec.build(_grid_cases(dim, 16))
     eval_fn = lambda p: {"accuracy": jnp.mean(p["w1"]) * 0 + 0.5}
     un = SweepEngine(loss, spec, eval_fn=eval_fn).run(params, batches)
-    sh = SweepEngine(loss, spec, eval_fn=eval_fn,
-                     mesh=make_sweep_mesh(8)).run(params, batches)
+    sh = SweepEngine(
+        loss, spec, eval_fn=eval_fn,
+        plan=ExecutionPlan(mesh=make_sweep_mesh(8))).run(params, batches)
     _assert_lanes_match(sh, un)
 
 
@@ -82,7 +84,7 @@ def test_sharded_padded_s13_matches_unsharded():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 13))
     un = SweepEngine(loss, spec).run(params, batches)
-    eng = SweepEngine(loss, spec, mesh=make_sweep_mesh(8))
+    eng = SweepEngine(loss, spec, plan=ExecutionPlan(mesh=make_sweep_mesh(8)))
     assert eng._pad == 3
     sh = eng.run(params, batches)
     assert sh.loss.shape[0] == 13  # ghosts dropped
@@ -95,10 +97,12 @@ def test_sharded_strict_and_custom_keys():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 8))
     keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(8) + 42)
-    un = SweepEngine(loss, spec, strict_numerics=True).run(
+    un = SweepEngine(loss, spec, plan=ExecutionPlan(strict_numerics=True)).run(
         params, batches, keys=keys)
-    sh = SweepEngine(loss, spec, strict_numerics=True,
-                     mesh=make_sweep_mesh(8)).run(params, batches, keys=keys)
+    sh = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            strict_numerics=True,
+            mesh=make_sweep_mesh(8))).run(params, batches, keys=keys)
     _assert_lanes_match(sh, un)
 
 
@@ -108,7 +112,9 @@ def test_single_device_mesh_defense_lanes_match_unsharded():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_defense_grid_cases(dim, 8))
     un = SweepEngine(loss, spec).run(params, batches)
-    sh = SweepEngine(loss, spec, mesh=make_sweep_mesh(1)).run(params, batches)
+    sh = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(mesh=make_sweep_mesh(1))).run(params, batches)
     _assert_lanes_match(sh, un)
 
 
@@ -119,7 +125,9 @@ def test_sharded_defense_lanes_match_unsharded():
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_defense_grid_cases(dim, 16))
     un = SweepEngine(loss, spec).run(params, batches)
-    sh = SweepEngine(loss, spec, mesh=make_sweep_mesh(8)).run(params, batches)
+    sh = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(mesh=make_sweep_mesh(8))).run(params, batches)
     _assert_lanes_match(sh, un)
 
 
@@ -131,7 +139,9 @@ def test_sharded_defense_lane_matches_run_scan_baseline():
     tests/test_defense_lanes.py."""
     loss, params, dim, batches = _tiny_problem()
     cases = _defense_grid_cases(dim, 13)
-    eng = SweepEngine(loss, SweepSpec.build(cases), mesh=make_sweep_mesh(8))
+    eng = SweepEngine(
+        loss, SweepSpec.build(cases),
+        plan=ExecutionPlan(mesh=make_sweep_mesh(8)))
     # Grouped dispatch pads each defense-code group to a multiple of the
     # device count (8), so the ghost count is per-group, not global.
     assert eng._groups is not None and eng._groups.shards == 8
@@ -163,17 +173,21 @@ def test_sharded_grouped_matches_switch_s13():
     to the unsharded GROUPED engine under strict_numerics."""
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_defense_grid_cases(dim, 13))
-    eng = SweepEngine(loss, spec, mesh=make_sweep_mesh(8))
+    eng = SweepEngine(loss, spec, plan=ExecutionPlan(mesh=make_sweep_mesh(8)))
     assert eng._groups is not None and eng._groups.exec_lanes % 8 == 0
     sh = eng.run(params, batches)
     assert sh.loss.shape[0] == 13  # per-group ghosts dropped
-    switch = SweepEngine(loss, spec, grouped_dispatch=False).run(
+    switch = SweepEngine(
+        loss, spec, plan=ExecutionPlan(grouped_dispatch=False)).run(
         params, batches)
     _assert_lanes_match(sh, switch)
 
-    sh_strict = SweepEngine(loss, spec, mesh=make_sweep_mesh(8),
-                            strict_numerics=True).run(params, batches)
-    un_strict = SweepEngine(loss, spec, strict_numerics=True).run(
+    sh_strict = SweepEngine(
+        loss, spec, plan=ExecutionPlan(
+            mesh=make_sweep_mesh(8),
+            strict_numerics=True)).run(params, batches)
+    un_strict = SweepEngine(
+        loss, spec, plan=ExecutionPlan(strict_numerics=True)).run(
         params, batches)
     np.testing.assert_array_equal(sh_strict.loss, un_strict.loss)
     np.testing.assert_array_equal(sh_strict.grad_norm, un_strict.grad_norm)
@@ -184,13 +198,19 @@ def test_single_device_mesh_grouped_matches_switch():
     switch-dispatch engine.  Runs everywhere (tier-1)."""
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_defense_grid_cases(dim, 8))
-    sh = SweepEngine(loss, spec, mesh=make_sweep_mesh(1)).run(params, batches)
-    sw = SweepEngine(loss, spec, grouped_dispatch=False).run(params, batches)
+    sh = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(mesh=make_sweep_mesh(1))).run(params, batches)
+    sw = SweepEngine(
+        loss, spec,
+        plan=ExecutionPlan(grouped_dispatch=False)).run(params, batches)
     _assert_lanes_match(sh, sw)
 
 
 def test_mesh_requires_flat_state():
+    """Deliberately exercises the deprecated per-knob kwargs: the legacy
+    spelling must still warn AND route through plan validation."""
     loss, params, dim, batches = _tiny_problem()
     spec = SweepSpec.build(_grid_cases(dim, 2))
-    with pytest.raises(AssertionError):
+    with pytest.warns(DeprecationWarning), pytest.raises(AssertionError):
         SweepEngine(loss, spec, flat_state=False, mesh=make_sweep_mesh(1))

@@ -44,6 +44,7 @@ from repro.core import (
 )
 from repro.fl import ExecutionPlan, ScenarioCase, SweepEngine, SweepSpec
 from repro.launch.mesh import make_sweep_mesh
+from strategies import regression_batches
 
 needs_8_devices = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -62,10 +63,7 @@ def worker_problem(u, rounds=3, batch=2, d_in=6, d_h=5):
     params = {"w1": jax.random.normal(k, (d_in, d_h)),
               "w2": jax.random.normal(k, (d_h, 1))}
     dim = d_in * d_h + d_h * 1
-    rng = np.random.default_rng(u)
-    batches = {
-        "x": rng.normal(size=(rounds, u * batch, d_in)).astype(np.float32),
-        "y": rng.normal(size=(rounds, u * batch, 1)).astype(np.float32)}
+    batches = regression_batches(u, rounds, u * batch, d_in)
     return loss, params, dim, batches
 
 
