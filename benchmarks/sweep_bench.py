@@ -73,6 +73,19 @@ and the all-axes mixed spec — recorded under the JSON's "scenario_axes" key so
 the cross-axis trace tax is tracked (each axis is a trace-time decision
 for the whole sweep).
 
+--resume benches the preemption-safety machinery: the checkpointed chunked
+engine (ExecutionPlan(checkpoint_dir=...) committing the full resume carry
+at every chunk boundary) A/B'd against the plain chunked engine on the same
+grid — the warm-rows ratio is the checkpoint tax — plus the wall time of a
+`run(resume=True)` restoring off the latest committed boundary, and a
+persistent-compilation-cache warm-restart pair: two fresh subprocesses run
+the same tiny sweep against one $REPRO_COMPILATION_CACHE directory, the
+first populating it cold and the second restarting warm (the
+cache-hit path a resumed fleet takes).  Recorded under the JSON's "resume"
+key; the perf gate checks the chunked/chunked_ckpt warm rows shape-aware
+(lanes/rounds/chunk_rounds/dim must match the baseline, else skipped) and
+never gates the subprocess cache timings (they are machine-noise bound).
+
 --workers benches the worker-population scaling series: the mixed-defense
 worker grid (analog FLOA + median / trimmed-mean / Krum lanes) at each U in
 --workers-series (default 10,1000,10000) on a deliberately tiny MLP, both
@@ -93,6 +106,7 @@ the defense hot path fail the build instead of landing.
   PYTHONPATH=src:. python benchmarks/sweep_bench.py [--rounds R] [--scenarios S]
       [--sharded] [--reps N] [--skip-looped] [--defenses]
       [--defense-rounds R] [--defense-scenarios S] [--chunk-rounds C]
+      [--resume] [--resume-rounds R] [--resume-lanes S]
       [--out BENCH_sweep.json]
       [--check-against BENCH_sweep.json] [--tolerance 0.5]
 
@@ -104,6 +118,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -381,6 +399,129 @@ def bench_workers(series, rounds: int, reps: int) -> dict:
     return out
 
 
+_CACHE_CHILD = r"""
+import sys, time
+import jax, jax.numpy as jnp, numpy as np
+from repro import setup_compilation_cache
+setup_compilation_cache(sys.argv[1], min_compile_time_secs=0)
+from repro.core import (AttackConfig, AttackType, ChannelConfig, FLOAConfig,
+                        PowerConfig, first_n_mask)
+from repro.fl import ScenarioCase, SweepEngine, SweepSpec
+
+d_in, d_h = 8, 4
+dim = d_in * d_h + d_h
+
+def loss(params, b):
+    pred = jax.nn.relu(b["x"] @ params["w1"]) @ params["w2"]
+    return jnp.mean((pred - b["y"]) ** 2)
+
+k = jax.random.PRNGKey(0)
+params = {"w1": jax.random.normal(k, (d_in, d_h)),
+          "w2": jax.random.normal(k, (d_h, 1))}
+u, rounds = 4, 4
+rng = np.random.default_rng(0)
+batches = {"x": rng.normal(size=(rounds, u, d_in)).astype(np.float32),
+           "y": rng.normal(size=(rounds, u, 1)).astype(np.float32)}
+cases = [ScenarioCase(
+    f"lane{i}",
+    FLOAConfig(channel=ChannelConfig(num_workers=u, sigma=1.0,
+                                     noise_std=0.05),
+               power=PowerConfig(num_workers=u, dim=dim, p_max=1.0),
+               attack=AttackConfig(
+                   attack=AttackType.STRONGEST if i % 2 else AttackType.NONE,
+                   byzantine_mask=first_n_mask(u, i % 2))),
+    0.05, seed=100 + i) for i in range(4)]
+t0 = time.perf_counter()
+SweepEngine(loss, SweepSpec.build(cases)).run(params, batches)
+print(f"SWEEP_ELAPSED {time.perf_counter() - t0:.4f}")
+"""
+
+
+def bench_resume(mc, shards, params, rounds: int, scenarios: int, reps: int,
+                 chunk: int) -> dict:
+    """Preemption-safety machinery (--resume): checkpoint tax, resume
+    restore, and the persistent-compilation-cache warm restart.
+
+    `chunked` vs `chunked_ckpt` is the same chunked grid with and without
+    a checkpoint_dir (every chunk boundary commits the full resume carry
+    atomically) — the warm ratio is what preemption safety costs per
+    round.  `resume_latest_s` times `run(resume=True)` restoring off the
+    last committed boundary and finishing the run: the wall a preempted
+    fleet pays to get back to where it died.  The `cache` rows launch two
+    fresh subprocesses running an identical tiny sweep against one
+    compilation-cache dir — cold populates, warm restarts off the disk
+    cache — subprocess wall time, deliberately NOT gated."""
+    batches = FederatedSampler(shards, mc.batch_per_worker,
+                               seed=1).stack_rounds(rounds)
+    exps = grid(scenarios, rounds)
+    spec = SweepSpec.build([
+        ScenarioCase(e.name, floa, alpha, seed=e.seed)
+        for e, (floa, alpha) in zip(exps,
+                                    [experiment_floa(e, mc) for e in exps])])
+    chunk = max(1, min(chunk, rounds))
+    total = len(spec) * rounds
+    out = dict(lanes=len(spec), rounds=rounds, chunk_rounds=chunk,
+               dim=mc.dim)
+    print(f"# resume: R={rounds} rounds x S={len(spec)} lanes, "
+          f"chunk={chunk}, D={mc.dim}")
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        engines = [
+            ("chunked", SweepEngine(mlp_loss, spec, plan=ExecutionPlan(
+                chunk_rounds=chunk))),
+            ("chunked_ckpt", SweepEngine(mlp_loss, spec, plan=ExecutionPlan(
+                chunk_rounds=chunk, checkpoint_dir=ckpt_dir))),
+        ]
+        cold, best = {}, {}
+        for name, eng in engines:
+            t0 = time.perf_counter()
+            eng.run(params, batches)
+            cold[name] = time.perf_counter() - t0
+            best[name] = float("inf")
+        for _ in range(reps):
+            for name, eng in engines:
+                t0 = time.perf_counter()
+                eng.run(params, batches)
+                best[name] = min(best[name], time.perf_counter() - t0)
+        print("engine,cold_rounds_per_sec,warm_rounds_per_sec")
+        for name, _ in engines:
+            out[name] = dict(
+                cold_rounds_per_sec=round(total / cold[name], 2),
+                warm_rounds_per_sec=round(total / best[name], 2))
+            print(f"{name},{out[name]['cold_rounds_per_sec']:.1f},"
+                  f"{out[name]['warm_rounds_per_sec']:.1f}")
+        out["checkpoint_tax"] = round(best["chunked_ckpt"]
+                                      / best["chunked"], 3)
+        # Resume off the last committed boundary: restore + final chunk(s).
+        t0 = time.perf_counter()
+        engines[1][1].run(params, batches, resume=True)
+        out["resume_latest_s"] = round(time.perf_counter() - t0, 4)
+        print(f"# checkpoint tax (warm chunked_ckpt/chunked wall): "
+              f"{out['checkpoint_tax']:.2f}x; resume off latest boundary: "
+              f"{out['resume_latest_s']:.2f}s")
+    # Compilation-cache warm restart: same program, two fresh processes,
+    # one persistent cache dir.
+    with tempfile.TemporaryDirectory() as cache_dir:
+        env = dict(os.environ, REPRO_COMPILATION_CACHE=cache_dir)
+        walls = []
+        for phase in ("cold", "warm"):
+            t0 = time.perf_counter()
+            proc = subprocess.run([sys.executable, "-c", _CACHE_CHILD,
+                                   cache_dir], env=env, capture_output=True,
+                                  text=True, timeout=600)
+            walls.append(time.perf_counter() - t0)
+            if proc.returncode != 0:
+                print(f"# cache {phase} subprocess failed:\n{proc.stderr}")
+                out["cache"] = dict(error=f"{phase} subprocess failed")
+                return out
+        out["cache"] = dict(
+            cold_s=round(walls[0], 2), warm_s=round(walls[1], 2),
+            warm_restart_speedup=round(walls[0] / walls[1], 3))
+        print(f"# compilation cache: cold {out['cache']['cold_s']:.1f}s, "
+              f"warm restart {out['cache']['warm_s']:.1f}s "
+              f"({out['cache']['warm_restart_speedup']:.2f}x)")
+    return out
+
+
 def check_regressions(fresh: dict, baseline: dict,
                       tolerance: float) -> (list, list):
     """Per-row warm-throughput regression gate (the CI perf check).
@@ -444,6 +585,22 @@ def check_regressions(fresh: dict, baseline: dict,
                          "skipped")
         else:
             gate("scenario_axes", name, f_row, b_row)
+    b_res = baseline.get("resume")
+    if b_res:
+        f_res = fresh.get("resume")
+        if f_res is None:
+            notes.append("resume: not in fresh run, skipped")
+        elif any(f_res.get(k) != b_res.get(k)
+                 for k in ("lanes", "rounds", "chunk_rounds", "dim")):
+            # A different grid/chunk shape is a different program — skip,
+            # don't fail (mirrors the workers-series guard).
+            notes.append("resume: lanes/rounds/chunk shape differs, skipped")
+        else:
+            for sub in ("chunked", "chunked_ckpt"):
+                if sub in b_res and sub in f_res:
+                    gate("resume", sub, f_res[sub], b_res[sub])
+            # The subprocess cache timings are machine-noise bound and
+            # never gated.
     for name, b_row in (baseline.get("workers") or {}).items():
         f_row = (fresh.get("workers") or {}).get(name)
         if f_row is None:
@@ -484,6 +641,8 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
          scenario_rounds: int = 10, scenario_lanes: int = 8,
          workers: bool = False,
          workers_series: str = "10,1000,10000", workers_rounds: int = 3,
+         resume: bool = False, resume_rounds: int = 10,
+         resume_lanes: int = 8,
          out_path: str = "BENCH_sweep.json",
          check_against: str = "", tolerance: float = 0.5) -> dict:
     base_record = None
@@ -639,6 +798,12 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
     if workers:
         series = [int(s) for s in str(workers_series).split(",") if s]
         record["workers"] = bench_workers(series, workers_rounds, reps)
+    if resume:
+        # The raw --chunk-rounds, re-clamped against the resume grid's own
+        # rounds (the headline clamp above used the headline rounds).
+        record["resume"] = bench_resume(
+            mc, shards, params, resume_rounds, resume_lanes, reps,
+            chunk_rounds)
     # Gate BEFORE writing --out so the persisted record (the CI artifact)
     # carries the regression verdict, not just the raw numbers.
     if base_record is not None:
@@ -699,6 +864,15 @@ if __name__ == "__main__":
                     help="comma-separated U values for --workers")
     ap.add_argument("--workers-rounds", type=int, default=3,
                     help="rounds per worker-scaling engine (--workers)")
+    ap.add_argument("--resume", action="store_true",
+                    help="also bench the preemption-safety machinery: "
+                         "checkpointed-chunked vs plain-chunked warm "
+                         "throughput, resume-restore wall, and the "
+                         "compilation-cache cold/warm subprocess restart")
+    ap.add_argument("--resume-rounds", type=int, default=10,
+                    help="rounds for the --resume checkpoint A/B grid")
+    ap.add_argument("--resume-lanes", type=int, default=8,
+                    help="lanes for the --resume checkpoint A/B grid")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="machine-readable output path ('' to disable)")
     ap.add_argument("--check-against", default="",
@@ -720,7 +894,9 @@ if __name__ == "__main__":
                scenario_rounds=args.scenario_rounds,
                scenario_lanes=args.scenario_lanes, workers=args.workers,
                workers_series=args.workers_series,
-               workers_rounds=args.workers_rounds, out_path=args.out,
+               workers_rounds=args.workers_rounds, resume=args.resume,
+               resume_rounds=args.resume_rounds,
+               resume_lanes=args.resume_lanes, out_path=args.out,
                check_against=args.check_against, tolerance=args.tolerance)
     if rec.get("regressions"):
         raise SystemExit(1)

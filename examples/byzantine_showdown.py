@@ -23,6 +23,12 @@ compile, one dispatch.  Zero per-defense programs.
   PYTHONPATH=src python examples/byzantine_showdown.py
   PYTHONPATH=src python examples/byzantine_showdown.py --dirichlet 0.3
   REPRO_SMOKE=1 PYTHONPATH=src python examples/byzantine_showdown.py  # tiny CI
+
+Preemption-safe mode (docs/checkpointing.md): --checkpoint-dir snapshots the
+sweep at chunk boundaries and --resume continues a killed run bit-identically:
+
+  PYTHONPATH=src python examples/byzantine_showdown.py \
+      --checkpoint-dir /tmp/showdown_ckpt --resume
 """
 import argparse
 import os
@@ -33,6 +39,7 @@ jax.config.update("jax_threefry_partitionable", True)
 
 import jax.numpy as jnp
 
+from repro import ExecutionPlan, setup_compilation_cache
 from repro.configs import PAPER_MLP
 from repro.core import (
     AttackConfig, AttackType, ChannelConfig, DefenseSpec, FLOAConfig, Policy,
@@ -158,16 +165,32 @@ def main() -> None:
                     help="partition training data by a Dirichlet(ALPHA) "
                          "label-skew split instead of the IID round-robin "
                          "(smaller = more skew)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="snapshot the sweep's resume carry at chunk "
+                         "boundaries under DIR (preemption-safe; implies "
+                         "chunked execution)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in "
+                         "--checkpoint-dir (bit-identical to the "
+                         "uninterrupted run; fresh start if none exists)")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    setup_compilation_cache()  # no-op unless $REPRO_COMPILATION_CACHE is set
 
     mc, sampler, xt, yt = setup(args.dirichlet)
     eval_fn = lambda p: {"accuracy": mlp_accuracy(p, xt, yt)}
     params = init_mlp(jax.random.PRNGKey(0))
     batches = sampler.stack_rounds(ROUNDS)
 
+    plan = ExecutionPlan()
+    if args.checkpoint_dir:
+        plan = ExecutionPlan(chunk_rounds=max(1, ROUNDS // 4),
+                             checkpoint_dir=args.checkpoint_dir)
     cases = build_cases(mc)
     result = run_sweep(mlp_loss, params, batches, SweepSpec.build(cases),
-                       eval_fn=eval_fn, eval_every=ROUNDS)  # final acc only
+                       eval_fn=eval_fn, eval_every=ROUNDS,  # final acc only
+                       plan=plan, resume=args.resume)
     acc = {name: float(result.metrics["accuracy"][i, -1])
            for i, name in enumerate(result.names)}
 

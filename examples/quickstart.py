@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 jax.config.update("jax_threefry_partitionable", True)
 
+from repro import setup_compilation_cache
 from repro.configs import PAPER_MLP
 from repro.core import (
     AttackConfig, AttackType, ChannelConfig, FLOAConfig, Policy, PowerConfig,
@@ -29,6 +30,10 @@ from repro.fl import ScenarioCase, SweepSpec, run_sweep
 from repro.models import init_mlp, mlp_accuracy, mlp_loss
 
 SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
+# Persistent XLA compilation cache (no-op unless $REPRO_COMPILATION_CACHE is
+# set): a restarted demo skips the sweep recompile.  See docs/checkpointing.md.
+setup_compilation_cache()
 
 
 def case(name: str, policy: Policy, n_attackers: int, mc) -> ScenarioCase:

@@ -2,12 +2,16 @@
 
 Everything in `__all__` is the supported surface: the compiled sweep engine
 and its `ExecutionPlan` strategy object, the scenario/spec builders, the
-frozen config dataclasses they consume, and the sweep-mesh constructor.
+frozen config dataclasses they consume, the sweep-mesh constructor, the
+generic pytree checkpoint API (`save_pytree` / `restore_pytree` /
+`latest_step` — what preemption-safe resume persists with), and the
+multi-host bootstrap (`initialize_distributed` / `setup_compilation_cache`).
 Deeper modules (`repro.core.*`, `repro.kernels.*`, `repro.launch.*`) are
 implementation detail — importable, but their layout may shift between PRs;
 examples, benchmarks, and docs snippets import from here (or the `repro.fl` /
 `repro.configs` / `repro.models` package roots) only.
 """
+from repro.checkpoint import latest_step, restore_pytree, save_pytree
 from repro.core import (
     AttackConfig,
     AttackType,
@@ -29,6 +33,11 @@ from repro.fl import (
     SweepSpec,
     run_sweep,
 )
+from repro.launch.distributed import (
+    fetch,
+    initialize_distributed,
+    setup_compilation_cache,
+)
 from repro.launch.mesh import make_sweep_mesh
 
 __all__ = [
@@ -46,8 +55,14 @@ __all__ = [
     "SweepEngine",
     "SweepResult",
     "SweepSpec",
+    "fetch",
     "first_n_mask",
+    "initialize_distributed",
+    "latest_step",
     "make_sweep_mesh",
     "noise_std_for_snr",
+    "restore_pytree",
     "run_sweep",
+    "save_pytree",
+    "setup_compilation_cache",
 ]

@@ -1,3 +1,14 @@
-from repro.checkpoint.ckpt import latest_step, restore, save
+from repro.checkpoint.ckpt import (FORMAT_VERSION, latest_step, read_tree,
+                                   restore, restore_pytree, save, save_pytree,
+                                   write_tree)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = [
+    "FORMAT_VERSION",
+    "latest_step",
+    "read_tree",
+    "restore",
+    "restore_pytree",
+    "save",
+    "save_pytree",
+    "write_tree",
+]

@@ -1,10 +1,37 @@
-"""Checkpointing: flat-npz format with pytree structure + sharding metadata.
+"""Generic pytree checkpointing: flat-npz payload + a JSON meta manifest.
 
-save(path, step, params, opt_state, extra) writes
-  <path>/ckpt_<step>.npz        flattened arrays keyed by pytree path
-  <path>/ckpt_<step>.meta.json  treedef repr, shapes/dtypes, partition specs
-restore() rebuilds the pytree; on a mesh the launcher device_puts each leaf
-with its recorded NamedSharding.  Atomic via tmp-file rename.
+The format is two files per checkpoint, committed atomically:
+
+  <base>.npz        every pytree leaf as a numpy array, keyed by its
+                    "/"-joined tree path (dict keys and sequence indices);
+                    dtypes numpy cannot serialize natively (bfloat16, fp8)
+                    are stored as raw uint8 bytes and recorded in the meta
+  <base>.meta.json  the manifest: format version, leaf keys, true
+                    shapes/dtypes, which leaves are byte-packed, and an
+                    `extra` dict for caller metadata (round offsets, lane
+                    names, ...)
+
+Writes go through a `.tmp` path and `os.replace`; the meta manifest is
+renamed LAST, so its presence commits the checkpoint — a crash mid-write
+leaves at most an orphaned payload that `latest_step` ignores.  A failed
+write unlinks its own temp files (no `.tmp` litter on a full disk).
+
+Step-indexed layout (what the sweep engine's preemption-safe resume uses):
+
+  save_pytree(dir, step, tree, extra=...)   -> <dir>/ckpt_<step>.{npz,meta.json}
+  restore_pytree(dir, step=None, template=...)  # step=None -> latest
+  latest_step(dir)                          # highest COMMITTED step, or None
+
+`restore_pytree(template=...)` rebuilds exactly the template's container
+structure (tuples stay tuples); with `template=None` the tree is rebuilt
+from the recorded paths — dicts keyed by path component, with contiguous
+integer components folded back into lists (tuples come back as lists, and
+dict keys must not contain "/").  Restored arrays are byte-exact: the
+round-trip is bitwise for every dtype, bfloat16 and complex included.
+
+The pre-redesign params/opt_state-specific `save`/`restore` signatures are
+kept as thin shims on top (and still read pre-redesign checkpoints, whose
+meta carries no format_version and whose bf16 leaves were widened to f32).
 """
 from __future__ import annotations
 
@@ -15,14 +42,21 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+FORMAT_VERSION = 1
+
+_META = ".meta.json"
+_PAYLOAD = ".npz"
+
+
+def _path_key(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-        )
-        flat[key] = leaf
+        flat[_path_key(path)] = leaf
     return flat
 
 
@@ -31,75 +65,191 @@ def _unflatten_like(template, flat: Dict[str, Any]):
     treedef = jax.tree_util.tree_structure(template)
     leaves = []
     for path, _ in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        leaves.append(flat[key])
+        leaves.append(flat[_path_key(path)])
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def save(path: str, step: int, params, opt_state=None, extra: Optional[dict] = None,
-         specs=None) -> str:
-    os.makedirs(path, exist_ok=True)
-    tree = {"params": params}
-    if opt_state is not None:
-        tree["opt_state"] = opt_state
-    flat = _flatten_with_paths(tree)
+def _rebuild_from_paths(flat: Dict[str, Any]):
+    """Rebuild a nested container tree from "/"-joined path keys alone:
+    dicts keyed by path component, with any dict whose keys are exactly
+    0..n-1 folded into a list (sequence indices round-trip as lists)."""
+    if set(flat) == {""}:  # a bare leaf (the tree was a single array)
+        return flat[""]
+    root: Dict[str, Any] = {}
+    for key, leaf in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
 
-    def to_np(v):
-        a = np.asarray(v)
-        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
-            a = np.asarray(jax.numpy.asarray(v, jax.numpy.float32))
-        return a
+    def fold(node):
+        if not isinstance(node, dict):
+            return node
+        node = {k: fold(v) for k, v in node.items()}
+        if node and all(k.isdigit() for k in node):
+            idx = sorted(int(k) for k in node)
+            if idx == list(range(len(node))):
+                return [node[str(i)] for i in idx]
+        return node
 
-    arrays = {k: to_np(v) for k, v in flat.items()}
+    return fold(root)
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # ships with jax
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _pack(a: np.ndarray) -> Tuple[np.ndarray, bool]:
+    """npz-safe representation: native numpy dtypes pass through; extension
+    dtypes (bfloat16, fp8, ...) become their raw bytes (exactness is the
+    whole point — the old format widened bf16 to f32 and lost the bits)."""
+    try:
+        np.lib.format.dtype_to_descr(a.dtype)
+        if a.dtype.kind != "V":
+            return a, False
+    except ValueError:
+        pass
+    return np.frombuffer(np.ascontiguousarray(a).tobytes(), np.uint8), True
+
+
+def _cleanup(*paths: str) -> None:
+    for p in paths:
+        try:
+            os.remove(p)
+        except OSError:
+            pass
+
+
+def write_tree(base: str, tree, extra: Optional[dict] = None) -> str:
+    """Write one checkpoint at <base>.npz + <base>.meta.json (atomic: temp
+    files renamed into place, the meta manifest last — its presence is the
+    commit).  Returns the payload path."""
+    flat = {k: np.asarray(v) for k, v in _flatten_with_paths(tree).items()}
+    arrays, packed = {}, []
+    for k, v in flat.items():
+        a, was_packed = _pack(v)
+        arrays[k] = a
+        if was_packed:
+            packed.append(k)
     meta = {
-        "step": int(step),
+        "format_version": FORMAT_VERSION,
         "keys": sorted(arrays.keys()),
-        "shapes": {k: list(v.shape) for k, v in arrays.items()},
-        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "packed": sorted(packed),
         "extra": extra or {},
     }
-    if specs is not None:
-        meta["specs"] = {
-            k: [str(a) for a in (tuple(v) if v else ())]
-            for k, v in _flatten_with_paths({"params": specs}).items()
-        }
-    base = os.path.join(path, f"ckpt_{step}")
-    tmp = base + ".tmp.npz"
-    np.savez(tmp, **arrays)
-    os.replace(tmp, base + ".npz")
-    with open(base + ".meta.json.tmp", "w") as f:
-        json.dump(meta, f)
-    os.replace(base + ".meta.json.tmp", base + ".meta.json")
-    return base + ".npz"
+    tmp_npz = base + ".tmp" + _PAYLOAD
+    tmp_meta = base + _META + ".tmp"
+    try:
+        np.savez(tmp_npz, **arrays)
+        os.replace(tmp_npz, base + _PAYLOAD)
+        with open(tmp_meta, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp_meta, base + _META)  # commit point
+    except BaseException:
+        _cleanup(tmp_npz, tmp_meta)
+        raise
+    return base + _PAYLOAD
+
+
+def read_tree(base: str, template=None) -> Tuple[Any, dict]:
+    """Read a checkpoint written by `write_tree` (or the pre-redesign
+    `save`).  Returns (tree, meta): arrays byte-exact as stored, container
+    structure from `template` when given (tuples and custom nodes preserved)
+    or rebuilt from the recorded paths otherwise."""
+    with open(base + _META) as f:
+        meta = json.load(f)
+    with np.load(base + _PAYLOAD) as z:
+        flat = {k: z[k] for k in z.files}
+    for k in meta.get("packed", ()):
+        dt = _dtype_from_name(meta["dtypes"][k])
+        flat[k] = np.frombuffer(flat[k].tobytes(), dt).reshape(
+            meta["shapes"][k])
+    tree = (_rebuild_from_paths(flat) if template is None
+            else _unflatten_like(template, flat))
+    return tree, meta
+
+
+def _base(path: str, step: int) -> str:
+    return os.path.join(path, f"ckpt_{step}")
+
+
+def save_pytree(path: str, step: int, tree,
+                extra: Optional[dict] = None) -> str:
+    """Write `tree` as step `step` under directory `path` (created if
+    needed).  Atomic — see `write_tree`.  Returns the payload path."""
+    os.makedirs(path, exist_ok=True)
+    extra = dict(extra or {})
+    extra.setdefault("step", int(step))
+    return write_tree(_base(path, step), tree, extra=extra)
+
+
+def restore_pytree(path: str, step: Optional[int] = None,
+                   template=None) -> Tuple[Any, dict]:
+    """Read step `step` (None -> `latest_step(path)`) from directory `path`.
+    Raises FileNotFoundError when the directory holds no committed step."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {path!r}")
+    return read_tree(_base(path, step), template=template)
 
 
 def latest_step(path: str) -> Optional[int]:
+    """Highest COMMITTED step in `path`: a step counts only when both its
+    payload and its meta manifest exist (the manifest rename is the commit),
+    so torn writes and foreign files are ignored, not crashed on."""
     if not os.path.isdir(path):
         return None
-    steps = [
-        int(f[len("ckpt_") : -len(".npz")])
-        for f in os.listdir(path)
-        if f.startswith("ckpt_") and f.endswith(".npz")
-    ]
+    steps = []
+    for f in os.listdir(path):
+        if not (f.startswith("ckpt_") and f.endswith(_PAYLOAD)):
+            continue
+        stem = f[len("ckpt_"):-len(_PAYLOAD)]
+        if not stem.isdigit():
+            continue
+        if os.path.exists(os.path.join(path, f"ckpt_{stem}{_META}")):
+            steps.append(int(stem))
     return max(steps) if steps else None
+
+
+# --------------------------------------------------------------------------
+# Pre-redesign params/opt_state API — thin shims over the generic pytree
+# format.  `save` now stores every dtype exactly (the old format widened
+# bf16 to f32); `restore` still casts to the template's dtypes, so it reads
+# both new checkpoints (no-op cast) and pre-redesign ones (widened leaves
+# cast back down, as before).
+
+
+def save(path: str, step: int, params, opt_state=None,
+         extra: Optional[dict] = None, specs=None) -> str:
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    extra = dict(extra or {})
+    if specs is not None:
+        extra["specs"] = {
+            k: [str(a) for a in (tuple(v) if v else ())]
+            for k, v in _flatten_with_paths({"params": specs}).items()
+        }
+    return save_pytree(path, step, tree, extra=extra)
 
 
 def restore(path: str, step: int, params_template, opt_template=None
             ) -> Tuple[Any, Any, dict]:
-    base = os.path.join(path, f"ckpt_{step}")
-    with np.load(base + ".npz") as z:
-        flat = {k: z[k] for k in z.files}
-    with open(base + ".meta.json") as f:
-        meta = json.load(f)
     tmpl = {"params": params_template}
     if opt_template is not None:
         tmpl["opt_state"] = opt_template
-    # dtype-faithful restore: cast back to the template's dtype (bf16 etc.
-    # were stored widened to f32 — see save())
-    tree = _unflatten_like(tmpl, flat)
+    tree, meta = restore_pytree(path, step, template=tmpl)
     tree = jax.tree_util.tree_map(
-        lambda t, v: jax.numpy.asarray(v).astype(t.dtype), tmpl, tree
-    )
+        lambda t, v: jax.numpy.asarray(v).astype(t.dtype), tmpl, tree)
     params = tree["params"]
     opt_state = tree.get("opt_state") if opt_template is not None else None
     return params, opt_state, meta

@@ -26,6 +26,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import attacks as A
 from repro.core.channel import rayleigh_gains
@@ -165,9 +166,13 @@ class ScenarioParams(NamedTuple):
     def_f: Array       # int32 []  (multi-)Krum assumed attacker count f
     def_multi: Array   # int32 []  multi-Krum average count m
     # Adaptive-adversary axis (PR 8); the numpy-scalar defaults keep older
-    # direct constructions (tests, notebooks) valid and inert.
-    chan_rho: Array = jnp.float32(0.0)   # f32 [] Gauss-Markov fading rho
-    part_k: Array = jnp.int32(1 << 30)   # int32 [] K-of-U participation count
+    # direct constructions (tests, notebooks) valid and inert.  numpy (not
+    # jnp) scalars: a jnp default would run a device computation at class
+    # definition, and `jax.distributed.initialize` refuses to bootstrap
+    # once any computation has executed — importing repro must stay free of
+    # device work for the multi-host entry points to exist at all.
+    chan_rho: Array = np.float32(0.0)    # f32 [] Gauss-Markov fading rho
+    part_k: Array = np.int32(1 << 30)    # int32 [] K-of-U participation count
     #                                      (>= U means full participation)
 
     @property

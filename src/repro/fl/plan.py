@@ -63,6 +63,18 @@ class ExecutionPlan:
     worker_shards   shard the [S, U, D] slab's worker axis over the mesh's
                     "workers" axis; the OTA combine becomes a psum over
                     worker shards.  Derived from the mesh when left at 1.
+    checkpoint_dir  directory for preemption-safe resume checkpoints: the
+                    full resume carry (state, keys, round offset, host-side
+                    trajectory blocks) snapshots at chunk boundaries via
+                    `repro.checkpoint.save_pytree`, and
+                    `SweepEngine.run(..., resume=True)` continues
+                    bit-identically to the uninterrupted run.  Requires
+                    chunk_rounds (the chunk boundary IS the checkpoint
+                    boundary).
+    checkpoint_every_chunks
+                    snapshot cadence: a checkpoint after every Nth chunk
+                    (default 1 = every chunk boundary).  Larger N trades
+                    re-computed rounds on resume for less save overhead.
     """
 
     flat_state: bool = True
@@ -72,6 +84,8 @@ class ExecutionPlan:
     chunk_rounds: Optional[int] = None
     async_staging: bool = False
     worker_shards: int = 1
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every_chunks: int = 1
 
     def __post_init__(self):
         if self.chunk_rounds is not None and self.chunk_rounds < 1:
@@ -84,6 +98,19 @@ class ExecutionPlan:
                 "it requires chunk_rounds (the monolithic engine consumes "
                 "the whole [R, ...] stack in one dispatch, so there is no "
                 "chunk boundary to overlap)")
+        if self.checkpoint_every_chunks < 1:
+            raise ValueError(
+                f"checkpoint_every_chunks must be a positive int, got "
+                f"{self.checkpoint_every_chunks}")
+        if self.checkpoint_dir is not None and self.chunk_rounds is None:
+            raise ValueError(
+                "checkpoint_dir requires chunk_rounds: the chunk boundary is "
+                "the checkpoint boundary (the monolithic engine never "
+                "surfaces a mid-run carry to snapshot)")
+        if self.checkpoint_every_chunks != 1 and self.checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every_chunks has no effect without "
+                "checkpoint_dir")
         if self.mesh is not None:
             assert self.flat_state, \
                 "mesh-sharded sweeps require the flat-state path"

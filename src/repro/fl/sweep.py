@@ -79,7 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import channel as CH
 from repro.core import defenses as DEF
@@ -95,13 +95,20 @@ from repro.core.aggregation import (
 from repro.core.attacks import DIRECTIONAL_ATTACKS, AttackType
 from repro.core.power_control import Policy
 from repro.core.scenario import DefenseSpec
+from repro.checkpoint import ckpt as CKPT
 from repro.data.pipeline import iter_chunk_blocks
 from repro.fl.plan import ExecutionPlan
 from repro.fl.trainer import RoundLog
-from repro.launch.mesh import lane_sharding, replicated_sharding, \
-    stage_batch_block
+from repro.launch.distributed import fetch as _fetch
+from repro.launch.mesh import lane_sharding, put_with_sharding, \
+    replicated_sharding, stage_batch_block
 
 Array = jax.Array
+
+# Resume-checkpoint manifest schema version (the `extra` dict written by
+# `_save_checkpoint`); bumped when the carry layout changes so a resume
+# against a checkpoint from an incompatible engine fails loudly.
+_RESUME_VERSION = 1
 
 # Sentinel distinguishing "caller passed this legacy kwarg" from "left at
 # default": only explicitly-passed legacy knobs trigger the deprecation
@@ -324,6 +331,33 @@ class SweepResult:
 
     def index(self, name: str) -> int:
         return self.names.index(name)
+
+    def save(self, path: str) -> str:
+        """Serialize to <path>.npz + <path>.meta.json (the
+        `repro.checkpoint.write_tree` format, atomic): every params leaf,
+        the [S, R] loss/grad_norm trajectories, and each metrics entry as
+        exact arrays, with the scenario names in the manifest's `extra` —
+        so a resumed or remote sweep can ship its results whole.  Schema
+        documented in docs/benchmarks.md.  Returns the payload path."""
+        tree = {"params": self.params, "loss": self.loss,
+                "grad_norm": self.grad_norm, "metrics": dict(self.metrics)}
+        return CKPT.write_tree(path, tree, extra={
+            "kind": "SweepResult", "version": 1, "names": list(self.names)})
+
+    @classmethod
+    def load(cls, path: str) -> "SweepResult":
+        """Inverse of `save`: byte-exact arrays, names, metrics.  The
+        params container structure is rebuilt from the recorded tree paths
+        (dicts and lists; tuples come back as lists)."""
+        tree, meta = CKPT.read_tree(path)
+        if meta.get("extra", {}).get("kind") != "SweepResult":
+            raise ValueError(
+                f"{path!r} is not a saved SweepResult "
+                f"(manifest extra.kind={meta.get('extra', {}).get('kind')!r})")
+        return cls(names=tuple(meta["extra"]["names"]),
+                   params=tree["params"], loss=tree["loss"],
+                   grad_norm=tree["grad_norm"],
+                   metrics=dict(tree.get("metrics", {})))
 
     def logs(self, name_or_idx, eval_every: int = 1) -> List[RoundLog]:
         """RoundLog list for one scenario, sampled on the same schedule as
@@ -569,6 +603,22 @@ class SweepEngine:
     Contract: a pure scheduling change — results are bit-identical to
     async_staging=False; wins show up on data-bound configs (large batch
     blocks relative to round compute).
+
+    checkpoint_dir (requires chunk_rounds) makes the chunked execution
+    preemption-safe: after every checkpoint_every_chunks-th chunk boundary
+    (never the final one) the full resume carry — execution-order state
+    (including the Markov `h` tuple element when present), the key
+    schedule, the absolute round offset, and the host-side
+    loss/grad-norm/metric blocks accumulated so far — is written with
+    `repro.checkpoint.save_pytree` (atomic: the meta manifest's rename
+    commits).  `run(..., resume=True)` restores the latest committed
+    snapshot, validates its manifest against this run (rounds, chunking,
+    lane names, eval schedule), and dispatches only the remaining chunks.
+    Contract: resumed == uninterrupted BITWISE — the restored carry is
+    byte-exact and the re-dispatched chunk program is the identical jitted
+    computation, so no fp tolerance is needed (pinned across flat/grouped/
+    Markov grids and across a SIGKILLed process in
+    tests/test_sweep_resume.py).
     """
 
     def __init__(self, loss_fn: Callable, spec: SweepSpec,
@@ -617,6 +667,8 @@ class SweepEngine:
         self.grouped_dispatch = plan.grouped_dispatch
         self.chunk_rounds = plan.chunk_rounds
         self.async_staging = plan.async_staging
+        self.checkpoint_dir = plan.checkpoint_dir
+        self.checkpoint_every_chunks = plan.checkpoint_every_chunks
         self._num = len(spec)
         self._u = spec.num_workers
         self._sp = spec.stacked_params()
@@ -1361,7 +1413,88 @@ class SweepEngine:
 
     # ----------------------------------------------------- chunked execution
 
-    def _run_chunked(self, state, keys, batches, sp):
+    def _resume_extra(self, rounds: int) -> dict:
+        """The validation fingerprint a resume checkpoint carries: every
+        quantity the restored carry is only valid for verbatim."""
+        return {"resume_version": _RESUME_VERSION,
+                "rounds_total": int(rounds),
+                "chunk_rounds": int(self.chunk_rounds),
+                "exec_lanes": int(self._num + self._pad),
+                "eval_every": int(self.eval_every),
+                "names": list(self.spec.names)}
+
+    def _save_checkpoint(self, t_next, rounds, state, keys,
+                         losses, gns, metric_blocks) -> None:
+        """Snapshot the full resume carry at a chunk boundary: execution-
+        order (permuted/padded) state — the Markov `h` tuple element rides
+        along as an ordinary pytree leaf — the key schedule, and the
+        host-side trajectory blocks accumulated so far.  Step index =
+        rounds completed.  Multi-process: every process holds the same
+        host-side carry (the fetch edge replicates), so process 0 writes
+        and the rest skip."""
+        if jax.process_index() != 0:
+            return
+        tree = {
+            "carry": {
+                "state": jax.tree_util.tree_map(_fetch, state),
+                "keys": _fetch(keys),
+            },
+            "blocks": {
+                "loss": np.concatenate([_fetch(x) for x in losses]),
+                "grad_norm": np.concatenate([_fetch(x) for x in gns]),
+                "metrics": {
+                    k: np.concatenate([_fetch(m[k]) for m in metric_blocks])
+                    for k in (metric_blocks[0] if metric_blocks else {})},
+            },
+        }
+        extra = self._resume_extra(rounds)
+        extra["t_next"] = int(t_next)
+        CKPT.save_pytree(self.checkpoint_dir, int(t_next), tree, extra=extra)
+
+    def _restore_checkpoint(self, rounds, state, keys):
+        """Load the latest committed resume checkpoint, validate its
+        manifest against this engine/run, and refit the saved carry onto
+        the freshly-built (state, keys) structures.  Returns
+        (t_start, state, keys, losses, gns, metric_blocks) — t_start = 0
+        with the fresh carry when no checkpoint exists yet (so
+        `resume=True` is safe on the very first launch)."""
+        step = CKPT.latest_step(self.checkpoint_dir)
+        if step is None:
+            return 0, state, keys, [], [], []
+        saved, meta = CKPT.restore_pytree(self.checkpoint_dir, step)
+        ex = meta.get("extra", {})
+        want = self._resume_extra(rounds)
+        got = {k: ex.get(k) for k in want}
+        if got != want:
+            mismatch = sorted(k for k in want if got[k] != want[k])
+            raise ValueError(
+                f"resume checkpoint step {step} in "
+                f"{self.checkpoint_dir!r} was written by an incompatible "
+                f"run: manifest keys {mismatch} differ (checkpoint "
+                f"{ {k: got[k] for k in mismatch} } vs engine "
+                f"{ {k: want[k] for k in mismatch} })")
+        t_start = int(ex["t_next"])
+        # Refit the path-rebuilt carry onto this run's exact container
+        # structure (tuples — the Markov (w, h) carry — come back from the
+        # manifest as lists; leaves are byte-exact, so the refit is purely
+        # structural and the resumed trajectory stays bitwise).
+        def refit(template, rebuilt):
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template),
+                jax.tree_util.tree_leaves(rebuilt))
+
+        state = refit(state, saved["carry"]["state"])
+        keys = jnp.asarray(saved["carry"]["keys"])
+        if self.mesh is not None:
+            lane = lane_sharding(self.mesh)
+            state = jax.tree_util.tree_map(
+                lambda x: put_with_sharding(x, lane), state)
+            keys = put_with_sharding(keys, lane)
+        blocks = saved["blocks"]
+        return (t_start, state, keys, [blocks["loss"]],
+                [blocks["grad_norm"]], [blocks.get("metrics", {})])
+
+    def _run_chunked(self, state, keys, batches, sp, resume: bool = False):
         """Outer loop of the scan-of-chunks execution: dispatch the compiled
         C-round chunk program once per [C, ...] block, thread the
         (state, keys, absolute-round-offset) carry through the boundaries,
@@ -1374,6 +1507,14 @@ class SweepEngine:
         chunk.  Staging order is the ONLY difference between the modes — the
         dispatched programs and operands are identical, so their results
         are bit-identical.
+
+        checkpoint_dir (plan) snapshots the resume carry after every
+        checkpoint_every_chunks-th chunk boundary (never after the final
+        chunk — the run is about to return); resume=True restores the
+        latest snapshot and dispatches only the remaining chunks.  A
+        resumed run replays the exact jitted chunk program on a byte-exact
+        carry from an on-schedule boundary, so it is bit-identical to the
+        uninterrupted run (pinned in tests/test_sweep_resume.py).
         """
         rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
         if rounds == 0:
@@ -1382,8 +1523,17 @@ class SweepEngine:
             # xs yields empty [0, S] outputs), keeping chunked == monolithic
             # for every input.
             return self._run_jit(state, keys, batches, sp)
+        t_start = 0
+        losses, gns, metric_blocks = [], [], []
+        if resume:
+            t_start, state, keys, losses, gns, metric_blocks = \
+                self._restore_checkpoint(rounds, state, keys)
         rounds_total = jnp.int32(rounds)
-        blocks = iter_chunk_blocks(batches, self.chunk_rounds)
+        # Checkpoints land only on chunk boundaries, so t_start is a
+        # multiple of chunk_rounds and the remaining blocks slice exactly
+        # like the uninterrupted run's (numpy views, nothing copied).
+        remaining = jax.tree_util.tree_map(lambda x: x[t_start:], batches)
+        blocks = iter_chunk_blocks(remaining, self.chunk_rounds)
 
         def stage():
             blk = next(blocks, None)
@@ -1391,8 +1541,8 @@ class SweepEngine:
                     else stage_batch_block(blk, mesh=self.mesh))
 
         nxt = stage() if self.async_staging else None
-        losses, gns, metric_blocks = [], [], []
-        for t0 in range(0, rounds, self.chunk_rounds):
+        every = self.checkpoint_every_chunks
+        for i, t0 in enumerate(range(t_start, rounds, self.chunk_rounds)):
             block = nxt if self.async_staging else stage()
             state, keys, loss, gn, metrics = self._chunk_jit(
                 state, keys, jnp.int32(t0), rounds_total, block, sp)
@@ -1401,26 +1551,46 @@ class SweepEngine:
             losses.append(loss)
             gns.append(gn)
             metric_blocks.append(metrics)
+            t_next = min(t0 + self.chunk_rounds, rounds)
+            if (self.checkpoint_dir is not None and t_next < rounds
+                    and (i + 1) % every == 0):
+                self._save_checkpoint(t_next, rounds, state, keys,
+                                      losses, gns, metric_blocks)
 
         params = (state if self._finalize_jit is None
                   else self._finalize_jit(state))
         # Host-side concat along the round axis: per-chunk outputs are
         # [C, S_exec]; the caller's scatter-back/ghost-drop sees the same
         # [R, S_exec] layout the monolithic scan produces.
-        loss = np.concatenate([np.asarray(x) for x in losses])
-        gn = np.concatenate([np.asarray(x) for x in gns])
+        loss = np.concatenate([_fetch(x) for x in losses])
+        gn = np.concatenate([_fetch(x) for x in gns])
         metrics = {
-            k: np.concatenate([np.asarray(m[k]) for m in metric_blocks])
+            k: np.concatenate([_fetch(m[k]) for m in metric_blocks])
             for k in (metric_blocks[0] if metric_blocks else {})}
         return params, loss, gn, metrics
 
     # ----------------------------------------------------------------- run
 
     def run(self, params0, batches, keys: Optional[Array] = None,
-            params_stacked: bool = False) -> SweepResult:
+            params_stacked: bool = False, resume: bool = False
+            ) -> SweepResult:
         """params0: single init pytree, broadcast to all lanes (or pass
         params_stacked=True for leaves already carrying a leading S axis).
-        batches: pytree of [R, ...] arrays shared by every scenario."""
+        batches: pytree of [R, ...] arrays shared by every scenario.
+
+        resume=True (requires plan.checkpoint_dir) restores the latest
+        committed chunk-boundary checkpoint and runs only the remaining
+        chunks; the result is bit-identical to the uninterrupted run.  With
+        no checkpoint on disk yet it is a fresh run, so a preemptible loop
+        can pass resume=True unconditionally.  params0/batches/keys must be
+        the original run's (the manifest pins rounds, chunking, lane names,
+        and the eval schedule, and raises on mismatch — but the carry can
+        only be bitwise-valid for the original inputs)."""
+        if resume and self.checkpoint_dir is None:
+            raise ValueError(
+                "resume=True needs a checkpoint to restore: construct the "
+                "engine with plan=ExecutionPlan(checkpoint_dir=..., "
+                "chunk_rounds=...)")
         if not params_stacked:
             params0 = stack_params(params0, self._num)
         keys = self.spec.keys() if keys is None else jnp.asarray(keys)
@@ -1462,19 +1632,27 @@ class SweepEngine:
         if self.mesh is not None:
             lane = lane_sharding(self.mesh)
             rep = replicated_sharding(self.mesh)
-            state = jax.device_put(state, lane)
-            keys = jax.device_put(keys, lane)
+            state = jax.tree_util.tree_map(
+                lambda x: put_with_sharding(x, lane), state)
+            keys = put_with_sharding(keys, lane)
             sp = jax.tree_util.tree_map(
-                lambda x: jax.device_put(x, lane), sp)
+                lambda x: put_with_sharding(x, lane), sp)
             if self.chunk_rounds is None:
                 batches = jax.tree_util.tree_map(
-                    lambda x: jax.device_put(x, rep), batches)
+                    lambda x: put_with_sharding(x, rep), batches)
 
         if self.chunk_rounds is None:
             params, loss, gn, metrics = self._run_jit(state, keys, batches, sp)
         else:
             params, loss, gn, metrics = self._run_chunked(
-                state, keys, batches, sp)
+                state, keys, batches, sp, resume=resume)
+        if jax.process_count() > 1:
+            # Multi-process fetch edge: the jitted outputs are sharded over
+            # a process-spanning mesh; all-gather them host-side so every
+            # process returns the identical full SweepResult.
+            params = jax.tree_util.tree_map(_fetch, params)
+            loss, gn = _fetch(loss), _fetch(gn)
+            metrics = {k: _fetch(v) for k, v in metrics.items()}
 
         if self._groups is not None:
             # Scatter back to lane order: pick each source lane's execution
@@ -1505,17 +1683,41 @@ def run_sweep(loss_fn: Callable, params0, batches, spec: SweepSpec,
               eval_fn: Optional[Callable] = None,
               eval_every: int = 1,
               plan: Optional[ExecutionPlan] = None,
-              flat_state: bool = True,
-              mesh: Optional[Mesh] = None,
-              chunk_rounds: Optional[int] = None,
-              async_staging: bool = False) -> SweepResult:
+              resume: bool = False,
+              flat_state=_UNSET,
+              mesh=_UNSET,
+              chunk_rounds=_UNSET,
+              async_staging=_UNSET) -> SweepResult:
     """One-shot convenience wrapper around SweepEngine (see the SweepEngine
-    class docstring for each plan knob's equivalence contract).  Prefer
-    plan=ExecutionPlan(...); the loose kwargs build one (and are ignored
-    when plan is given)."""
-    if plan is None:
-        plan = ExecutionPlan(flat_state=flat_state, mesh=mesh,
-                             chunk_rounds=chunk_rounds,
-                             async_staging=async_staging)
+    class docstring for each plan knob's equivalence contract)::
+
+        run_sweep(loss_fn, params0, batches, spec,
+                  plan=ExecutionPlan(mesh=..., chunk_rounds=...))
+
+    plan= is the execution-strategy signature.  The loose per-knob kwargs
+    (flat_state / mesh / chunk_rounds / async_staging) are the deprecated
+    pre-plan spelling: any passed explicitly build the equivalent plan
+    (bitwise-equal execution, pinned by tests/test_execution_plan.py) and
+    emit a DeprecationWarning; mixing them with plan= raises.  resume=
+    forwards to `SweepEngine.run` (preemption-safe continuation off
+    plan.checkpoint_dir)."""
+    legacy = {k: v for k, v in dict(
+        flat_state=flat_state, mesh=mesh, chunk_rounds=chunk_rounds,
+        async_staging=async_staging).items() if v is not _UNSET}
+    if legacy:
+        if plan is not None:
+            raise ValueError(
+                f"pass the execution strategy as plan=ExecutionPlan(...) OR "
+                f"as the legacy per-knob kwargs, not both (got plan and "
+                f"{sorted(legacy)})")
+        warnings.warn(
+            "run_sweep's loose execution kwargs (flat_state, mesh, "
+            "chunk_rounds, async_staging) are deprecated; pass "
+            "plan=ExecutionPlan(...) instead",
+            DeprecationWarning, stacklevel=2)
+        plan = ExecutionPlan(**legacy)
+    elif plan is None:
+        plan = ExecutionPlan()
     return SweepEngine(loss_fn, spec, eval_fn=eval_fn,
-                       eval_every=eval_every, plan=plan).run(params0, batches)
+                       eval_every=eval_every,
+                       plan=plan).run(params0, batches, resume=resume)

@@ -94,6 +94,26 @@ def replicated_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, PartitionSpec())
 
 
+def put_with_sharding(x, sharding: NamedSharding):
+    """Place one host-side array under `sharding`, multi-process aware.
+
+    A fully-addressable sharding (every mesh device owned by this process
+    — the single-process case) is a plain async `jax.device_put`,
+    unchanged from the pre-distributed engine.  A process-spanning mesh
+    takes the `jax.make_array_from_callback` route instead: every process
+    holds the same full host-side value and materializes ONLY its own
+    addressable shards from it — this is the per-process feeding edge of a
+    multi-host sweep (for replicated operands each process uploads the
+    whole value once; for lane-sharded operands each uploads just its
+    lanes).
+    """
+    if sharding.is_fully_addressable:
+        return jax.device_put(x, sharding)
+    arr = np.asarray(x)
+    return jax.make_array_from_callback(arr.shape, sharding,
+                                        lambda idx: arr[idx])
+
+
 def stage_batch_block(block, mesh: Optional[Mesh] = None):
     """Transfer one host-side batch block (pytree of [C, ...] arrays) to the
     device(s), asynchronously.
@@ -103,13 +123,15 @@ def stage_batch_block(block, mesh: Optional[Mesh] = None):
     without a mesh it is a plain async `jax.device_put` to the default
     device.  Either way the call returns immediately — the transfer overlaps
     whatever the device is executing, which is what makes the chunked
-    engine's `async_staging` double buffer work.
+    engine's `async_staging` double buffer work.  On a process-spanning
+    mesh (see `launch.distributed.initialize_distributed`) each process
+    stages its own addressable replicas via `put_with_sharding`.
     """
     if mesh is None:
         return jax.tree_util.tree_map(jax.device_put, block)
     sharding = replicated_sharding(mesh)
     return jax.tree_util.tree_map(
-        lambda x: jax.device_put(x, sharding), block)
+        lambda x: put_with_sharding(x, sharding), block)
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:

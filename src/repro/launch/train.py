@@ -22,11 +22,17 @@ from repro import checkpoint as CK
 from repro.configs import get_config, get_smoke
 from repro.core.power_control import Policy
 from repro.data import sample_tokens
+from repro.launch.distributed import (initialize_distributed,
+                                      setup_compilation_cache)
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.steps import init_floa_state, init_model, make_train_step
 
 
 def main() -> None:
+    # Multi-host fleets: both are env-driven no-ops on a plain single-process
+    # launch (JAX_COORDINATOR_ADDRESS / REPRO_COMPILATION_CACHE unset).
+    initialize_distributed()
+    setup_compilation_cache()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",

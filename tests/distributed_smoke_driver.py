@@ -1,0 +1,54 @@
+"""One process of the 2-process `jax.distributed` CPU smoke
+(tests/test_distributed_bootstrap.py): bootstrap the distributed runtime
+via `initialize_distributed` (gloo CPU collectives), build the
+process-spanning ("data",) sweep mesh with the unchanged
+`make_sweep_mesh`, run a tiny sharded sweep — per-process staging through
+`put_with_sharding` / `stage_batch_block` — and check it against the
+process-local unsharded engine.
+
+Usage: distributed_smoke_driver.py <port> <rank> (always 2 processes;
+launch with XLA_FLAGS=--xla_force_host_platform_device_count=1 so each
+process owns exactly one CPU device and the mesh genuinely spans both).
+"""
+import sys
+
+
+def main() -> None:
+    port, rank = sys.argv[1], int(sys.argv[2])
+
+    import jax
+
+    jax.config.update("jax_threefry_partitionable", True)
+
+    import numpy as np
+
+    from repro import ExecutionPlan, initialize_distributed, make_sweep_mesh
+    from repro.fl import SweepEngine, SweepSpec
+    from sweep_testlib import grid_cases, tiny_problem
+
+    assert initialize_distributed(f"127.0.0.1:{port}", num_processes=2,
+                                  process_id=rank)
+    assert jax.process_count() == 2
+    assert jax.local_device_count() == 1
+    assert len(jax.devices()) == 2, "jax.devices() must be global after init"
+
+    loss, params, dim, batches = tiny_problem(rounds=4)
+    spec = SweepSpec.build(grid_cases(dim, num=4))
+    mesh = make_sweep_mesh()          # spans both processes, no new API
+    assert mesh.axis_names == ("data",) and not set(
+        mesh.devices.flat) <= set(jax.local_devices())
+
+    sharded = SweepEngine(loss, spec, plan=ExecutionPlan(
+        mesh=mesh, chunk_rounds=2)).run(params, batches)
+    local = SweepEngine(loss, spec).run(params, batches)
+    np.testing.assert_allclose(np.asarray(sharded.loss),
+                               np.asarray(local.loss),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sharded.grad_norm),
+                               np.asarray(local.grad_norm),
+                               rtol=1e-6, atol=1e-7)
+    print(f"DISTRIBUTED_SMOKE_OK rank={rank}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Subprocess driver for the SIGKILL-mid-sweep resume test
+(tests/test_sweep_resume.py::test_resume_after_sigkill).
+
+Runs the SAME mixed all-axes sweep (analog BEV/CI, a Markov-fading lane
+carrying the (w, h) scan tuple, a colluding cohort, and a digital median
+lane exercising grouped dispatch) in one of three modes:
+
+  full <out>        uninterrupted chunked run; SweepResult.save(out)
+  ckpt <dir>        checkpointed run that SIGKILLs ITSELF right after the
+                    2nd chunk-boundary checkpoint commits — simulating a
+                    preemption with no chance to clean up
+  resume <dir> <out>  fresh process: run(resume=True) off <dir>'s latest
+                    committed checkpoint; SweepResult.save(out)
+
+The parent asserts `full` and `ckpt`+`resume` produce bitwise-identical
+SweepResults via the save/load round-trip (which this driver therefore
+also exercises end to end).
+"""
+import dataclasses
+import os
+import signal
+import sys
+
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.core.attacks import AttackType
+from repro.core.power_control import Policy
+from repro.core.scenario import DefenseSpec
+from repro.fl import ExecutionPlan, ScenarioCase, SweepEngine, SweepSpec
+
+from sweep_testlib import floa, tiny_problem
+
+ROUNDS = 10
+CHUNK = 2
+KILL_AFTER_SAVES = 2  # SIGKILL right after the 2nd checkpoint commits
+
+
+def _with_rho(cfg, rho):
+    return dataclasses.replace(
+        cfg, channel=dataclasses.replace(cfg.channel, markov_rho=rho))
+
+
+def build_problem():
+    loss, params, dim, batches = tiny_problem(rounds=ROUNDS)
+    cases = [
+        ScenarioCase("bev", floa(dim, Policy.BEV, 1), 0.05, seed=400),
+        ScenarioCase("markov", _with_rho(floa(dim, Policy.BEV, 1), 0.9),
+                     0.05, seed=401),
+        ScenarioCase("collude",
+                     floa(dim, Policy.CI, 2, attack=AttackType.COLLUDING),
+                     0.05, seed=402),
+        ScenarioCase("median", floa(dim, Policy.EF, 1, 0.0), 0.05, seed=403,
+                     defense=DefenseSpec(name="median")),
+    ]
+    eval_fn = lambda p: {"accuracy": jax.numpy.mean(p["w1"])}
+    return loss, params, batches, SweepSpec.build(cases), eval_fn
+
+
+def make_engine(loss, spec, eval_fn, checkpoint_dir=None):
+    plan = ExecutionPlan(chunk_rounds=CHUNK, checkpoint_dir=checkpoint_dir)
+    return SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=3, plan=plan)
+
+
+def main() -> None:
+    mode = sys.argv[1]
+    loss, params, batches, spec, eval_fn = build_problem()
+    if mode == "full":
+        out = sys.argv[2]
+        res = make_engine(loss, spec, eval_fn).run(params, batches)
+        res.save(out)
+    elif mode == "ckpt":
+        ckpt_dir = sys.argv[2]
+        from repro.checkpoint import ckpt as ckpt_mod
+        orig, count = ckpt_mod.save_pytree, [0]
+
+        def save_then_die(*a, **k):
+            r = orig(*a, **k)
+            count[0] += 1
+            if count[0] >= KILL_AFTER_SAVES:
+                os.kill(os.getpid(), signal.SIGKILL)  # no cleanup, no atexit
+            return r
+
+        # The engine calls save_pytree through the module attribute, so
+        # patching the module simulates a preemption at an exact commit.
+        ckpt_mod.save_pytree = save_then_die
+        make_engine(loss, spec, eval_fn, ckpt_dir).run(params, batches)
+        raise SystemExit("unreachable: the sweep outlived its SIGKILL")
+    elif mode == "resume":
+        ckpt_dir, out = sys.argv[2], sys.argv[3]
+        res = make_engine(loss, spec, eval_fn, ckpt_dir).run(
+            params, batches, resume=True)
+        res.save(out)
+    else:
+        raise SystemExit(f"unknown mode {mode!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -70,6 +70,44 @@ def test_gate_skips_chunk_rows_on_chunk_rounds_mismatch():
     assert len(fails2) == 1 and "engines/flat:" in fails2[0]
 
 
+def _resume_row(chunked=100.0, ckpt=90.0, lanes=8, rounds=10,
+                chunk_rounds=5, dim=50890):
+    return {"lanes": lanes, "rounds": rounds, "chunk_rounds": chunk_rounds,
+            "dim": dim,
+            "chunked": {"warm_rounds_per_sec": chunked},
+            "chunked_ckpt": {"warm_rounds_per_sec": ckpt},
+            "cache": {"cold_s": 10.0, "warm_s": 1.0,
+                      "warm_restart_speedup": 10.0}}
+
+
+def test_gate_resume_rows():
+    """The resume section gates its chunked/chunked_ckpt warm rows
+    shape-aware (lanes/rounds/chunk_rounds/dim) and never gates the
+    subprocess cache timings."""
+    base = _rec(engines={"flat": 100.0})
+    base["resume"] = _resume_row()
+    # within tolerance, cache wildly slower: passes (cache is not gated)
+    fresh = _rec(engines={"flat": 100.0})
+    fresh["resume"] = _resume_row(chunked=51.0, ckpt=46.0)
+    fresh["resume"]["cache"] = {"cold_s": 10.0, "warm_s": 10.0,
+                                "warm_restart_speedup": 1.0}
+    fails, notes = check_regressions(fresh, base, tolerance=0.5)
+    assert fails == [] and notes == []
+    # a collapsed checkpointed row fails
+    fresh["resume"]["chunked_ckpt"]["warm_rounds_per_sec"] = 1.0
+    fails2, _ = check_regressions(fresh, base, tolerance=0.5)
+    assert len(fails2) == 1 and "resume/chunked_ckpt" in fails2[0]
+    # a different resume grid shape skips instead
+    fresh["resume"]["lanes"] = 4
+    fails3, notes3 = check_regressions(fresh, base, tolerance=0.5)
+    assert fails3 == [] and any("resume" in n for n in notes3)
+    # resume missing from the fresh run: skipped, reported
+    del fresh["resume"]
+    fails4, notes4 = check_regressions(fresh, base, tolerance=0.5)
+    assert fails4 == [] and any("resume: not in fresh run" in n
+                                for n in notes4)
+
+
 def test_gate_skips_missing_rows():
     base = _rec(engines={"flat": 100.0, "looped": 10.0},
                 defenses={"mixed": 40.0, "krum": 70.0})

@@ -1,0 +1,172 @@
+"""Checkpoint-format contract for `repro.checkpoint` (the generic pytree
+API the sweep engine's preemption-safe resume persists with): byte-exact
+round-trips across dtypes and container structures, `latest_step` on
+partial/corrupt directories, and write atomicity (the meta manifest's
+rename is the commit; failures leave no `.tmp` litter)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as CK
+from repro.checkpoint import ckpt as CKM
+
+
+def _markov_like_tree():
+    """The shape of the sweep engine's resume carry: a (w, h) tuple state
+    with a complex Markov gain element, a key schedule, nested dicts."""
+    return {
+        "carry": {
+            "state": (jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                      (jnp.ones((3, 4, 2), jnp.complex64) * (0.5 - 2j),
+                       jnp.zeros((3,), jnp.int32))),
+            "keys": jax.random.split(jax.random.PRNGKey(7), 3),
+        },
+        "blocks": {"loss": np.linspace(0, 1, 6).reshape(2, 3)},
+    }
+
+
+def _assert_leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype, (xa.dtype, ya.dtype)
+        np.testing.assert_array_equal(xa, ya)
+
+
+# ------------------------------------------------------------- round-trip
+
+
+def test_roundtrip_with_template_preserves_tuples(tmp_path):
+    tree = _markov_like_tree()
+    CK.save_pytree(str(tmp_path), 5, tree, extra={"t_next": 10})
+    got, meta = CK.restore_pytree(str(tmp_path), 5, template=tree)
+    assert isinstance(got["carry"]["state"], tuple)
+    assert isinstance(got["carry"]["state"][1], tuple)
+    _assert_leaves_equal(tree, got)
+    assert meta["extra"] == {"t_next": 10, "step": 5}
+    assert meta["format_version"] == CK.FORMAT_VERSION
+
+
+def test_roundtrip_path_rebuild_without_template(tmp_path):
+    tree = _markov_like_tree()
+    CK.save_pytree(str(tmp_path), 0, tree)
+    got, _ = CK.restore_pytree(str(tmp_path))
+    # No template: structure comes from the recorded paths — tuples fold
+    # back as lists, dicts keep their keys, leaves stay byte-exact.
+    assert isinstance(got["carry"]["state"], list)
+    _assert_leaves_equal(tree, got)
+
+
+def test_roundtrip_extension_and_wide_dtypes_bitwise(tmp_path):
+    rng = np.random.default_rng(0)
+    f32 = rng.standard_normal((5, 3)).astype(np.float32)
+    tree = {
+        "bf16": jnp.asarray(f32, jnp.bfloat16),
+        "c64": (f32[:, :2] + 1j * f32[:, 1:]).astype(np.complex64),
+        "f64": rng.standard_normal(4),
+        "i32": np.arange(-3, 3, dtype=np.int32),
+        "u8": np.arange(6, dtype=np.uint8),
+        "b": np.array([True, False, True]),
+    }
+    CK.save_pytree(str(tmp_path), 1, tree)
+    got, meta = CK.restore_pytree(str(tmp_path), 1, template=tree)
+    _assert_leaves_equal(tree, got)
+    # bfloat16 is npz-hostile: it must ride the byte-packed route and still
+    # restore to the true dtype (the old format widened it to f32).
+    assert "bf16" in meta["packed"]
+    assert meta["dtypes"]["bf16"] == "bfloat16"
+    assert np.asarray(got["bf16"]).dtype == jnp.bfloat16
+
+
+def test_roundtrip_bare_leaf_and_scalar(tmp_path):
+    CK.save_pytree(str(tmp_path), 2, jnp.arange(4.0))
+    got, _ = CK.restore_pytree(str(tmp_path), 2)
+    np.testing.assert_array_equal(np.asarray(got), np.arange(4.0))
+    CK.save_pytree(str(tmp_path), 3, {"t": np.int64(12)})
+    got, _ = CK.restore_pytree(str(tmp_path), 3)
+    assert int(got["t"]) == 12
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no committed checkpoint"):
+        CK.restore_pytree(str(tmp_path / "nowhere"))
+
+
+# ------------------------------------------------------------ latest_step
+
+
+def test_latest_step_empty_and_missing_dirs(tmp_path):
+    assert CK.latest_step(str(tmp_path / "absent")) is None
+    assert CK.latest_step(str(tmp_path)) is None
+
+
+def test_latest_step_ignores_uncommitted_and_foreign_files(tmp_path):
+    CK.save_pytree(str(tmp_path), 3, {"a": np.zeros(2)})
+    CK.save_pytree(str(tmp_path), 10, {"a": np.ones(2)})
+    # A torn write: payload present, manifest missing — not committed.
+    (tmp_path / "ckpt_99.npz").write_bytes(b"torn")
+    # Foreign litter that must not crash the scan.
+    (tmp_path / "ckpt_abc.npz").write_bytes(b"x")
+    (tmp_path / "notes.txt").write_text("hi")
+    (tmp_path / "ckpt_7.meta.json").write_text("{}")  # manifest, no payload
+    assert CK.latest_step(str(tmp_path)) == 10
+    got, _ = CK.restore_pytree(str(tmp_path))
+    np.testing.assert_array_equal(got["a"], np.ones(2))
+
+
+# -------------------------------------------------------------- atomicity
+
+
+def test_failed_payload_write_leaves_no_litter(tmp_path, monkeypatch):
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(CKM.np, "savez", boom)
+    with pytest.raises(OSError, match="disk full"):
+        CK.save_pytree(str(tmp_path), 4, {"a": np.zeros(3)})
+    assert [f for f in os.listdir(tmp_path)] == []
+    assert CK.latest_step(str(tmp_path)) is None
+
+
+def test_failed_meta_write_is_not_committed(tmp_path, monkeypatch):
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(CKM.json, "dump", boom)
+    with pytest.raises(OSError, match="disk full"):
+        CK.save_pytree(str(tmp_path), 4, {"a": np.zeros(3)})
+    # The payload may have landed, but without its manifest the step is
+    # uncommitted and no temp files survive.
+    assert not [f for f in os.listdir(tmp_path) if ".tmp" in f]
+    assert CK.latest_step(str(tmp_path)) is None
+
+
+def test_meta_rename_is_the_commit_point(tmp_path):
+    CK.save_pytree(str(tmp_path), 6, {"a": np.zeros(3)})
+    assert json.loads(
+        (tmp_path / "ckpt_6.meta.json").read_text())["extra"]["step"] == 6
+    os.remove(tmp_path / "ckpt_6.meta.json")
+    assert CK.latest_step(str(tmp_path)) is None
+
+
+# ----------------------------------------------------- back-compat shims
+
+
+def test_legacy_save_restore_shims(tmp_path):
+    params = {"w": jnp.ones((3, 2)),
+              "nested": {"b": jnp.arange(4, dtype=jnp.bfloat16)}}
+    opt = (jnp.zeros(3), {"m": jnp.full((2,), 2.0)})
+    CK.save(str(tmp_path), 42, params, opt, extra={"note": "x"})
+    assert CK.latest_step(str(tmp_path)) == 42
+    p2, o2, meta = CK.restore(str(tmp_path), 42, params, opt)
+    assert p2["nested"]["b"].dtype == jnp.bfloat16
+    assert meta["extra"]["note"] == "x"
+    _assert_leaves_equal(params, p2)
+    _assert_leaves_equal(opt, o2)
+    assert isinstance(o2, tuple)

@@ -75,6 +75,21 @@ def test_plan_derives_worker_shards_from_mesh():
     assert p.worker_shards == 1 and p.data_shards == 1
 
 
+def test_plan_checkpoint_validation():
+    with pytest.raises(ValueError, match="checkpoint_dir requires "
+                                         "chunk_rounds"):
+        ExecutionPlan(checkpoint_dir="/tmp/ck")
+    with pytest.raises(ValueError, match="checkpoint_every_chunks must be"):
+        ExecutionPlan(chunk_rounds=2, checkpoint_dir="/tmp/ck",
+                      checkpoint_every_chunks=0)
+    with pytest.raises(ValueError, match="no effect without"):
+        ExecutionPlan(chunk_rounds=2, checkpoint_every_chunks=3)
+    p = ExecutionPlan(chunk_rounds=2, checkpoint_dir="/tmp/ck",
+                      checkpoint_every_chunks=3)
+    assert p.checkpoint_dir == "/tmp/ck" and p.checkpoint_every_chunks == 3
+    assert ExecutionPlan().checkpoint_dir is None
+
+
 # --------------------------------------------- engine plan/legacy plumbing
 
 
@@ -145,9 +160,36 @@ def test_plan_path_matches_legacy_kwargs_bitwise():
 def test_run_sweep_accepts_plan():
     from repro.fl import run_sweep
     loss, params, batches, spec = _problem()
-    base = run_sweep(loss, params, batches, spec)
-    via_plan = run_sweep(loss, params, batches, spec, plan=ExecutionPlan())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        base = run_sweep(loss, params, batches, spec)  # defaults: no warning
+        via_plan = run_sweep(loss, params, batches, spec,
+                             plan=ExecutionPlan())
     np.testing.assert_array_equal(base.loss, via_plan.loss)
+
+
+def test_run_sweep_legacy_kwargs_warn_and_stay_bitwise():
+    """run_sweep's loose execution kwargs are deprecated like the engine's:
+    they must warn AND keep producing the exact plan-path trajectories."""
+    from repro.fl import run_sweep
+    loss, params, batches, spec = _problem()
+    with pytest.warns(DeprecationWarning, match="run_sweep's loose"):
+        legacy = run_sweep(loss, params, batches, spec, chunk_rounds=2)
+    planned = run_sweep(loss, params, batches, spec,
+                        plan=ExecutionPlan(chunk_rounds=2))
+    np.testing.assert_array_equal(legacy.loss, planned.loss)
+    np.testing.assert_array_equal(legacy.grad_norm, planned.grad_norm)
+    for a, b in zip(jax.tree_util.tree_leaves(legacy.params),
+                    jax.tree_util.tree_leaves(planned.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_sweep_rejects_plan_plus_legacy_kwargs():
+    from repro.fl import run_sweep
+    loss, params, batches, spec = _problem()
+    with pytest.raises(ValueError, match="not both"):
+        run_sweep(loss, params, batches, spec, plan=ExecutionPlan(),
+                  chunk_rounds=2)
 
 
 # ------------------------------------------------------ public API surface
@@ -161,7 +203,10 @@ def test_top_level_public_api():
                  "ScenarioCase", "DefenseSpec", "FLOAConfig", "AttackConfig",
                  "AttackType", "ChannelConfig", "Policy", "PowerConfig",
                  "first_n_mask", "noise_std_for_snr", "run_sweep",
-                 "FLTrainer", "RoundLog", "make_sweep_mesh"):
+                 "FLTrainer", "RoundLog", "make_sweep_mesh",
+                 "save_pytree", "restore_pytree", "latest_step",
+                 "initialize_distributed", "setup_compilation_cache",
+                 "fetch"):
         assert name in repro.__all__, name
         assert hasattr(repro, name), name
     import repro.fl as fl

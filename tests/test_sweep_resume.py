@@ -1,0 +1,181 @@
+"""Preemption-safe resume: a checkpointed chunked sweep continued with
+`run(..., resume=True)` must be BITWISE identical to the uninterrupted run.
+
+The grid is deliberately mixed across every engine axis that touches the
+resume carry: flat state, grouped defense dispatch (lane permutation), a
+Markov-fading lane (the (w, h) scan-carry tuple), a colluding cohort, and
+an in-scan eval schedule (NaN off-schedule metrics) — all from
+tests/resume_driver.py's `build_problem`, which the SIGKILL subprocess
+test reuses so the in-process and killed-process contracts pin the same
+computation.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro import checkpoint as CK
+from repro.fl import ExecutionPlan, SweepEngine, SweepResult
+
+import resume_driver as RD
+
+
+def _assert_bitwise(a, b):
+    assert a.names == b.names
+    np.testing.assert_array_equal(np.asarray(a.loss), np.asarray(b.loss))
+    np.testing.assert_array_equal(np.asarray(a.grad_norm),
+                                  np.asarray(b.grad_norm))
+    assert set(a.metrics) == set(b.metrics)
+    for k in a.metrics:  # assert_array_equal treats NaN == NaN
+        np.testing.assert_array_equal(np.asarray(a.metrics[k]),
+                                      np.asarray(b.metrics[k]))
+    for la, lb in zip(jax.tree_util.tree_leaves(a.params),
+                      jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _prune_after(ckpt_dir, keep_step):
+    """Simulate a preemption at `keep_step` rounds: drop every later
+    checkpoint the uninterrupted run left behind."""
+    for f in os.listdir(ckpt_dir):
+        step = f[len("ckpt_"):].split(".")[0]
+        if step.isdigit() and int(step) > keep_step:
+            os.remove(os.path.join(ckpt_dir, f))
+    assert CK.latest_step(str(ckpt_dir)) == keep_step
+
+
+# -------------------------------------------------------------- in-process
+
+
+@pytest.mark.parametrize("stop_after_rounds", [RD.CHUNK, 3 * RD.CHUNK])
+def test_resume_bitwise_in_process(tmp_path, stop_after_rounds):
+    """Stop after chunk k (k=1 and k=3), reload in a FRESH engine, continue:
+    trajectories, metrics, and final params all bitwise-match the
+    uninterrupted run — on the mixed flat+grouped+Markov grid."""
+    loss, params, batches, spec, eval_fn = RD.build_problem()
+    full = RD.make_engine(loss, spec, eval_fn, str(tmp_path)).run(
+        params, batches)
+    # Every non-final chunk boundary committed a step.
+    boundaries = list(range(RD.CHUNK, RD.ROUNDS, RD.CHUNK))
+    assert sorted(
+        int(f[len("ckpt_"):-len(".npz")]) for f in os.listdir(tmp_path)
+        if f.endswith(".npz")) == boundaries
+    _prune_after(tmp_path, stop_after_rounds)
+    resumed = RD.make_engine(loss, spec, eval_fn, str(tmp_path)).run(
+        params, batches, resume=True)
+    _assert_bitwise(full, resumed)
+
+
+def test_resume_checkpoint_cadence(tmp_path):
+    """checkpoint_every_chunks=2 halves the snapshots (every 2nd boundary,
+    final chunk still excluded) and resume off the sparser schedule stays
+    bitwise."""
+    loss, params, batches, spec, eval_fn = RD.build_problem()
+    plan = ExecutionPlan(chunk_rounds=RD.CHUNK, checkpoint_dir=str(tmp_path),
+                         checkpoint_every_chunks=2)
+    full = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=3,
+                       plan=plan).run(params, batches)
+    assert sorted(
+        int(f[len("ckpt_"):-len(".npz")]) for f in os.listdir(tmp_path)
+        if f.endswith(".npz")) == [4 * k for k in
+                                   range(1, RD.ROUNDS // 4 + 1)
+                                   if 4 * k < RD.ROUNDS]
+    _prune_after(tmp_path, 4)
+    resumed = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=3,
+                          plan=plan).run(params, batches, resume=True)
+    _assert_bitwise(full, resumed)
+
+
+def test_resume_fresh_start_when_no_checkpoint(tmp_path):
+    """resume=True with an empty checkpoint dir is a plain fresh run (so
+    preemptible loops can pass resume=True unconditionally)."""
+    loss, params, batches, spec, eval_fn = RD.build_problem()
+    baseline = RD.make_engine(loss, spec, eval_fn).run(params, batches)
+    resumed = RD.make_engine(loss, spec, eval_fn, str(tmp_path)).run(
+        params, batches, resume=True)
+    _assert_bitwise(baseline, resumed)
+    assert CK.latest_step(str(tmp_path)) is not None  # and it checkpointed
+
+
+def test_resume_requires_checkpoint_dir():
+    loss, params, batches, spec, eval_fn = RD.build_problem()
+    eng = SweepEngine(loss, spec, eval_fn=eval_fn,
+                      plan=ExecutionPlan(chunk_rounds=RD.CHUNK))
+    with pytest.raises(ValueError, match="resume=True needs a checkpoint"):
+        eng.run(params, batches, resume=True)
+
+
+def test_resume_rejects_incompatible_checkpoint(tmp_path):
+    """The manifest pins rounds/chunking/lanes/eval schedule; a resume from
+    an engine that disagrees must fail loudly, not drift silently."""
+    loss, params, batches, spec, eval_fn = RD.build_problem()
+    RD.make_engine(loss, spec, eval_fn, str(tmp_path)).run(params, batches)
+    other = SweepEngine(loss, spec, eval_fn=eval_fn, eval_every=3,
+                        plan=ExecutionPlan(chunk_rounds=5,
+                                           checkpoint_dir=str(tmp_path)))
+    with pytest.raises(ValueError, match="incompatible"):
+        other.run(params, batches, resume=True)
+
+
+# --------------------------------------------------- SweepResult save/load
+
+
+def test_sweep_result_save_load_roundtrip(tmp_path):
+    loss, params, batches, spec, eval_fn = RD.build_problem()
+    res = RD.make_engine(loss, spec, eval_fn).run(params, batches)
+    path = str(tmp_path / "result")
+    res.save(path)
+    got = SweepResult.load(path)
+    _assert_bitwise(res, got)
+    assert got.names == res.names and isinstance(got.names, tuple)
+    assert got.index("markov") == res.index("markov")
+
+
+def test_sweep_result_load_rejects_foreign_files(tmp_path):
+    CK.save_pytree(str(tmp_path), 3, {"a": np.zeros(2)})
+    with pytest.raises(ValueError, match="not a saved SweepResult"):
+        SweepResult.load(str(tmp_path / "ckpt_3"))
+
+
+# --------------------------------------------------- SIGKILLed subprocess
+
+
+@pytest.mark.slow
+def test_resume_after_sigkill(tmp_path):
+    """The full preemption story: a subprocess running the checkpointed
+    sweep SIGKILLs itself right after its 2nd checkpoint commits (no
+    cleanup, no atexit); a fresh process resumes off the surviving
+    checkpoint and must reproduce the uninterrupted run bitwise.  Results
+    cross the process boundary via SweepResult.save/load."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    driver = str(root / "tests" / "resume_driver.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src"), str(root / "tests")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    ckpt_dir = str(tmp_path / "ckpt")
+    full_out = str(tmp_path / "full")
+    resumed_out = str(tmp_path / "resumed")
+
+    def run(*args, expect_sigkill=False):
+        proc = subprocess.run([sys.executable, driver, *args], env=env,
+                              capture_output=True, text=True, timeout=600)
+        if expect_sigkill:
+            assert proc.returncode == -9, (proc.returncode, proc.stderr)
+        else:
+            assert proc.returncode == 0, proc.stderr
+        return proc
+
+    run("full", full_out)
+    run("ckpt", ckpt_dir, expect_sigkill=True)
+    # The kill landed right after the 2nd commit: that step must be the
+    # latest committed state on disk.
+    assert CK.latest_step(ckpt_dir) == RD.KILL_AFTER_SAVES * RD.CHUNK
+    run("resume", ckpt_dir, resumed_out)
+    _assert_bitwise(SweepResult.load(full_out), SweepResult.load(resumed_out))
