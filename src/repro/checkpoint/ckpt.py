@@ -11,10 +11,13 @@ The format is two files per checkpoint, committed atomically:
                     `extra` dict for caller metadata (round offsets, lane
                     names, ...)
 
-Writes go through a `.tmp` path and `os.replace`; the meta manifest is
-renamed LAST, so its presence commits the checkpoint — a crash mid-write
-leaves at most an orphaned payload that `latest_step` ignores.  A failed
-write unlinks its own temp files (no `.tmp` litter on a full disk).
+Writes go through `.tmp` paths and `os.replace`; the meta manifest is
+renamed LAST, so its presence commits the checkpoint, and rewriting an
+already-committed base unlinks the old manifest before the payload swap
+— a crash mid-write leaves at most an orphaned (manifest-less) payload
+that `latest_step` ignores, never an old manifest over a new payload.  A
+failed write unlinks its own temp files (no `.tmp` litter on a full
+disk).
 
 Step-indexed layout (what the sweep engine's preemption-safe resume uses):
 
@@ -148,9 +151,19 @@ def write_tree(base: str, tree, extra: Optional[dict] = None) -> str:
     tmp_meta = base + _META + ".tmp"
     try:
         np.savez(tmp_npz, **arrays)
-        os.replace(tmp_npz, base + _PAYLOAD)
         with open(tmp_meta, "w") as f:
             json.dump(meta, f)
+        # Rewriting an already-committed base must never pair the OLD
+        # manifest with the NEW payload: with both temp files staged,
+        # decommit (unlink the old manifest) BEFORE replacing the payload,
+        # then rename the new manifest — the commit.  A crash anywhere in
+        # between leaves at most a manifest-less payload that latest_step
+        # ignores, never a mixed pair.
+        try:
+            os.remove(base + _META)
+        except FileNotFoundError:
+            pass
+        os.replace(tmp_npz, base + _PAYLOAD)
         os.replace(tmp_meta, base + _META)  # commit point
     except BaseException:
         _cleanup(tmp_npz, tmp_meta)

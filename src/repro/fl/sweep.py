@@ -1429,11 +1429,10 @@ class SweepEngine:
         order (permuted/padded) state — the Markov `h` tuple element rides
         along as an ordinary pytree leaf — the key schedule, and the
         host-side trajectory blocks accumulated so far.  Step index =
-        rounds completed.  Multi-process: every process holds the same
-        host-side carry (the fetch edge replicates), so process 0 writes
-        and the rest skip."""
-        if jax.process_index() != 0:
-            return
+        rounds completed.  Multi-process: the fetch edge is a COLLECTIVE
+        (process_allgather for lane-sharded arrays on a process-spanning
+        mesh), so EVERY process builds the host-side tree — only the
+        filesystem write is process 0's."""
         tree = {
             "carry": {
                 "state": jax.tree_util.tree_map(_fetch, state),
@@ -1447,6 +1446,8 @@ class SweepEngine:
                     for k in (metric_blocks[0] if metric_blocks else {})},
             },
         }
+        if jax.process_index() != 0:
+            return
         extra = self._resume_extra(rounds)
         extra["t_next"] = int(t_next)
         CKPT.save_pytree(self.checkpoint_dir, int(t_next), tree, extra=extra)
@@ -1459,9 +1460,28 @@ class SweepEngine:
         with the fresh carry when no checkpoint exists yet (so
         `resume=True` is safe on the very first launch)."""
         step = CKPT.latest_step(self.checkpoint_dir)
+        if jax.process_count() > 1:
+            # Only process 0 writes, so its directory view is the
+            # authoritative one: broadcast its latest committed step and
+            # resume every process from that SAME boundary.  Without this
+            # a mid-write race (or a non-shared filesystem) would leave
+            # ranks at different t_start, dispatching different numbers
+            # of chunk programs and hanging on mismatched collectives.
+            from jax.experimental import multihost_utils
+            step = int(multihost_utils.broadcast_one_to_all(
+                np.int64(-1 if step is None else step)))
+            step = None if step < 0 else step
         if step is None:
             return 0, state, keys, [], [], []
-        saved, meta = CKPT.restore_pytree(self.checkpoint_dir, step)
+        try:
+            saved, meta = CKPT.restore_pytree(self.checkpoint_dir, step)
+        except FileNotFoundError as e:
+            raise FileNotFoundError(
+                f"process {jax.process_index()} cannot read resume "
+                f"checkpoint step {step} from {self.checkpoint_dir!r}: "
+                f"multi-process resume requires checkpoint_dir on a "
+                f"filesystem shared by every process (process 0 writes, "
+                f"the rest read)") from e
         ex = meta.get("extra", {})
         want = self._resume_extra(rounds)
         got = {k: ex.get(k) for k in want}
@@ -1682,7 +1702,7 @@ class SweepEngine:
 def run_sweep(loss_fn: Callable, params0, batches, spec: SweepSpec,
               eval_fn: Optional[Callable] = None,
               eval_every: int = 1,
-              plan: Optional[ExecutionPlan] = None,
+              plan: Optional[ExecutionPlan] = None, *,
               resume: bool = False,
               flat_state=_UNSET,
               mesh=_UNSET,
@@ -1698,8 +1718,10 @@ def run_sweep(loss_fn: Callable, params0, batches, spec: SweepSpec,
     (flat_state / mesh / chunk_rounds / async_staging) are the deprecated
     pre-plan spelling: any passed explicitly build the equivalent plan
     (bitwise-equal execution, pinned by tests/test_execution_plan.py) and
-    emit a DeprecationWarning; mixing them with plan= raises.  resume=
-    forwards to `SweepEngine.run` (preemption-safe continuation off
+    emit a DeprecationWarning; mixing them with plan= raises.  Everything
+    past plan is keyword-only, so a stray positional argument raises
+    instead of silently binding to resume.  resume= forwards to
+    `SweepEngine.run` (preemption-safe continuation off
     plan.checkpoint_dir)."""
     legacy = {k: v for k, v in dict(
         flat_state=flat_state, mesh=mesh, chunk_rounds=chunk_rounds,

@@ -41,6 +41,25 @@ import jax
 CACHE_ENV = "REPRO_COMPILATION_CACHE"
 
 
+def _already_initialized() -> bool:
+    """Whether the jax distributed runtime is already up.  Prefers the
+    public `jax.distributed.is_initialized` (jax >= 0.4.34); falls back to
+    the internal global_state on older versions, and to False when neither
+    is readable — `initialize` itself then raises if called twice, which
+    beats an ImportError at module import time."""
+    is_init = getattr(jax.distributed, "is_initialized", None)
+    if is_init is not None:
+        try:
+            return bool(is_init())
+        except Exception:
+            pass
+    try:
+        from jax._src.distributed import global_state
+        return global_state.coordinator_address is not None
+    except Exception:
+        return False
+
+
 def initialize_distributed(coordinator_address: Optional[str] = None,
                            num_processes: Optional[int] = None,
                            process_id: Optional[int] = None,
@@ -62,9 +81,8 @@ def initialize_distributed(coordinator_address: Optional[str] = None,
     jax refuses to bootstrap after any computation has executed, and even
     `jax.process_count()` would count as one.
     """
-    from jax._src.distributed import global_state
-    if global_state.coordinator_address is not None:
-        return jax.process_count() > 1    # already initialized
+    if _already_initialized():
+        return jax.process_count() > 1
     if num_processes == 1:
         return False
     if (coordinator_address is None and num_processes is None

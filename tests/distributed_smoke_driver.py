@@ -4,17 +4,24 @@ via `initialize_distributed` (gloo CPU collectives), build the
 process-spanning ("data",) sweep mesh with the unchanged
 `make_sweep_mesh`, run a tiny sharded sweep — per-process staging through
 `put_with_sharding` / `stage_batch_block` — and check it against the
-process-local unsharded engine.
+process-local unsharded engine.  With a checkpoint dir (shared by both
+processes) it also exercises the multi-process checkpoint/resume edge:
+the collective fetch in `_save_checkpoint` runs on BOTH ranks (only the
+write is rank 0's), and `resume=True` broadcasts rank 0's latest step so
+both ranks continue from the same boundary, bitwise-equal to the
+uninterrupted sharded run.
 
-Usage: distributed_smoke_driver.py <port> <rank> (always 2 processes;
-launch with XLA_FLAGS=--xla_force_host_platform_device_count=1 so each
-process owns exactly one CPU device and the mesh genuinely spans both).
+Usage: distributed_smoke_driver.py <port> <rank> [ckpt_dir] (always 2
+processes; launch with XLA_FLAGS=--xla_force_host_platform_device_count=1
+so each process owns exactly one CPU device and the mesh genuinely spans
+both).
 """
 import sys
 
 
 def main() -> None:
     port, rank = sys.argv[1], int(sys.argv[2])
+    ckpt_dir = sys.argv[3] if len(sys.argv) > 3 else None
 
     import jax
 
@@ -38,8 +45,8 @@ def main() -> None:
     assert mesh.axis_names == ("data",) and not set(
         mesh.devices.flat) <= set(jax.local_devices())
 
-    sharded = SweepEngine(loss, spec, plan=ExecutionPlan(
-        mesh=mesh, chunk_rounds=2)).run(params, batches)
+    plan = ExecutionPlan(mesh=mesh, chunk_rounds=2, checkpoint_dir=ckpt_dir)
+    sharded = SweepEngine(loss, spec, plan=plan).run(params, batches)
     local = SweepEngine(loss, spec).run(params, batches)
     np.testing.assert_allclose(np.asarray(sharded.loss),
                                np.asarray(local.loss),
@@ -47,6 +54,18 @@ def main() -> None:
     np.testing.assert_allclose(np.asarray(sharded.grad_norm),
                                np.asarray(local.grad_norm),
                                rtol=1e-6, atol=1e-7)
+    if ckpt_dir is not None:
+        # The run above committed the round-2 boundary (collective fetch on
+        # both ranks, rank-0 write); resuming off it must reproduce the
+        # uninterrupted sharded run bit-for-bit on both ranks.
+        from repro import latest_step
+        assert latest_step(ckpt_dir) == 2, latest_step(ckpt_dir)
+        resumed = SweepEngine(loss, spec, plan=plan).run(
+            params, batches, resume=True)
+        np.testing.assert_array_equal(np.asarray(sharded.loss),
+                                      np.asarray(resumed.loss))
+        np.testing.assert_array_equal(np.asarray(sharded.grad_norm),
+                                      np.asarray(resumed.grad_norm))
     print(f"DISTRIBUTED_SMOKE_OK rank={rank}")
 
 

@@ -38,9 +38,13 @@ def test_setup_compilation_cache_sets_dir(tmp_path, monkeypatch):
 
 
 @pytest.mark.slow
-def test_two_process_distributed_smoke():
+def test_two_process_distributed_smoke(tmp_path):
     root = pathlib.Path(__file__).resolve().parents[1]
     driver = str(root / "tests" / "distributed_smoke_driver.py")
+    # Shared checkpoint dir: the driver also exercises the multi-process
+    # checkpoint/resume edge (collective fetch on both ranks, rank-0
+    # write, broadcast resume step).
+    ckpt_dir = str(tmp_path / "ckpts")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [str(root / "src"), str(root / "tests")]
@@ -51,7 +55,8 @@ def test_two_process_distributed_smoke():
     with socket.socket() as s:
         s.bind(("127.0.0.1", 0))
         port = s.getsockname()[1]
-    procs = [subprocess.Popen([sys.executable, driver, str(port), str(rank)],
+    procs = [subprocess.Popen([sys.executable, driver, str(port), str(rank),
+                               ckpt_dir],
                               env=env, stdout=subprocess.PIPE,
                               stderr=subprocess.STDOUT, text=True)
              for rank in range(2)]
