@@ -399,6 +399,88 @@ def bench_workers(series, rounds: int, reps: int) -> dict:
     return out
 
 
+def lm_grid(u: int, dim: int, n_atk: int):
+    """The LM-lane showdown in miniature: one analog BEV lane plus a median
+    screening lane, STRONGEST attackers in both — the two defense routing
+    tiers (shard-local columnwise vs analog OTA) that dominate the
+    real-model lanes."""
+    lanes = [("floa", None), ("median", DefenseSpec(name="median"))]
+    cases = []
+    for i, (name, spec) in enumerate(lanes):
+        floa = FLOAConfig(
+            channel=ChannelConfig(num_workers=u, sigma=1.0,
+                                  noise_std=0.05 if spec is None else 0.0),
+            power=PowerConfig(num_workers=u, dim=dim, p_max=1.0,
+                              policy=Policy.BEV if spec is None
+                              else Policy.EF),
+            attack=AttackConfig(attack=AttackType.STRONGEST,
+                                byzantine_mask=first_n_mask(u, n_atk)))
+        cases.append(ScenarioCase(f"{name}@D{dim}", floa, 0.05, seed=500 + i,
+                                  defense=spec if spec is not None
+                                  else DefenseSpec()))
+    return cases
+
+
+def bench_lm(series, rounds: int, reps: int) -> dict:
+    """D-scaling series (--lm): the big-D regime the real-model LM lanes
+    live in, at each D in `series`, unsharded AND ("model",)-sharded over
+    every visible device.  The state is a single [D] leaf with a linear
+    loss whose per-worker gradient is O(D) to produce, so — mirroring the
+    tiny-MLP philosophy of --workers — the rows isolate how the ENGINE
+    scales with the flat dimension: the [S, U, D] slab, the standardize
+    stats reduction (psum-of-partials when sharded), the OTA combine, the
+    columnwise screening sort at D past the kernel-routing thresholds, and
+    the TILE_D ghost-column padding.  Real-model wall time (transformer
+    fwd/bwd flops) is the LM lane's own business, measured end to end by
+    examples/train_floa_lm.py; timing it here would drown the engine ops
+    the gate is meant to guard.  Timing reps are capped at 2: the D=1e7
+    rows move ~GB slabs per round on a CPU box."""
+    u, n_atk = 8, 2
+    reps = min(reps, 2)
+
+    def loss(params, b):
+        # [D]-state linear probe: grad_w = (mean(w) - t) / D * ones — O(D)
+        # per worker with a per-worker batch scalar, no [B, D] features to
+        # stage (at D=1e7 a feature matrix would be the benchmark).
+        return 0.5 * jnp.mean((jnp.mean(params["w"]) - b["t"]) ** 2)
+
+    shards_m = jax.device_count()
+    out = {}
+    print(f"# lm d-scaling: D series {list(series)}, U={u}, "
+          f"R={rounds} rounds, model_shards={shards_m}")
+    print("d,engine,lanes,cold_rounds_per_sec,warm_rounds_per_sec")
+    for d in series:
+        rng = np.random.default_rng(d % (1 << 31))
+        params = {"w": jnp.asarray(rng.normal(size=(d,)).astype(np.float32)
+                                   / np.sqrt(d))}
+        batches = {"t": rng.normal(size=(rounds, u, 1)).astype(np.float32)}
+        spec = SweepSpec.build(lm_grid(u, d, n_atk))
+        engines = {"unsharded": SweepEngine(loss, spec)}
+        row = dict(d=d, u=u, lanes=len(spec), rounds=rounds,
+                   model_shards=shards_m)
+        if shards_m > 1:
+            engines["model_sharded"] = SweepEngine(
+                loss, spec, plan=ExecutionPlan(
+                    mesh=make_sweep_mesh(shards_m, model_shards=shards_m)))
+        for name, engine in engines.items():
+            t0 = time.perf_counter()
+            engine.run(params, batches)
+            cold = time.perf_counter() - t0
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                engine.run(params, batches)
+                best = min(best, time.perf_counter() - t0)
+            total = len(spec) * rounds
+            row[name] = dict(cold_rounds_per_sec=round(total / cold, 2),
+                             warm_rounds_per_sec=round(total / best, 2))
+            print(f"{d},{name},{len(spec)},"
+                  f"{row[name]['cold_rounds_per_sec']:.1f},"
+                  f"{row[name]['warm_rounds_per_sec']:.1f}")
+        out[f"D{d}"] = row
+    return out
+
+
 _CACHE_CHILD = r"""
 import sys, time
 import jax, jax.numpy as jnp, numpy as np
@@ -619,6 +701,23 @@ def check_regressions(fresh: dict, baseline: dict,
                                      "run, skipped")
                     else:
                         gate(f"workers/{name}", sub, f_row[sub], b_row[sub])
+    for name, b_row in (baseline.get("lm") or {}).items():
+        f_row = (fresh.get("lm") or {}).get(name)
+        if f_row is None:
+            notes.append(f"lm/{name}: not in fresh run, skipped")
+        elif any(f_row.get(k) != b_row.get(k)
+                 for k in ("d", "u", "lanes", "rounds", "model_shards")):
+            # A different D series / device count is a different program
+            # shape (mirrors the workers guard).
+            notes.append(f"lm/{name}: D-series shape differs, skipped")
+        else:
+            for sub in ("unsharded", "model_sharded"):
+                if sub in b_row:
+                    if sub not in f_row:
+                        notes.append(f"lm/{name}/{sub}: not in fresh run, "
+                                     "skipped")
+                    else:
+                        gate(f"lm/{name}", sub, f_row[sub], b_row[sub])
     return fails, notes
 
 
@@ -641,6 +740,8 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
          scenario_rounds: int = 10, scenario_lanes: int = 8,
          workers: bool = False,
          workers_series: str = "10,1000,10000", workers_rounds: int = 3,
+         lm: bool = False, lm_series: str = "50000,1000000,10000000",
+         lm_rounds: int = 3,
          resume: bool = False, resume_rounds: int = 10,
          resume_lanes: int = 8,
          out_path: str = "BENCH_sweep.json",
@@ -798,6 +899,9 @@ def main(rounds: int = 25, scenarios: int = 16, sharded: bool = False,
     if workers:
         series = [int(s) for s in str(workers_series).split(",") if s]
         record["workers"] = bench_workers(series, workers_rounds, reps)
+    if lm:
+        series = [int(s) for s in str(lm_series).split(",") if s]
+        record["lm"] = bench_lm(series, lm_rounds, reps)
     if resume:
         # The raw --chunk-rounds, re-clamped against the resume grid's own
         # rounds (the headline clamp above used the headline rounds).
@@ -864,6 +968,15 @@ if __name__ == "__main__":
                     help="comma-separated U values for --workers")
     ap.add_argument("--workers-rounds", type=int, default=3,
                     help="rounds per worker-scaling engine (--workers)")
+    ap.add_argument("--lm", action="store_true",
+                    help="also bench the flat-dimension scaling series "
+                         "(mixed analog/median grid at each D, unsharded + "
+                         "model-sharded over every visible device — the "
+                         "big-D regime of the real-model LM lanes)")
+    ap.add_argument("--lm-series", default="50000,1000000,10000000",
+                    help="comma-separated D values for --lm")
+    ap.add_argument("--lm-rounds", type=int, default=3,
+                    help="rounds per D-scaling engine (--lm)")
     ap.add_argument("--resume", action="store_true",
                     help="also bench the preemption-safety machinery: "
                          "checkpointed-chunked vs plain-chunked warm "
@@ -894,7 +1007,9 @@ if __name__ == "__main__":
                scenario_rounds=args.scenario_rounds,
                scenario_lanes=args.scenario_lanes, workers=args.workers,
                workers_series=args.workers_series,
-               workers_rounds=args.workers_rounds, resume=args.resume,
+               workers_rounds=args.workers_rounds, lm=args.lm,
+               lm_series=args.lm_series, lm_rounds=args.lm_rounds,
+               resume=args.resume,
                resume_rounds=args.resume_rounds,
                resume_lanes=args.resume_lanes, out_path=args.out,
                check_against=args.check_against, tolerance=args.tolerance)

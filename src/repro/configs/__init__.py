@@ -3,7 +3,9 @@ from repro.configs.registry import (  # noqa: F401
     ARCH_MODULES,
     INPUT_SHAPES,
     PAPER_MLP,
+    flat_param_dim,
     get_config,
+    get_lm_sweep,
     get_smoke,
     shape_applicable,
 )

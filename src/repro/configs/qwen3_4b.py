@@ -37,3 +37,17 @@ def smoke() -> ModelConfig:
         n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
         d_ff=512, vocab_size=512, dtype=jnp.float32, remat=False,
     )
+
+
+def lm_sweep() -> ModelConfig:
+    """The sweep engine's real-model LM lane: a shrunk qwen3-shaped
+    transformer whose flat parameter count D ≈ 3e6 — large enough to drive
+    `floa_step_batched` / `grad_stats` / `defense_sort` past their 2^14 /
+    2^16 kernel-routing thresholds at production D, small enough that the
+    [S, U, D] gradient slab of a few-lane sweep fits host memory.  f32 and
+    remat-free so flat-state sweeps stay bitwise-reproducible."""
+    return dataclasses.replace(
+        full(model_parallel=1),
+        n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=1024, vocab_size=2048, dtype=jnp.float32, remat=False,
+    )

@@ -57,5 +57,29 @@ def get_smoke(arch: str):
     return ARCH_MODULES[arch].smoke()
 
 
+def get_lm_sweep(arch: str = "qwen3-4b"):
+    """The config an arch contributes to the sweep engine's real-model LM
+    lane (flat-state FLOA sweeps at D ~ 1e6+).  Only archs that define an
+    `lm_sweep()` variant participate; KeyError/AttributeError otherwise."""
+    return ARCH_MODULES[arch].lm_sweep()
+
+
+def flat_param_dim(cfg) -> int:
+    """Flat parameter count D of a config — the sweep engine's state-row
+    width.  Allocation-free (shape_only init), so it is cheap even for the
+    236B-class configs."""
+    import jax
+
+    from repro.launch.steps import init_model
+
+    params, _ = init_model(cfg, jax.random.PRNGKey(0), shape_only=True)
+    return sum(int(_size(x)) for x in jax.tree_util.tree_leaves(params))
+
+
+def _size(x) -> int:
+    import math
+    return math.prod(x.shape)
+
+
 def shape_applicable(cfg, shape_name: str) -> bool:
     return shape_name not in cfg.skip_shapes

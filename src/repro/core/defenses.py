@@ -32,6 +32,7 @@ paper's analog scheme avoids; the roofline benchmarks expose the difference.
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Callable, Dict, Optional, Sequence
 
 import jax
@@ -41,6 +42,19 @@ import numpy as np
 from repro.core.scenario import DEFENSE_CODES
 
 Array = jax.Array
+
+logger = logging.getLogger(__name__)
+
+# Defense families by data layout.  Column-wise defenses reduce each of the
+# D coordinates independently over the worker axis, so under a ("model",)-
+# sharded sweep they run unchanged on each shard's local column block; the
+# row-geometry defenses (Krum / multi-Krum / geometric median) score whole
+# [D]-rows by pairwise distance and need the full rows gathered first
+# (fl/sweep.py routes on this split).
+COLUMNWISE_CODES = frozenset(
+    DEFENSE_CODES[n] for n in ("mean", "median", "trimmed_mean"))
+ROW_GEOMETRY_CODES = frozenset(
+    DEFENSE_CODES[n] for n in ("krum", "multi_krum", "geometric_median"))
 
 
 def _flatten_u(grads_u):
@@ -85,7 +99,10 @@ def sorted_columns(flat: Array, use_kernel: Optional[bool] = None,
     unrolled odd-even network, larger U the bitonic stage kernel (while its
     padded U fits VMEM).  The guard is unconditional — even with
     use_kernel=True a large-U slab is NEVER routed into the unrolled
-    network, whose O(U^2) trace at U >= 1k would dwarf the sort itself."""
+    network, whose O(U^2) trace at U >= 1k would dwarf the sort itself;
+    above BITONIC_MAX_U (padded) no VMEM-resident column block exists
+    either, so the router falls back to `jnp.sort` explicitly and logs
+    once (it used to fall through silently — ROADMAP bug)."""
     u = flat.shape[0]
     if use_kernel is None:
         use_kernel = (jax.default_backend() == "tpu"
@@ -97,8 +114,28 @@ def sorted_columns(flat: Array, use_kernel: Optional[bool] = None,
         u_pad = 1 << max(u - 1, 0).bit_length()
         if u_pad <= ops.BITONIC_MAX_U:
             return ops.sort_columns_bitonic(flat, interpret=interpret)
-        # U too large for any VMEM-resident column block: fall through.
+        _log_sort_fallback_once(u, ops.BITONIC_MAX_U)
     return jnp.sort(flat, axis=0)
+
+
+_sort_fallback_logged = False
+
+
+def _log_sort_fallback_once(u: int, bitonic_max_u: int) -> None:
+    """Explicit large-U fallback notice, emitted once per process: a kernel
+    was requested (use_kernel resolved True) but U padded to a power of two
+    exceeds the bitonic kernel's VMEM ceiling, so the sort takes `jnp.sort`'s
+    generic lowering instead — correct, just not the Pallas path the caller
+    asked for.  Logged (not warned): the test suite promotes warnings to
+    errors, and this is routing telemetry, not a correctness hazard."""
+    global _sort_fallback_logged
+    if not _sort_fallback_logged:
+        _sort_fallback_logged = True
+        logger.warning(
+            "sorted_columns: U=%d pads past BITONIC_MAX_U=%d — no "
+            "VMEM-resident sorting-network kernel exists at this U, falling "
+            "back to jnp.sort (XLA generic sort). Logged once per process.",
+            u, bitonic_max_u)
 
 
 def flat_mean(flat: Array) -> Array:

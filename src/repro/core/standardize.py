@@ -81,6 +81,41 @@ def flat_scalar_stats(flat, sizes=None) -> Tuple[Array, Array]:
     return gbar, eps2
 
 
+def flat_partial_stats(flat) -> Tuple[Array, Array]:
+    """Per-shard partial sums (s1, s2) for a model-sharded flat gradient.
+
+    Under a ("model",)-sharded sweep each shard holds a [U, D_loc] column
+    block of the flat [U, D(+pad)] gradient; the scalar stats of the FULL
+    row are recovered by psum-ing these partials over the "model" axis and
+    finishing with `stats_from_partials`:
+
+        s1, s2 = flat_partial_stats(flat_local)        # shard-local
+        s1 = jax.lax.psum(s1, "model")                 # two scalars per row
+        s2 = jax.lax.psum(s2, "model")
+        gbar, eps2 = stats_from_partials(s1, s2, d)    # d = REAL (unpadded) D
+
+    Numerical contract: ghost pad columns are zero-filled, so they
+    contribute exactly 0.0 to both partial sums — padding never perturbs
+    the stats.  The psum reduces the per-shard partials in mesh order,
+    which is a DIFFERENT fp reduction tree from the unsharded single-sum
+    `flat_scalar_stats`, so the sharded stats agree to rtol (f32 summation
+    reassociation), not bitwise.  Bitwise equality is strict_numerics'
+    job: that mode all-gathers the slab and replays `flat_scalar_stats`
+    verbatim on full rows, sidestepping the partial-sum tree entirely.
+    """
+    f = flat.astype(jnp.float32)
+    return jnp.sum(f, axis=-1), jnp.sum(jnp.square(f), axis=-1)
+
+
+def stats_from_partials(s1: Array, s2: Array, d: int) -> Tuple[Array, Array]:
+    """Finish `flat_partial_stats`: same mean/variance epilogue as
+    `flat_scalar_stats` (including the 1e-20 variance floor), applied to
+    already-reduced partial sums.  `d` is the REAL (unpadded) entry count."""
+    gbar = s1 / d
+    eps2 = jnp.maximum(s2 / d - gbar**2, 1e-20)
+    return gbar, eps2
+
+
 def global_stats(gbar_i: Array, eps2_i: Array) -> Tuple[Array, Array]:
     """PS-side averaging: gbar_t = mean_i gbar_i, eps_t^2 = mean_i eps2_i."""
     return jnp.mean(gbar_i), jnp.mean(eps2_i)

@@ -1,8 +1,10 @@
 from repro.data.pipeline import (FederatedSampler, TokenBatcher,
                                  dirichlet_worker_split, iter_chunk_blocks)
 from repro.data.synthetic_digits import make_dataset, worker_split
-from repro.data.text import sample_tokens
+from repro.data.text import make_markov_tables, sample_tokens, \
+    stack_token_rounds
 
 __all__ = ["FederatedSampler", "TokenBatcher", "dirichlet_worker_split",
            "iter_chunk_blocks",
-           "make_dataset", "worker_split", "sample_tokens"]
+           "make_dataset", "worker_split", "make_markov_tables",
+           "sample_tokens", "stack_token_rounds"]

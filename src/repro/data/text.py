@@ -18,6 +18,16 @@ def make_markov_tables(vocab: int, seed: int, branch: int = 16):
     return succ
 
 
+def stack_token_rounds(rounds: int, n_seqs: int, seq_len: int, vocab: int,
+                       seed: int = 0) -> np.ndarray:
+    """[rounds, n_seqs, seq_len] int32: one independent Markov batch per FL
+    round (round t draws from seed + t), pre-stacked into the [R, ...] batch
+    layout the sweep engine consumes.  Stays a numpy array so the chunked
+    engine can slice [C, ...] blocks host-side for free."""
+    return np.stack([sample_tokens(n_seqs, seq_len, vocab, seed=seed + t)
+                     for t in range(rounds)])
+
+
 def sample_tokens(n_seqs: int, seq_len: int, vocab: int, seed: int = 0) -> np.ndarray:
     """[n_seqs, seq_len] int32 Markov sequences."""
     rng = np.random.default_rng(seed + 1)

@@ -24,12 +24,15 @@ historically raised, so callers' error handling is unchanged):
     chunk boundary there is nothing to double-buffer;
   - ``mesh`` requires ``flat_state`` (AssertionError) — only the flat scan
     is shard_mapped;
-  - ``mesh`` axis names must be ("data",), ("workers",) or
-    ("data", "workers") (AssertionError);
+  - ``mesh`` axis names must be a subset of ("data", "workers", "model")
+    in that order, non-empty (AssertionError);
   - ``worker_shards > 1`` requires a mesh carrying a "workers" axis of
     exactly that size (ValueError); left at the default 1 it is derived
     from the mesh, so `ExecutionPlan(mesh=make_sweep_mesh(8,
     worker_shards=4))` alone is enough.
+  - ``model_shards > 1`` likewise requires a mesh carrying a "model" axis
+    of exactly that size (ValueError), and is derived from the mesh when
+    left at 1.
 """
 from __future__ import annotations
 
@@ -38,7 +41,9 @@ from typing import Optional
 
 from jax.sharding import Mesh
 
-_SWEEP_MESH_AXES = (("data",), ("workers",), ("data", "workers"))
+_SWEEP_MESH_AXES = (("data",), ("workers",), ("data", "workers"),
+                    ("model",), ("data", "model"), ("workers", "model"),
+                    ("data", "workers", "model"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,9 +57,10 @@ class ExecutionPlan:
                     path); False keeps the PR-1 tree-state reference.
     strict_numerics pin the standardization stats' fp reduction tree so
                     every strategy replays the same trajectory bitwise.
-    mesh            optional sweep mesh — 1-D ("data",) shards the lane
-                    axis, 1-D ("workers",) shards the worker axis, 2-D
-                    ("data", "workers") shards both (see
+    mesh            optional sweep mesh — "data" shards the lane axis,
+                    "workers" the worker axis, "model" the flat-parameter
+                    (D) axis; any subset composes, up to the 3-D
+                    ("data", "workers", "model") mesh (see
                     `launch.mesh.make_sweep_mesh`).
     grouped_dispatch  static per-defense-family lane partition (vs the
                     per-lane lax.switch reference).
@@ -63,6 +69,13 @@ class ExecutionPlan:
     worker_shards   shard the [S, U, D] slab's worker axis over the mesh's
                     "workers" axis; the OTA combine becomes a psum over
                     worker shards.  Derived from the mesh when left at 1.
+    model_shards    shard the flat [S, D] state's (and the slab's) D axis
+                    over the mesh's "model" axis — D is zero-padded once,
+                    pre-jit, to a multiple of model_shards * TILE_D, and
+                    the OTA combine / standardization stats / column-wise
+                    screening run shard-local over D (stats psum partial
+                    sums; see core.standardize.stats_from_partials).
+                    Derived from the mesh when left at 1.
     checkpoint_dir  directory for preemption-safe resume checkpoints: the
                     full resume carry (state, keys, round offset, host-side
                     trajectory blocks) snapshots at chunk boundaries via
@@ -86,6 +99,7 @@ class ExecutionPlan:
     worker_shards: int = 1
     checkpoint_dir: Optional[str] = None
     checkpoint_every_chunks: int = 1
+    model_shards: int = 1
 
     def __post_init__(self):
         if self.chunk_rounds is not None and self.chunk_rounds < 1:
@@ -136,6 +150,24 @@ class ExecutionPlan:
                     f"worker_shards={self.worker_shards} needs a mesh with a "
                     f'"workers" axis of that size; got '
                     f'{None if self.mesh is None else dict(self.mesh.shape)}')
+        mesh_model = (dict(self.mesh.shape).get("model", 1)
+                      if self.mesh is not None else 1)
+        if self.model_shards == 1 and mesh_model > 1:
+            # Same derivation for the model-shard count.
+            object.__setattr__(self, "model_shards", mesh_model)
+        if self.model_shards != 1:
+            if self.model_shards < 1:
+                raise ValueError(
+                    f"model_shards must be >= 1, got {self.model_shards}")
+            if not self.flat_state:
+                raise ValueError(
+                    "model_shards > 1 requires the flat-state path "
+                    "(flat_state=True)")
+            if mesh_model != self.model_shards:
+                raise ValueError(
+                    f"model_shards={self.model_shards} needs a mesh with a "
+                    f'"model" axis of that size; got '
+                    f'{None if self.mesh is None else dict(self.mesh.shape)}')
 
     @property
     def data_shards(self) -> int:
@@ -147,3 +179,7 @@ class ExecutionPlan:
     @property
     def worker_sharded(self) -> bool:
         return self.worker_shards > 1
+
+    @property
+    def model_sharded(self) -> bool:
+        return self.model_shards > 1

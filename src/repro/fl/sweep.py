@@ -101,7 +101,7 @@ from repro.fl.plan import ExecutionPlan
 from repro.fl.trainer import RoundLog
 from repro.launch.distributed import fetch as _fetch
 from repro.launch.mesh import lane_sharding, put_with_sharding, \
-    replicated_sharding, stage_batch_block
+    replicated_sharding, stage_batch_block, sweep_state_sharding
 
 Array = jax.Array
 
@@ -492,6 +492,70 @@ class _WorkerShards:
         return total + bias_row[:, None] + eps[:, None] * noise_row
 
 
+class _ModelShards:
+    """Flat-parameter (D) axis sharding arithmetic for the flat-state scan.
+
+    Built once per compiled program (D comes off the params template); every
+    method below runs INSIDE the shard_mapped scan, on one device's column
+    block of the ("model",) mesh axis.  D is zero-padded once, pre-jit, to
+    d_pad = shards * d_loc with d_loc a multiple of the Pallas TILE_D — the
+    "model" split is always even and every shard's column block stays
+    kernel-tile aligned.  Ghost columns carry zeros for the whole run: the
+    state pads with zeros, the pad region is invisible to the loss (the row
+    unflatten reads exactly D entries, so its gradient there is
+    structurally zero), the stats' partial sums see exact 0.0
+    contributions, and the scan body re-masks the aggregate each round (the
+    de-standardization bias is a per-lane scalar broadcast that would
+    otherwise smear onto ghost columns).
+
+    RNG discipline: [D]-shaped draws (receiver noise, jamming, the
+    colluding cohort's direction) always happen at the FULL real D on every
+    shard and are then pad+sliced to the local block — the key consumption
+    schedule, and every drawn value, is identical to the unsharded
+    engine's (mirroring _WorkerShards' full-U draw rule).
+    """
+
+    def __init__(self, d: int, shards: int, tile_d: Optional[int] = None):
+        if tile_d is None:
+            from repro.kernels.floa_aggregate import TILE_D as tile_d
+        self.d = d
+        self.shards = shards
+        chunk = shards * tile_d
+        self.d_pad = -(-d // chunk) * chunk
+        self.d_loc = self.d_pad // shards
+
+    def pad_cols(self, x: Array) -> Array:
+        """Zero-pad the last (D) axis up to d_pad.  Host- and trace-safe."""
+        pad = self.d_pad - x.shape[-1]
+        if pad == 0:
+            return x
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+    def local_cols(self, x: Array) -> Array:
+        """[..., D or d_pad] full columns -> this shard's [..., d_loc]
+        block (zero-padding the real-D tail first, so the last shard's
+        ghost columns are exact zeros)."""
+        if x.shape[-1] != self.d_pad:
+            x = self.pad_cols(x)
+        midx = jax.lax.axis_index("model")
+        return jax.lax.dynamic_slice_in_dim(
+            x, midx * self.d_loc, self.d_loc, axis=x.ndim - 1)
+
+    def gather_cols(self, x: Array) -> Array:
+        """[..., d_loc] local block -> [..., D] full REAL columns
+        (all-gather over "model"; ghost columns sliced off — they sit at
+        the tail of the concatenated blocks, positions D..d_pad-1)."""
+        full = jax.lax.all_gather(x, "model", axis=x.ndim - 1, tiled=True)
+        return full[..., :self.d]
+
+    def col_mask(self) -> Array:
+        """[d_loc] bool: True on this shard's REAL columns.  where(mask,
+        x, 0) is a bitwise identity on real columns, so re-masking the
+        aggregate never perturbs them."""
+        midx = jax.lax.axis_index("model")
+        return midx * self.d_loc + jnp.arange(self.d_loc) < self.d
+
+
 class SweepEngine:
     """Builds (and caches) the jitted scan-over-rounds x vmap-over-scenarios
     program for one (loss_fn, spec, eval_fn) triple.  Reuse the instance to
@@ -539,14 +603,15 @@ class SweepEngine:
     strategy's stats reduction differently and the strategies agree to fp
     rounding only.
 
-    mesh: optional sweep mesh (see `launch.mesh.make_sweep_mesh`) — 1-D
-    ("data",) shards the lane axis, 1-D ("workers",) the worker axis, 2-D
-    ("data", "workers") both.  The flat-state scan is shard_mapped over the
-    mesh; with a "data" axis, S is padded up to a multiple of the lane-shard
-    count with ghost lanes (replicas of the last scenario) that are dropped
-    from the returned SweepResult.  Requires flat_state=True.  Contract:
-    every real lane's trajectory matches the unsharded engine (rtol 1e-6;
-    bitwise in practice and under strict_numerics).
+    mesh: optional sweep mesh (see `launch.mesh.make_sweep_mesh`) — "data"
+    shards the lane axis, "workers" the worker axis, "model" the flat-
+    parameter (D) axis; any subset composes, up to the 3-D
+    ("data", "workers", "model") mesh.  The flat-state scan is shard_mapped
+    over the mesh; with a "data" axis, S is padded up to a multiple of the
+    lane-shard count with ghost lanes (replicas of the last scenario) that
+    are dropped from the returned SweepResult.  Requires flat_state=True.
+    Contract: every real lane's trajectory matches the unsharded engine
+    (rtol 1e-6; bitwise in practice and under strict_numerics).
 
     worker_shards=W > 1 (derived from the mesh's "workers" axis) shards the
     [S, U, D] gradient slab's WORKER axis: each shard computes gradients for
@@ -566,6 +631,24 @@ class SweepEngine:
     strict_numerics the engine all-gathers the full slab up front and
     replays the unsharded reduction order verbatim — bitwise equality, at
     the cost of materializing [S, U, D] per device.
+
+    model_shards=M > 1 (derived from the mesh's "model" axis) shards the
+    flat [S, D] state's and the [S, U, D] slab's PARAMETER axis: D is
+    zero-padded once, pre-jit, to a multiple of M * TILE_D (ghost columns
+    stay exactly zero — see `_ModelShards`), per-worker gradients come off
+    all-gathered full-D rows (the grad trace is the unsharded engine's),
+    the standardization stats reduce per-shard partial sums with two scalar
+    psums per worker (`core.standardize.flat_partial_stats` documents the
+    numerical contract), every [D]-shaped RNG draw happens at the full real
+    D on every shard (identical key schedule), column-wise screening
+    defenses (mean / median / trimmed-mean) run shard-local over their
+    column block, row-geometry defenses (Krum family, geometric median)
+    all-gather full rows first, and the final unflatten slices the real
+    columns back out.  Composes with "data" and "workers" into up-to-3-D
+    meshes.  Contract: model-sharded == unsharded at rtol ~1e-6 per round
+    (the stats' partial-sum tree reassociates f32 addition); under
+    strict_numerics the engine gathers full rows, replays the unsharded
+    math verbatim, and re-slices only the carry — bitwise equality.
 
     grouped_dispatch=True (default) partitions the lanes of a defense-
     carrying sweep by defense code at BUILD time (codes are concrete config):
@@ -675,6 +758,9 @@ class SweepEngine:
         shards = plan.data_shards
         self._ws = (_WorkerShards(self._u, plan.worker_shards)
                     if plan.worker_sharded else None)
+        # Model-axis sharding arithmetic is built lazily in _build: the
+        # flat parameter count D only arrives with the params template.
+        self._ms = None
         # Grouped dispatch only matters when a screening defense shares the
         # grid with other families; pure-FLOA sweeps keep the untouched
         # (unpermuted) fused path regardless of the flag.
@@ -802,7 +888,8 @@ class SweepEngine:
             jax.random.fold_in(k, _FOLD_H_INIT), sg))(keys, sp.sigma)
 
     def _make_analog_step(self, ws: Optional[_WorkerShards] = None,
-                          grouped: bool = False):
+                          grouped: bool = False,
+                          ms: Optional[_ModelShards] = None):
         """The analog leg of one round — ONE definition shared by all four
         builders (tree/flat state x grouped/switch dispatch), which is what
         keeps their per-lane math (and the equivalence contracts) aligned.
@@ -827,6 +914,14 @@ class SweepEngine:
         With ws (worker sharding, non-strict), fg is the LOCAL
         [S_g, u_loc, D] slice, the draws still happen at full U (replicated
         — identical key schedule), and the combine is `ws.psum_combine`.
+
+        With ms (model sharding, non-strict), fg's LAST axis is the local
+        [.., d_loc] column block; every [D]-shaped draw still happens at
+        the full real D (identical key schedule) and is pad+sliced local,
+        the combine runs on local columns, and the aggregate (and the
+        fused route's w_new) is re-masked so ghost columns stay exactly
+        zero — the de-standardization bias is a per-lane scalar broadcast
+        that would otherwise land on them.
         """
         any_noise = self.spec.analog_noise if grouped else self.spec.any_noise
         any_jam = (self.spec.analog_jamming if grouped
@@ -835,7 +930,9 @@ class SweepEngine:
 
         def step(wg, fg, sub_g, spg, gbar_i, eps2_i, part=None, h_abs=None):
             n_g = fg.shape[0]
-            dim = fg.shape[-1]
+            # [D]-shaped draws happen at the full real D even when fg's
+            # columns are a local block (ms) — identical key schedule.
+            dim = ms.d if ms is not None else fg.shape[-1]
             if part is None:
                 gbar, eps2 = jax.vmap(S.global_stats)(gbar_i, eps2_i)
             else:
@@ -855,22 +952,38 @@ class SweepEngine:
                     lambda k: jax.random.normal(k, (dim,), jnp.float32)
                 )(ks[:, 1])
                 noise_row = noise_std[:, None] * z
+                if ms is not None:
+                    noise_row = ms.local_cols(noise_row)
             else:
-                noise_row = jnp.zeros((n_g, dim), jnp.float32)
+                noise_row = jnp.zeros((n_g, fg.shape[-1]), jnp.float32)
             bias_row = bias_w * gbar
             if ws is not None:
                 gagg = ws.psum_combine(coeff, fg, noise_row, bias_row, eps)
             else:
                 if wg is not None and not (any_jam or any_dir):
-                    return batched_floa_step(
+                    w_new, gagg = batched_floa_step(
                         wg, spg.alpha, coeff, fg, noise_row, bias_row, eps)
+                    if ms is not None:
+                        mask = ms.col_mask()
+                        w_new = jnp.where(mask, w_new, 0.0)
+                        gagg = jnp.where(mask, gagg, 0.0)
+                    return w_new, gagg
                 gagg = batched_floa_combine(
                     coeff, fg, noise_row, bias_row, eps)
+            if ms is not None:
+                # The bias is a per-lane scalar broadcast: re-zero the
+                # ghost columns (bitwise identity on real ones).  Every
+                # later additive term (jam / direction) is already zero
+                # there, so one mask suffices.
+                gagg = jnp.where(ms.col_mask(), gagg, 0.0)
             if any_jam:
                 n2 = jax.vmap(
                     lambda k: jax.random.normal(k, (dim,), jnp.float32)
                 )(ks[:, 2])
-                gagg = gagg + jam_std[:, None] * n2
+                jam_row = jam_std[:, None] * n2
+                if ms is not None:
+                    jam_row = ms.local_cols(jam_row)
+                gagg = gagg + jam_row
             if any_dir:
                 # The cohort's shared rank-1 payload, injected after the OTA
                 # combine: COLLUDING transmits a cohort-common unit-RMS
@@ -884,6 +997,10 @@ class SweepEngine:
                 rms = jnp.sqrt(jnp.mean(jnp.square(d), axis=-1,
                                         keepdims=True))
                 d = d / jnp.maximum(rms, 1e-20)
+                if ms is not None:
+                    # Unit-RMS normalization happened at the full real D
+                    # (bitwise the unsharded direction); only then slice.
+                    d = ms.local_cols(d)
                 hmaskf = (~spg.byz_mask).astype(jnp.float32)
                 if part is not None:
                     hmaskf = hmaskf * part.astype(jnp.float32)
@@ -903,33 +1020,39 @@ class SweepEngine:
 
         return step
 
-    def _scan_driver(self, one_round, eval_lane, finalize=None):
+    def _scan_driver(self, one_round, eval_lane, finalize=None,
+                     eval_prep=None):
         """Shared scan-over-rounds driver for both state representations.
 
         Key splitting, the FLTrainer.run eval schedule, and the
         (state, keys, t) carry are identical for the tree- and flat-state
         paths; only the per-round step (`one_round`), the per-lane eval view
-        (`eval_lane`, None to skip eval), and the final state -> stacked
-        params mapping (`finalize`) differ.
+        (`eval_lane`, None to skip eval; `eval_prep`, an optional state ->
+        eval-rows mapping applied BEFORE the per-lane vmap — the
+        model-sharded path gathers full rows there, keeping collectives out
+        of the eval cond), and the final state -> stacked params mapping
+        (`finalize`) differ.
 
         Returns (run, scan_chunk, finalize):
 
           run(state, keys, batches, sp)  — the monolithic program: one scan
-              over all R rounds, finalized.
+              over all R rounds, returning the raw final state (finalize is
+              composed OUTSIDE — by `_build`, after any shard_map — so the
+              state -> params mapping never has to trace under the mesh).
           scan_chunk(state, keys, t0, rounds_total, batches, sp) — one chunk
               of the scan-of-chunks execution: the SAME scan body over a
               [C, ...] batch block starting at absolute round t0 of
               rounds_total, returning the raw (state, keys) carry for the
-              next chunk instead of finalizing.  t0/rounds_total are traced
-              int32 scalars, so every full-size chunk shares one compile.
+              next chunk.  t0/rounds_total are traced int32 scalars, so
+              every full-size chunk shares one compile.
           finalize — the final state -> stacked-params mapping (None for the
               tree path, whose state already is the params pytree); applied
-              once after the last chunk.
+              once after the last chunk (or after the monolithic run).
 
-        The monolithic run is scan_chunk at (t0=0, rounds_total=R) plus
-        finalize, so the two execution modes share the per-round trace by
-        construction — the chunked==monolithic equivalence contract reduces
-        to lax.scan's own carry semantics.
+        The monolithic run is scan_chunk at (t0=0, rounds_total=R), so the
+        two execution modes share the per-round trace by construction — the
+        chunked==monolithic equivalence contract reduces to lax.scan's own
+        carry semantics.
         """
         eval_every = self.eval_every
 
@@ -938,21 +1061,24 @@ class SweepEngine:
             The lax.cond skips the eval compute entirely on off-schedule
             rounds.  Metrics are cast to f32 so the NaN sentinel is
             representable (an integer metric would silently read as a
-            plausible value)."""
+            plausible value).  eval_prep runs OUTSIDE the cond: its
+            collectives (the model-sharded full-row gather) must execute
+            unconditionally so every mesh shard agrees on the program."""
             if eval_lane is None:
                 return {}
+            rows = state if eval_prep is None else eval_prep(state)
 
             def as_f32(s_):
                 return jax.tree_util.tree_map(
                     lambda x: x.astype(jnp.float32), jax.vmap(eval_lane)(s_))
 
-            shapes = jax.eval_shape(as_f32, state)
+            shapes = jax.eval_shape(as_f32, rows)
             blank = jax.tree_util.tree_map(
                 lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes)
             due = (t == rounds - 1)
             if eval_every > 0:
                 due = due | (t % eval_every == 0)
-            return jax.lax.cond(due, as_f32, lambda _: blank, state)
+            return jax.lax.cond(due, as_f32, lambda _: blank, rows)
 
         def scan_chunk(state, keys, t0, rounds_total, batches, sp):
             def body(carry, batch):
@@ -971,11 +1097,44 @@ class SweepEngine:
             rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
             state, _, loss, gn, metrics = scan_chunk(
                 state, keys, jnp.int32(0), jnp.int32(rounds), batches, sp)
-            if finalize is not None:
-                state = finalize(state)
             return state, loss, gn, metrics
 
         return run, scan_chunk, finalize
+
+    def _flat_epilogue(self, unflatten_row, ms: Optional[_ModelShards]):
+        """(eval_prep, eval_lane, finalize) for the flat-state builders.
+
+        Without model sharding these are the historical mappings verbatim
+        (eval_prep None).  With ms, eval gathers full real-D rows before
+        the per-lane vmap (`eval_prep` — the h tuple element, when present,
+        is dropped there, which eval never consumed anyway), and finalize —
+        which `_build` composes OUTSIDE the shard_map, on the global
+        [S, d_pad] state — slices the real columns before unflattening.
+        """
+        eval_fn = self.eval_fn
+        any_markov = self.spec.any_markov
+        if ms is not None:
+            d = ms.d
+            if any_markov:
+                eval_prep = lambda st: ms.gather_cols(st[0])
+                finalize = lambda st: jax.vmap(unflatten_row)(st[0][:, :d])
+            else:
+                eval_prep = ms.gather_cols
+                finalize = lambda st: jax.vmap(unflatten_row)(st[:, :d])
+            eval_lane = (None if eval_fn is None
+                         else lambda wr: eval_fn(unflatten_row(wr)))
+        elif any_markov:
+            eval_prep = None
+            eval_lane = (None if eval_fn is None
+                         else lambda st: eval_fn(unflatten_row(st[0])))
+            finalize = lambda st: jax.vmap(unflatten_row)(st[0])
+        else:
+            eval_prep = None
+            eval_lane = (None if eval_fn is None
+                         else lambda wr: eval_fn(unflatten_row(wr)))
+            # The only unflatten outside the loss closure: once, at the end.
+            finalize = jax.vmap(unflatten_row)
+        return eval_prep, eval_lane, finalize
 
     def _make_run_grouped(self, sizes):
         """Tree-state path with grouped defense dispatch: the per-round
@@ -1078,10 +1237,15 @@ class SweepEngine:
         # Worker sharding: strict mode all-gathers the full slab up front
         # and replays the unsharded reduction order verbatim (bitwise
         # contract); the default keeps the slab local and distributes the
-        # combine as a psum.
+        # combine as a psum.  Model sharding follows the same rule over the
+        # column axis: strict gathers full rows and re-slices only the
+        # carry; the default runs the combine / stats / column-wise screens
+        # on each shard's local column block.
         ws = self._ws
         ws_run = None if strict else ws
-        analog_step = self._make_analog_step(ws_run, grouped=True)
+        ms = self._ms
+        ms_run = None if strict else ms
+        analog_step = self._make_analog_step(ws_run, grouped=True, ms=ms_run)
         kernels = self._digital_group_kernels()
         any_markov = self.spec.any_markov
         any_partial = self.spec.any_partial
@@ -1093,6 +1257,14 @@ class SweepEngine:
 
         def one_round(state, batch, sub_s, sp: SC.ScenarioParams):
             w = state[0] if any_markov else state
+            if ms is not None:
+                # Gradients always come off the FULL real-D rows: the
+                # gather reconstructs exactly the unsharded row values, so
+                # the per-worker grad trace is the unsharded engine's.
+                # Strict mode then keeps everything full-width (re-slicing
+                # only the carry at the end — the bitwise contract);
+                # the default re-slices the slab to this shard's columns.
+                w = ms.gather_cols(w)
             if ws is None:
                 grads = jax.vmap(
                     lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
@@ -1105,6 +1277,9 @@ class SweepEngine:
                 )(w)  # [S, u_loc, D]
                 if strict:
                     grads = ws.gather_slab(grads)
+            if ms_run is not None:
+                grads = ms.local_cols(grads)
+                w = state[0] if any_markov else state  # back to local cols
             if strict and has_analog:
                 grads = jax.lax.optimization_barrier(grads)
             if any_markov:
@@ -1122,6 +1297,18 @@ class SweepEngine:
                     if strict:
                         gbar_i, eps2_i = jax.vmap(
                             lambda g: S.flat_scalar_stats(g, sizes))(fg)
+                    elif ms_run is not None:
+                        # Shard-local partial sums -> two scalar psums per
+                        # worker over "model" (ghost columns contribute
+                        # exactly 0.0); the shared epilogue recovers the
+                        # full-row stats.  See standardize.flat_partial_stats
+                        # for the fp contract (rtol vs the single-sum path).
+                        s1, s2 = S.flat_partial_stats(fg)
+                        s1 = jax.lax.psum(s1, "model")
+                        s2 = jax.lax.psum(s2, "model")
+                        gbar_i, eps2_i = S.stats_from_partials(s1, s2, ms.d)
+                        if ws_run is not None:
+                            gbar_i, eps2_i = ws.gather_stats(gbar_i, eps2_i)
                     else:
                         gbar_i, eps2_i = jax.vmap(
                             lambda g: S.flat_scalar_stats(g))(fg)
@@ -1134,6 +1321,15 @@ class SweepEngine:
                 else:
                     fg_full = (ws.gather_slab(fg) if ws_run is not None
                                else fg)
+                    # Column-wise screens (mean/median/trimmed-mean) are
+                    # per-coordinate over the worker axis, so they run on
+                    # the local column block as-is; row-geometry screens
+                    # (Krum family, geometric median) score whole rows by
+                    # pairwise distance and need the full columns gathered.
+                    row_geo = (ms_run is not None
+                               and code not in DEF.COLUMNWISE_CODES)
+                    if row_geo:
+                        fg_full = ms.gather_cols(fg_full)
                     flipped = _digital_flip(fg_full, spg)
                     if any_partial:
                         gagg_g = kernels[code](flipped, spg.def_trim,
@@ -1142,25 +1338,36 @@ class SweepEngine:
                     else:
                         gagg_g = kernels[code](flipped, spg.def_trim,
                                                spg.def_f, spg.def_multi)
+                    if row_geo:
+                        gagg_g = ms.local_cols(gagg_g)
+                    elif ms_run is not None:
+                        # Column-wise outputs on all-zero ghost columns are
+                        # zero in exact arithmetic; the mask makes the
+                        # invariant unconditional (bitwise identity on real
+                        # columns).
+                        gagg_g = jnp.where(ms.col_mask(), gagg_g, 0.0)
                     w_new_g = wg - spg.alpha[:, None] * gagg_g
                 w_parts.append(w_new_g)
                 g_parts.append(gagg_g)
             w_new = jnp.concatenate(w_parts, axis=0)
             gagg = jnp.concatenate(g_parts, axis=0)
-            gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
-            loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
+            if ms_run is not None:
+                gn = jnp.sqrt(jax.lax.psum(
+                    jnp.sum(jnp.square(gagg), axis=-1), "model"))
+                loss = jax.vmap(lambda wr: flat_loss(wr, batch))(
+                    ms.gather_cols(w_new))
+            else:
+                gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
+                loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
+            if ms is not None and strict:
+                w_new = ms.local_cols(w_new)
             new_state = (w_new, h_new) if any_markov else w_new
             return new_state, loss, gn
 
-        if any_markov:
-            eval_lane = (None if eval_fn is None
-                         else lambda st: eval_fn(unflatten_row(st[0])))
-            finalize = lambda st: jax.vmap(unflatten_row)(st[0])
-        else:
-            eval_lane = (None if eval_fn is None
-                         else lambda wr: eval_fn(unflatten_row(wr)))
-            finalize = jax.vmap(unflatten_row)
-        return self._scan_driver(one_round, eval_lane, finalize=finalize)
+        eval_prep, eval_lane, finalize = self._flat_epilogue(
+            unflatten_row, ms)
+        return self._scan_driver(one_round, eval_lane, finalize=finalize,
+                                 eval_prep=eval_prep)
 
     def _make_run(self, sizes):
         """PR-1 tree-state path: params stay a pytree; every round pays the
@@ -1266,10 +1473,15 @@ class SweepEngine:
         # whose defenses are order statistics over the full worker axis)
         # all-gathers the slab right after the local gradient pass and then
         # runs the unsharded math verbatim; the default keeps the slab local
-        # — scalar stats all-gather, the OTA combine psums.
+        # — scalar stats all-gather, the OTA combine psums.  Model sharding
+        # follows the same split over the column axis (the all-digital and
+        # mixed-select legs keep full columns for the lax.switch selector —
+        # it may contain row-geometry screens — and re-slice its output).
         ws = self._ws
         ws_run = None if strict else ws
-        analog_step = self._make_analog_step(ws_run)
+        ms = self._ms
+        ms_run = None if strict else ms
+        analog_step = self._make_analog_step(ws_run, ms=ms_run)
         # Jamming and the directional cohort land AFTER the combine (neither
         # fuses into `batched_floa_step`), and defense lanes select their
         # screening aggregate before the update — those sweeps take the
@@ -1285,19 +1497,27 @@ class SweepEngine:
             return loss_fn(unflatten_row(w_row), batch)
 
         def one_round(state, batch, sub_s, sp: SC.ScenarioParams):
-            w = state[0] if any_markov else state
+            w_loc = state[0] if any_markov else state
+            # Under model sharding gradients always come off the FULL
+            # real-D rows — the gather reconstructs exactly the unsharded
+            # row values, so the per-worker grad trace is the unsharded
+            # engine's.  `w` below is the width the round's update math
+            # runs at: full columns in strict mode (re-slicing only the
+            # carry — the bitwise contract), local columns otherwise.
+            w_full = ms.gather_cols(w_loc) if ms is not None else w_loc
+            w = w_loc if ms_run is not None else w_full
             # 1. per-worker gradients, already flat: [S, U, D] (the local
             # [S, u_loc, D] slice under worker sharding).
             if ws is None:
                 grads = jax.vmap(
                     lambda wr: per_worker_grads(flat_loss, wr, batch, u)[0]
-                )(w)
+                )(w_full)
             else:
                 lb = ws.local_batch(batch)
                 grads = jax.vmap(
                     lambda wr: per_worker_grads(flat_loss, wr, lb,
                                                 ws.u_loc)[0]
-                )(w)
+                )(w_full)
                 if strict or all_digital:
                     grads = ws.gather_slab(grads)
             if any_markov:
@@ -1306,16 +1526,39 @@ class SweepEngine:
                 h_new, h_abs = None, None
             part = part_draw(sub_s, sp) if any_partial else None
 
+            def outputs(w_new, gagg):
+                """gn / loss / carry epilogue, shared by every leg.  With
+                local columns the squared norm psums over "model" and the
+                loss reads gathered rows; strict model sharding computed
+                full-width and re-slices only the carry."""
+                if ms_run is not None:
+                    gn = jnp.sqrt(jax.lax.psum(
+                        jnp.sum(jnp.square(gagg), axis=-1), "model"))
+                    loss = jax.vmap(lambda wr: flat_loss(wr, batch))(
+                        ms.gather_cols(w_new))
+                else:
+                    gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
+                    loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
+                if ms is not None and strict:
+                    w_new = ms.local_cols(w_new)
+                new_state = (w_new, h_new) if any_markov else w_new
+                return new_state, loss, gn
+
             # All-digital sweeps skip the analog leg entirely (stats,
             # channel draw, coefficients, combine — their outputs would be
             # discarded by the defense select anyway, and XLA cannot DCE
-            # through the per-lane jnp.where).
+            # through the per-lane jnp.where).  The selector always sees
+            # full columns (grads were never column-sliced on this leg);
+            # its output re-slices local, ghost columns exact zeros.
             if all_digital:
                 gagg = digital_select(None, grads, sp, part)
+                if ms_run is not None:
+                    gagg = ms.local_cols(gagg)
                 w_new = w - sp.alpha[:, None] * gagg
-                gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
-                loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
-                return w_new, loss, gn
+                return outputs(w_new, gagg)
+
+            if ms_run is not None:
+                grads = ms.local_cols(grads)
 
             # 2. standardization handshake.  strict_numerics pins the fp
             # reduction tree to the tree-state path's (materialization
@@ -1327,6 +1570,16 @@ class SweepEngine:
                 grads = jax.lax.optimization_barrier(grads)
                 gbar_i, eps2_i = jax.vmap(
                     lambda g: S.flat_scalar_stats(g, sizes))(grads)
+            elif ms_run is not None:
+                # Shard-local partial sums -> two scalar psums per worker
+                # over "model" (ghost columns contribute exactly 0.0); see
+                # standardize.flat_partial_stats for the fp contract.
+                s1, s2 = S.flat_partial_stats(grads)
+                s1 = jax.lax.psum(s1, "model")
+                s2 = jax.lax.psum(s2, "model")
+                gbar_i, eps2_i = S.stats_from_partials(s1, s2, ms.d)
+                if ws_run is not None:
+                    gbar_i, eps2_i = ws.gather_stats(gbar_i, eps2_i)
             else:
                 gbar_i, eps2_i = jax.vmap(
                     lambda g: S.flat_scalar_stats(g))(grads)
@@ -1346,24 +1599,26 @@ class SweepEngine:
                 if digital_select is not None:
                     slab = (ws.gather_slab(grads) if ws_run is not None
                             else grads)
-                    gagg = digital_select(gagg, slab, sp, part)
+                    if ms_run is not None:
+                        # The switch selector may contain row-geometry
+                        # screens: feed it full columns, slice its output,
+                        # and merge with the (local) analog aggregate —
+                        # replicating the selector's own defense==0 merge.
+                        slab = ms.gather_cols(slab)
+                        dig = ms.local_cols(
+                            digital_select(None, slab, sp, part))
+                        gagg = jnp.where((sp.defense == 0)[:, None],
+                                         gagg, dig)
+                    else:
+                        gagg = digital_select(gagg, slab, sp, part)
                 w_new = w - sp.alpha[:, None] * gagg
 
-            gn = jnp.sqrt(jnp.sum(jnp.square(gagg), axis=-1))
-            loss = jax.vmap(lambda wr: flat_loss(wr, batch))(w_new)
-            new_state = (w_new, h_new) if any_markov else w_new
-            return new_state, loss, gn
+            return outputs(w_new, gagg)
 
-        if any_markov:
-            eval_lane = (None if eval_fn is None
-                         else lambda st: eval_fn(unflatten_row(st[0])))
-            finalize = lambda st: jax.vmap(unflatten_row)(st[0])
-        else:
-            eval_lane = (None if eval_fn is None
-                         else lambda wr: eval_fn(unflatten_row(wr)))
-            # The only unflatten outside the loss closure: once, at the end.
-            finalize = jax.vmap(unflatten_row)
-        return self._scan_driver(one_round, eval_lane, finalize=finalize)
+        eval_prep, eval_lane, finalize = self._flat_epilogue(
+            unflatten_row, ms)
+        return self._scan_driver(one_round, eval_lane, finalize=finalize,
+                                 eval_prep=eval_prep)
 
     def _build(self, template):
         """Compile-cache the run programs (lazy: needs the params template).
@@ -1374,6 +1629,10 @@ class SweepEngine:
         first call, so an engine only ever pays for the mode it runs."""
         self._template = template
         unflatten_row, sizes = make_row_unflatten(template)
+        # Model-shard arithmetic needs D (= sum of the template leaf
+        # sizes), so it is born here rather than in __init__.
+        self._ms = (_ModelShards(sum(sizes), self.plan.model_shards)
+                    if self.plan.model_sharded else None)
         if self.flat_state:
             run, chunk, final = (
                 self._make_run_flat_grouped(unflatten_row, sizes)
@@ -1388,15 +1647,26 @@ class SweepEngine:
             # axis 1 on the [R, S]-stacked scan outputs, batches replicated.
             # A mesh without a "data" axis (pure worker sharding) keeps
             # every operand replicated over the mesh — only the scan body's
-            # own all_gather/psum collectives distribute work.
+            # own all_gather/psum collectives distribute work.  With a
+            # "model" axis the flat [S, D(+pad)] state additionally splits
+            # its column axis (the Markov `h` tuple element stays
+            # lane-only: its worker axis is never column-sharded); loss /
+            # grad-norm / metrics come out replicated over "model" — every
+            # shard computes them from psummed or gathered full rows.
             has_data = "data" in self.mesh.axis_names
             lane = P("data") if has_data else P()
             lane_t = P(None, "data") if has_data else P()
             rep = P()
+            if "model" in self.mesh.axis_names:
+                w_spec = P("data" if has_data else None, "model")
+                state_spec = ((w_spec, lane) if self.spec.any_markov
+                              else w_spec)
+            else:
+                state_spec = lane
             run = shard_map(
                 run, mesh=self.mesh,
-                in_specs=(lane, lane, rep, lane),
-                out_specs=(lane, lane_t, lane_t, lane_t),
+                in_specs=(state_spec, lane, rep, lane),
+                out_specs=(state_spec, lane_t, lane_t, lane_t),
                 check_rep=False)
             # The chunk program additionally threads the raw (state, keys)
             # carry out (lane-sharded) and takes the replicated scalar
@@ -1404,10 +1674,21 @@ class SweepEngine:
             # (vmap over lanes, sharding propagates through jit).
             chunk = shard_map(
                 chunk, mesh=self.mesh,
-                in_specs=(lane, lane, rep, rep, rep, lane),
-                out_specs=(lane, lane, lane_t, lane_t, lane_t),
+                in_specs=(state_spec, lane, rep, rep, rep, lane),
+                out_specs=(state_spec, lane, lane_t, lane_t, lane_t),
                 check_rep=False)
-        self._run_jit = jax.jit(run)
+        if final is None:
+            self._run_jit = jax.jit(run)
+        else:
+            # finalize composes OUTSIDE any shard_map but INSIDE the same
+            # jit — it is pure layout (slice/reshape/astype), so the
+            # monolithic program's results are unchanged, and under a
+            # "model" mesh it sees the global [S, d_pad] state to slice.
+            def run_full(state, keys, batches, sp, _run=run, _final=final):
+                st, loss, gn, metrics = _run(state, keys, batches, sp)
+                return _final(st), loss, gn, metrics
+
+            self._run_jit = jax.jit(run_full)
         self._chunk_jit = jax.jit(chunk)
         self._finalize_jit = None if final is None else jax.jit(final)
 
@@ -1421,6 +1702,7 @@ class SweepEngine:
                 "chunk_rounds": int(self.chunk_rounds),
                 "exec_lanes": int(self._num + self._pad),
                 "eval_every": int(self.eval_every),
+                "model_shards": int(self.plan.model_shards),
                 "names": list(self.spec.names)}
 
     def _save_checkpoint(self, t_next, rounds, state, keys,
@@ -1507,8 +1789,18 @@ class SweepEngine:
         keys = jnp.asarray(saved["carry"]["keys"])
         if self.mesh is not None:
             lane = lane_sharding(self.mesh)
-            state = jax.tree_util.tree_map(
-                lambda x: put_with_sharding(x, lane), state)
+            if self._ms is not None:
+                # Same model-aware placement as run(): the saved carry was
+                # fetched at the padded width, so it re-lands column-sharded.
+                wsh = sweep_state_sharding(self.mesh)
+                if self.spec.any_markov:
+                    state = (put_with_sharding(state[0], wsh),
+                             put_with_sharding(state[1], lane))
+                else:
+                    state = put_with_sharding(state, wsh)
+            else:
+                state = jax.tree_util.tree_map(
+                    lambda x: put_with_sharding(x, lane), state)
             keys = put_with_sharding(keys, lane)
         blocks = saved["blocks"]
         return (t_start, state, keys, [blocks["loss"]],
@@ -1630,6 +1922,12 @@ class SweepEngine:
         num, total = self._num, self._num + self._pad
         if self.flat_state:
             state, _ = flatten_worker_grads(params0, batch_dims=1)  # [S, D] f32
+            if self._ms is not None:
+                # Model sharding: zero-pad D to shards * d_loc ONCE, pre-jit;
+                # ghost columns stay exactly zero for the whole run (the scan
+                # body re-masks every aggregate).  pad_cols acts on the last
+                # axis so it commutes with the lane permute/pad below (axis 0).
+                state = self._ms.pad_cols(state)
         else:
             state = params0
         if self.spec.any_markov:
@@ -1652,8 +1950,19 @@ class SweepEngine:
         if self.mesh is not None:
             lane = lane_sharding(self.mesh)
             rep = replicated_sharding(self.mesh)
-            state = jax.tree_util.tree_map(
-                lambda x: put_with_sharding(x, lane), state)
+            if self._ms is not None:
+                # The flat [S, d_pad] state splits its column axis over
+                # "model"; the Markov h tuple element (no D axis) stays
+                # lane-sharded like every other operand.
+                wsh = sweep_state_sharding(self.mesh)
+                if self.spec.any_markov:
+                    state = (put_with_sharding(state[0], wsh),
+                             put_with_sharding(state[1], lane))
+                else:
+                    state = put_with_sharding(state, wsh)
+            else:
+                state = jax.tree_util.tree_map(
+                    lambda x: put_with_sharding(x, lane), state)
             keys = put_with_sharding(keys, lane)
             sp = jax.tree_util.tree_map(
                 lambda x: put_with_sharding(x, lane), sp)

@@ -41,17 +41,22 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_sweep_mesh(num_devices: Optional[int] = None,
-                    worker_shards: int = 1) -> Mesh:
+                    worker_shards: int = 1,
+                    model_shards: int = 1) -> Mesh:
     """Sweep mesh: 1-D ("data",) over the scenario-lane axis by default;
     worker_shards=W > 1 adds a ("workers",) axis that the [S, U, D]
     gradient slab's worker axis shards over (the OTA combine becomes a psum
-    over worker shards — see fl/sweep.py).
+    over worker shards — see fl/sweep.py); model_shards=M > 1 adds a
+    ("model",) axis that the flat [S, D] state's (and slab's) D axis shards
+    over — D is padded to a multiple of M * TILE_D pre-jit and the OTA
+    combine / stats / column-wise screening run shard-local over D.
 
-    Shapes: worker_shards=1 keeps the 1-D ("data",) mesh (every prior
-    caller unchanged); worker_shards=num_devices is a 1-D ("workers",)
-    mesh (all parallelism spent on the worker axis); anything in between
-    is a 2-D ("data", "workers") mesh with num_devices // worker_shards
-    lane shards.
+    Shapes: with worker_shards=1 and model_shards=1 the mesh is the 1-D
+    ("data",) lane mesh (every prior caller unchanged).  Otherwise the
+    device count factors as data x W x M with the axes always ordered
+    ("data", "workers", "model") and size-1 axes dropped — e.g. (8, W=4)
+    is the 2x4 ("data", "workers") mesh, (8, M=8) the 1-D ("model",) mesh,
+    and (8, W=2, M=2) the 2x2x2 ("data", "workers", "model") mesh.
 
     num_devices=None uses every visible device.  On CPU hosts pair with
     XLA_FLAGS=--xla_force_host_platform_device_count=N (set before any jax
@@ -61,15 +66,18 @@ def make_sweep_mesh(num_devices: Optional[int] = None,
     n = len(devices) if num_devices is None else num_devices
     assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
     assert worker_shards >= 1, worker_shards
-    if worker_shards == 1:
+    assert model_shards >= 1, model_shards
+    if worker_shards == 1 and model_shards == 1:
         return Mesh(np.asarray(devices[:n]), ("data",))
-    assert n % worker_shards == 0, (
-        f"num_devices={n} not divisible by worker_shards={worker_shards}")
-    if worker_shards == n:
-        return Mesh(np.asarray(devices[:n]), ("workers",))
-    return Mesh(np.asarray(devices[:n]).reshape(n // worker_shards,
-                                                worker_shards),
-                ("data", "workers"))
+    assert n % (worker_shards * model_shards) == 0, (
+        f"num_devices={n} not divisible by worker_shards={worker_shards} * "
+        f"model_shards={model_shards}")
+    dims = (("data", n // (worker_shards * model_shards)),
+            ("workers", worker_shards), ("model", model_shards))
+    kept = tuple((a, s) for a, s in dims if s > 1)
+    shape = tuple(s for _, s in kept)
+    axes = tuple(a for a, _ in kept)
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
 def make_debug_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
@@ -86,6 +94,15 @@ def lane_sharding(mesh: Mesh) -> NamedSharding:
     spec = (PartitionSpec("data") if "data" in mesh.axis_names
             else PartitionSpec())
     return NamedSharding(mesh, spec)
+
+
+def sweep_state_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for the flat [S, D(+pad)] sweep state: lane axis over "data",
+    flat-parameter axis over "model" (see `launch.sharding.sweep_state_spec`
+    for the padding contract)."""
+    # Lazy import: launch.sharding imports from this module at top level.
+    from repro.launch.sharding import sweep_state_spec
+    return NamedSharding(mesh, sweep_state_spec(mesh))
 
 
 def replicated_sharding(mesh: Mesh) -> NamedSharding:

@@ -54,6 +54,18 @@ def fsdp_augment(specs, params_shapes, mesh: Mesh, axis: str = "data",
     )
 
 
+def sweep_state_spec(mesh: Mesh) -> P:
+    """PartitionSpec for the sweep engine's flat [S, D(+pad)] state matrix
+    (and, prefix-wise, the [S, U, D(+pad)] gradient slab): the scenario-lane
+    axis splits over "data", the flat-parameter axis over "model".  The D
+    axis is zero-padded once, pre-jit, to a multiple of
+    model_shards * TILE_D (`fl.sweep._ModelShards`), so the "model" split is
+    always even and every shard's column block is kernel-tile aligned.
+    Axes absent from the mesh are simply unmentioned (replicated)."""
+    return P("data" if "data" in mesh.axis_names else None,
+             "model" if "model" in mesh.axis_names else None)
+
+
 def to_shardings(specs, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), specs,

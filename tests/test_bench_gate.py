@@ -108,6 +108,45 @@ def test_gate_resume_rows():
                                 for n in notes4)
 
 
+def _lm_row(unsharded=100.0, sharded=80.0, d=50000, model_shards=8):
+    row = {"d": d, "u": 8, "lanes": 2, "rounds": 3,
+           "model_shards": model_shards,
+           "unsharded": {"warm_rounds_per_sec": unsharded}}
+    if sharded is not None:
+        row["model_sharded"] = {"warm_rounds_per_sec": sharded}
+    return row
+
+
+def test_gate_lm_rows():
+    """The --lm D-scaling section gates both its unsharded and
+    model-sharded warm rows, shape-aware in (d, u, lanes, rounds,
+    model_shards)."""
+    base = _rec(engines={"flat": 100.0})
+    base["lm"] = {"D50000": _lm_row()}
+    fresh = _rec(engines={"flat": 100.0})
+    fresh["lm"] = {"D50000": _lm_row(unsharded=51.0, sharded=41.0)}
+    fails, notes = check_regressions(fresh, base, tolerance=0.5)
+    assert fails == [] and notes == []
+    # a collapsed model-sharded row fails
+    fresh["lm"]["D50000"]["model_sharded"]["warm_rounds_per_sec"] = 1.0
+    fails2, _ = check_regressions(fresh, base, tolerance=0.5)
+    assert len(fails2) == 1 and "lm/D50000/model_sharded" in fails2[0]
+    # a different device count is a different program shape: skipped
+    fresh["lm"]["D50000"]["model_shards"] = 1
+    fails3, notes3 = check_regressions(fresh, base, tolerance=0.5)
+    assert fails3 == [] and any("lm/D50000" in n for n in notes3)
+    # single-device fresh run without the sharded sub-row: skipped, noted
+    fresh["lm"]["D50000"] = _lm_row(sharded=None)
+    fails4, notes4 = check_regressions(fresh, base, tolerance=0.5)
+    assert fails4 == [] and any("lm/D50000/model_sharded" in n
+                                for n in notes4)
+    # a D missing from the fresh series: skipped, noted
+    del fresh["lm"]["D50000"]
+    fails5, notes5 = check_regressions(fresh, base, tolerance=0.5)
+    assert fails5 == [] and any("lm/D50000: not in fresh" in n
+                                for n in notes5)
+
+
 def test_gate_skips_missing_rows():
     base = _rec(engines={"flat": 100.0, "looped": 10.0},
                 defenses={"mixed": 40.0, "krum": 70.0})

@@ -259,3 +259,30 @@ def test_flat_krum_blocked_route_equivalence():
     np.testing.assert_allclose(
         got_m, np.asarray(jnp.mean(flat[jnp.asarray(order)], axis=0)),
         rtol=1e-5, atol=1e-6)
+
+
+def test_sorted_columns_large_u_fallback_never_traces_a_network(
+        monkeypatch, caplog):
+    """Regression for the silent BITONIC_MAX_U fall-through: U > 8192 must
+    route to jnp.sort WITHOUT tracing either sorting network (the unrolled
+    trace at that U is a half-million-op bomb), and must say so — one log
+    record per process, however many slabs fall back."""
+    import logging
+
+    def boom(*a, **k):
+        raise AssertionError("a sorting-network kernel was traced for a "
+                             "U > BITONIC_MAX_U slab")
+
+    monkeypatch.setattr(ops, "sort_columns", boom)
+    monkeypatch.setattr(ops, "sort_columns_bitonic", boom)
+    monkeypatch.setattr(DEF, "_sort_fallback_logged", False)
+    u = ops.BITONIC_MAX_U + 1
+    x = jax.random.normal(jax.random.PRNGKey(0), (u, 4))
+    with caplog.at_level(logging.WARNING, logger="repro.core.defenses"):
+        got = DEF.sorted_columns(x, use_kernel=True, interpret=True)
+        DEF.sorted_columns(x, use_kernel=True, interpret=True)  # second call
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.sort(x, axis=0)))
+    records = [r for r in caplog.records if "BITONIC_MAX_U" in r.message]
+    assert len(records) == 1          # log-once, not once-per-call
+    assert f"U={u}" in records[0].message

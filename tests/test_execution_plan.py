@@ -56,9 +56,19 @@ def test_plan_mesh_requires_flat_state():
 
 def test_plan_mesh_axis_names_validated():
     from jax.sharding import Mesh
-    bad = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    bad = Mesh(np.asarray(jax.devices()[:1]), ("lanes",))
     with pytest.raises(AssertionError):
         ExecutionPlan(mesh=bad)
+    # Axis ORDER is part of the contract: ("model", "data") is rejected
+    # even though both names are legal.
+    bad_order = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                     ("model", "data"))
+    with pytest.raises(AssertionError):
+        ExecutionPlan(mesh=bad_order)
+    # A 1-D ("model",) mesh is legal since the model-sharding PR; the
+    # model_shards knob is derived from it.
+    ok = ExecutionPlan(mesh=Mesh(np.asarray(jax.devices()[:1]), ("model",)))
+    assert ok.model_shards == 1
 
 
 def test_plan_worker_shards_need_matching_mesh():

@@ -176,3 +176,86 @@ def test_decode_attention_masks_future():
     v2 = v.at[:, 101:].set(-99.0)
     out2 = ops.decode_attention(q, k2, v2, pos, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# ------------------------------------------------ threshold-routing contracts
+# The production engines auto-route to the Pallas kernels on TPU once the
+# flat gradient crosses a static size threshold (BATCHED_KERNEL_MIN_D = 2^16
+# for the fused FLOA step, SORT_KERNEL_MIN_D = 2^14 for the screening sort).
+# The LM sweep lane (D ~ 3e6) lives far past both, so the kernel == oracle
+# contract is pinned at D just below / at / above each threshold — the exact
+# sizes where a routing regression would flip the implementation.
+
+
+@pytest.mark.parametrize("d", [(1 << 16) - 1, 1 << 16, (1 << 16) + 1])
+def test_floa_step_batched_kernel_oracle_at_routing_threshold(d):
+    from repro.core.aggregation import BATCHED_KERNEL_MIN_D, batched_floa_step
+    assert BATCHED_KERNEL_MIN_D == 1 << 16
+    s, u = 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(d), 7)
+    w = jax.random.normal(ks[0], (s, d))
+    coeffs = jax.random.normal(ks[1], (s, u))
+    grads = jax.random.normal(ks[2], (s, u, d))
+    noise = jax.random.normal(ks[3], (s, d))
+    bias = jax.random.normal(ks[4], (s,))
+    eps = jax.random.normal(ks[5], (s,))
+    alpha = jax.random.uniform(ks[6], (s,), minval=0.01, maxval=0.2)
+    wn, gg = batched_floa_step(w, alpha, coeffs, grads, noise, bias, eps,
+                               use_kernel=True, interpret=True)
+    wr, gr = batched_floa_step(w, alpha, coeffs, grads, noise, bias, eps,
+                               use_kernel=False)
+    assert wn.shape == (s, d) and gg.shape == (s, d)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(wr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gg), np.asarray(gr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("d", [(1 << 14) - 1, 1 << 14, (1 << 14) + 1,
+                               (1 << 16) - 1, 1 << 16, (1 << 16) + 1])
+def test_grad_stats_kernel_oracle_at_routing_thresholds(d):
+    """The standardization-stats kernel feeds the same engines, so its
+    oracle contract is pinned across both routing thresholds too."""
+    u = 6
+    g = jax.random.normal(jax.random.PRNGKey(d), (u, d)) * 0.7
+    got = ops.grad_stats(g, interpret=True)
+    want = ops.grad_stats_ref(g)
+    assert got.shape == (u, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("u", [8, 64])   # unrolled network / bitonic stages
+@pytest.mark.parametrize("d", [(1 << 14) - 1, 1 << 14, (1 << 14) + 1])
+def test_sorted_columns_kernel_oracle_at_routing_threshold(u, d):
+    from repro.core.defenses import SORT_KERNEL_MIN_D, sorted_columns
+    assert SORT_KERNEL_MIN_D == 1 << 14
+    x = jax.random.normal(jax.random.PRNGKey(u + d), (u, d))
+    got = sorted_columns(x, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.sort(x, axis=0)))
+
+
+def test_routing_predicate_resolves_off_tpu():
+    """use_kernel=None must resolve False off-TPU at ANY size (CPU hosts
+    would otherwise drop into interpret-mode Pallas on the hot path); the
+    oracle route is the same function the kernels are pinned against."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("predicate under test is the off-TPU resolution")
+    from repro.core.aggregation import batched_floa_combine
+    from repro.core.defenses import sorted_columns
+    from repro.kernels import ref
+    s, u, d = 1, 3, (1 << 16) + 5
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    coeffs = jax.random.normal(ks[0], (s, u))
+    grads = jax.random.normal(ks[1], (s, u, d))
+    noise = jax.random.normal(ks[2], (s, d))
+    bias = jax.random.normal(ks[3], (s,))
+    eps = jax.random.normal(ks[4], (s,))
+    np.testing.assert_array_equal(
+        np.asarray(batched_floa_combine(coeffs, grads, noise, bias, eps)),
+        np.asarray(ref.floa_aggregate_batched_ref(coeffs, grads, noise,
+                                                  bias, eps)))
+    x = grads[0, :, : (1 << 14) + 5]
+    np.testing.assert_array_equal(np.asarray(sorted_columns(x)),
+                                  np.asarray(jnp.sort(x, axis=0)))

@@ -1,0 +1,155 @@
+"""The real-model LM sweep lane: a shrunk qwen3-shaped transformer trained
+on the Markov token stream THROUGH the sweep engine (configs.qwen3_4b
+.lm_sweep feeding `SweepEngine` flat-state lanes — the path
+examples/train_floa_lm.py drives).
+
+Fast tier-1 tests run a ~70k-param shrink of the same config: the engine's
+behavioral contract (no-attack FLOA reduces the LM loss; Thm-1 sign-flip
+attackers push it UP; coordinate-median screening of the same attack
+recovers descent) is scale-free, so it is pinned where it is cheap.  The
+slow marker runs the production-shaped config (D ~ 3.0M — past the 2^16
+fused-step and 2^14 sort kernel-routing thresholds) end to end.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.configs.registry import flat_param_dim, get_lm_sweep
+from repro.core import (
+    AttackConfig,
+    AttackType,
+    ChannelConfig,
+    DefenseSpec,
+    FLOAConfig,
+    Policy,
+    PowerConfig,
+    first_n_mask,
+)
+from repro.data import stack_token_rounds
+from repro.fl import ExecutionPlan, ScenarioCase, SweepEngine, SweepSpec
+from repro.launch.mesh import make_sweep_mesh
+from repro.models.transformer import init_lm, lm_loss
+
+U, BATCH, SEQ, N_ATK, LR = 8, 2, 48, 3, 0.3
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(see the CI sweep-sharded job)")
+
+
+def tiny_lm_cfg():
+    """The lm_sweep config shrunk to D ~ 70k: same family, same blocks,
+    seconds-scale on a CPU device."""
+    return dataclasses.replace(
+        get_lm_sweep(), n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256)
+
+
+def lm_problem(cfg, rounds):
+    dim = flat_param_dim(cfg)
+
+    def floa(policy, attack, n, noise=0.05):
+        return FLOAConfig(
+            channel=ChannelConfig(num_workers=U, sigma=1.0,
+                                  noise_std=0.0 if policy == Policy.EF
+                                  else noise),
+            power=PowerConfig(num_workers=U, dim=dim, p_max=1.0,
+                              policy=policy),
+            attack=AttackConfig(attack=attack if n else AttackType.NONE,
+                                byzantine_mask=first_n_mask(U, n)))
+
+    cases = [
+        ScenarioCase("clean", floa(Policy.BEV, AttackType.NONE, 0),
+                     LR, seed=1),
+        ScenarioCase("signflip", floa(Policy.CI, AttackType.STRONGEST, N_ATK),
+                     LR, seed=2),
+        ScenarioCase("median", floa(Policy.EF, AttackType.STRONGEST, N_ATK,
+                                    noise=0.0),
+                     LR, seed=3, defense=DefenseSpec(name="median")),
+    ]
+    batches = {"tokens": stack_token_rounds(
+        rounds, U * BATCH, SEQ + 1, cfg.vocab_size, seed=0)}
+    params0, _ = init_lm(jax.random.PRNGKey(0), cfg)
+    return (lambda p, b: lm_loss(p, b, cfg)), params0, batches, \
+        SweepSpec.build(cases)
+
+
+def _lane(res, name):
+    return res.loss[list(res.names).index(name)]
+
+
+def _check_separation(res, rounds):
+    """The paper's qualitative story, lane by lane."""
+    tail = max(1, rounds // 6)
+    clean = _lane(res, "clean")
+    atk = _lane(res, "signflip")
+    med = _lane(res, "median")
+    assert np.isfinite(res.loss).all()
+    # No-attack FLOA makes progress on the LM objective.
+    assert np.mean(clean[-tail:]) < clean[0]
+    # Thm-1 sign-flip attackers degrade the undefended analog lane: it ends
+    # above both its own start and the clean lane's end.
+    assert np.mean(atk[-tail:]) > atk[0]
+    assert np.mean(atk[-tail:]) > np.mean(clean[-tail:])
+    # Median screening of the SAME attack recovers descent.
+    assert np.mean(med[-tail:]) < med[0]
+    assert np.mean(med[-tail:]) < np.mean(atk[-tail:])
+
+
+def test_lm_lane_attack_and_screening_separation():
+    """Tier-1: 30 FLOA rounds of the tiny LM in one compiled sweep — loss
+    decreases clean, degrades under sign-flip, recovers under median."""
+    rounds = 30
+    loss, params0, batches, spec = lm_problem(tiny_lm_cfg(), rounds)
+    res = SweepEngine(loss, spec).run(params0, batches)
+    assert res.loss.shape == (3, rounds)
+    _check_separation(res, rounds)
+
+
+def test_lm_lane_chunked_matches_monolithic():
+    """The LM lane composes with scan-of-chunks execution bitwise (same
+    compiled round math, different dispatch granularity)."""
+    rounds = 6
+    loss, params0, batches, spec = lm_problem(tiny_lm_cfg(), rounds)
+    mono = SweepEngine(loss, spec).run(params0, batches)
+    chunked = SweepEngine(loss, spec, plan=ExecutionPlan(chunk_rounds=3)
+                          ).run(params0, batches)
+    np.testing.assert_array_equal(chunked.loss, mono.loss)
+    np.testing.assert_array_equal(chunked.grad_norm, mono.grad_norm)
+
+
+@needs_8_devices
+def test_lm_lane_model_sharded_matches_unsharded():
+    """The tiny LM's flat state (D ~ 70k, far from a TILE_D multiple)
+    sharded over ("model",): trajectories match the unsharded engine."""
+    rounds = 6
+    loss, params0, batches, spec = lm_problem(tiny_lm_cfg(), rounds)
+    un = SweepEngine(loss, spec).run(params0, batches)
+    sh = SweepEngine(loss, spec, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(8, model_shards=4))).run(params0, batches)
+    np.testing.assert_allclose(sh.loss, un.loss, rtol=5e-5, atol=1e-5)
+    np.testing.assert_allclose(sh.grad_norm, un.grad_norm,
+                               rtol=5e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_lm_lane_production_d_end_to_end():
+    """The full lm_sweep config (D ~ 3.0M) through the engine: one compiled
+    sweep at a D past every kernel-routing threshold, finite and ordered
+    the same way as the tiny shrink."""
+    cfg = get_lm_sweep()
+    dim = flat_param_dim(cfg)
+    assert dim >= 1 << 21
+    rounds = 8
+    loss, params0, batches, spec = lm_problem(cfg, rounds)
+    res = SweepEngine(loss, spec).run(params0, batches)
+    assert res.loss.shape == (3, rounds)
+    assert np.isfinite(res.loss).all() and np.isfinite(res.grad_norm).all()
+    # 8 rounds is enough for ordering, not convergence: the attacked lane
+    # must already sit above the clean lane.
+    assert res.loss[1, -1] > res.loss[0, -1]

@@ -1,6 +1,17 @@
 """Per-architecture smoke tests (deliverable f): reduced variant of every
 assigned architecture runs one forward + one train step on CPU; output shapes
-and finiteness asserted."""
+and finiteness asserted.
+
+Two tiers.  The slow full-zoo sweep compiles a train step per architecture
+(minutes).  The FAST tier runs every round of `pytest -m "not slow"`: the
+registry contract (every named config builds and reports its flat D — the
+sweep engine's state-row width) plus forward-shape and finite-grad checks
+for the two model families the FL engines actually flatten today, the
+transformer LM lane (qwen3_4b.lm_sweep shrunk to toy dims) and the paper's
+MLP, at seconds scale.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +20,7 @@ import pytest
 jax.config.update("jax_threefry_partitionable", True)
 
 from repro.configs import ARCH_IDS, get_smoke
+from repro.configs.registry import PAPER_MLP, flat_param_dim, get_lm_sweep
 from repro.models import encdec as ED
 from repro.models import transformer as T
 
@@ -26,6 +38,71 @@ def _batch(cfg):
         batch["frames"] = jax.random.normal(
             jax.random.PRNGKey(3), (B, 16, cfg.frontend.feature_dim))
     return batch
+
+
+# --------------------------------------------------------------- fast tier
+
+
+def test_registry_every_named_config_builds_and_reports_flat_d():
+    """Every named config builds its smoke variant and reports a positive
+    flat parameter count D (allocation-free shape_only init) — the width
+    the sweep engine's [S, D] state row would take for that architecture."""
+    dims = {}
+    for arch in ARCH_IDS:
+        cfg = get_smoke(arch)
+        d = flat_param_dim(cfg)
+        assert d > 0, arch
+        dims[arch] = d
+    assert len(dims) == len(ARCH_IDS) == 10
+    # The paper's own MLP reports through its config dataclass (§IV:
+    # 784-64-10 -> D = 50890), not the zoo's init path.
+    assert PAPER_MLP.full().dim == 50890
+    # The LM sweep lane sits past BOTH kernel-routing thresholds.
+    assert flat_param_dim(get_lm_sweep()) >= 1 << 21
+
+
+def _toy_lm_cfg():
+    return dataclasses.replace(
+        get_lm_sweep(), n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+        head_dim=16, d_ff=64, vocab_size=64)
+
+
+def test_fast_transformer_forward_shape_and_finite_grad():
+    """Tier-1 zoo coverage for the family the LM lane trains: toy-dim
+    qwen3-shaped transformer, forward shape + finite nonzero grads,
+    no train-step compile."""
+    cfg = _toy_lm_cfg()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 17), 0,
+                              cfg.vocab_size)
+    params, _ = T.init_lm(KEY, cfg)
+    logits, _ = T.forward(params, toks, cfg)
+    assert logits.shape == (B, 17, cfg.padded_vocab)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.lm_loss(p, {"tokens": toks}, cfg))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_fast_paper_mlp_forward_shape_and_finite_grad():
+    """Same fast contract for the paper's MLP family (models are plain
+    param pytrees; the loss is the §IV cross-entropy)."""
+    from repro.models.mlp import init_mlp, mlp_loss
+    cfg = PAPER_MLP.smoke()
+    params = init_mlp(KEY, d_in=cfg.d_in, d_hidden=cfg.d_hidden,
+                      n_classes=cfg.n_classes)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, cfg.d_in))
+    y = jax.random.randint(jax.random.PRNGKey(3), (B,), 0, cfg.n_classes)
+    loss, grads = jax.value_and_grad(
+        lambda p: mlp_loss(p, {"x": x, "y": y}))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g)))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+# ---------------------------------------------------------- slow full zoo
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

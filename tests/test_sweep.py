@@ -379,6 +379,38 @@ def test_flat_scalar_stats_matches_tree_stats():
                                    rtol=1e-6, atol=1e-7)
 
 
+def test_flat_partial_stats_recombine_and_ignore_zero_padding():
+    """The model-sharded stats contract: column-block partial sums, summed
+    across shards and finished by `stats_from_partials` with the REAL D,
+    reproduce the unsharded `flat_scalar_stats`; zero ghost-pad columns
+    contribute exactly nothing."""
+    import repro.core.standardize as STD
+
+    rng = np.random.default_rng(1)
+    u, d, pad, shards = 5, 37, 11, 4
+    flat = jnp.asarray(rng.normal(size=(u, d)).astype(np.float32))
+    padded = jnp.pad(flat, ((0, 0), (0, pad)))
+    d_loc = (d + pad) // shards
+    s1 = jnp.zeros((u,), jnp.float32)
+    s2 = jnp.zeros((u,), jnp.float32)
+    for m in range(shards):
+        p1, p2 = STD.flat_partial_stats(
+            padded[:, m * d_loc:(m + 1) * d_loc])
+        s1, s2 = s1 + p1, s2 + p2
+    gbar, eps2 = STD.stats_from_partials(s1, s2, d)
+    gbar_ref, eps2_ref = STD.flat_scalar_stats(flat)
+    np.testing.assert_allclose(np.asarray(gbar), np.asarray(gbar_ref),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(eps2), np.asarray(eps2_ref),
+                               rtol=1e-6, atol=1e-7)
+    # Whole-row partials (single shard, no padding) finish to the same
+    # values exactly — the epilogue is the identical mean/floor math.
+    w1, w2 = STD.flat_partial_stats(flat)
+    g2, e2 = STD.stats_from_partials(w1, w2, d)
+    np.testing.assert_array_equal(np.asarray(g2), np.asarray(gbar_ref))
+    np.testing.assert_array_equal(np.asarray(e2), np.asarray(eps2_ref))
+
+
 def test_scenario_pad_lanes():
     cfgs = [_floa(Policy.CI, AttackType.NONE, 0),
             _floa(Policy.BEV, AttackType.STRONGEST, 2)]

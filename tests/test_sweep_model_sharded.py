@@ -1,0 +1,191 @@
+"""Model-axis-sharded sweep engine: ("model",)-sharded == unsharded.
+
+The flat [S, D] state's (and the [S, U, D] gradient slab's) D axis shards
+over a ("model",) mesh axis (`ExecutionPlan(mesh=make_sweep_mesh(n,
+model_shards=M))`): D is zero-padded once, pre-jit, to a multiple of
+M * TILE_D, each shard runs the OTA combine / column-wise screening on its
+own column block, standardization stats psum per-shard partial sums, and
+row-geometry defenses (Krum family, geometric median) all-gather full rows.
+These tests pin the contract:
+
+  - every lane's trajectory matches the unsharded engine (rtol ~1e-6), on
+    1-D ("model",) meshes and composed 2-D / 3-D meshes with the "data" and
+    "workers" axes, for pure-FLOA, jamming, and mixed-defense grids,
+    composed with chunking and the switch dispatch reference;
+  - D % (M * TILE_D) != 0 ghost columns (zero-filled, re-masked every
+    round) never perturb any real coordinate;
+  - under strict_numerics the engine all-gathers full rows and replays the
+    unsharded reduction order verbatim — bitwise equality;
+  - a model-sharded checkpointed run resumes bit-identically.
+
+Multi-device cases need fake host devices; the CI `sweep-sharded` job runs
+this module with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+(set before any jax import).  Under plain tier-1 (1 device) they skip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+from repro.fl import ExecutionPlan, SweepEngine, SweepSpec
+from repro.kernels.floa_aggregate import TILE_D
+from repro.launch.mesh import make_sweep_mesh
+from test_sweep_workers import (
+    _assert_lanes_match,
+    _eval_fn,
+    analog_cases,
+    mixed_cases,
+    worker_problem,
+)
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(see the CI sweep-sharded job)")
+
+
+@needs_8_devices
+@pytest.mark.parametrize("m", [2, 4, 8])
+def test_model_sharded_matches_unsharded_analog(m):
+    """Pure-FLOA grid (with a jamming lane): shard-local combine over
+    column blocks + partial-sum stats == the unsharded engine, on 2-D
+    ("data", "model") meshes (m < 8) and the 1-D ("model",) mesh (m == 8)."""
+    u = 8
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(analog_cases(u, dim, 6, jam_lane=True))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    mesh = make_sweep_mesh(8, model_shards=m)
+    sh = SweepEngine(loss, spec, eval_fn=_eval_fn,
+                     plan=ExecutionPlan(mesh=mesh)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_model_sharded_matches_unsharded_mixed_defenses():
+    """Mixed analog + screening grid: column-wise defenses (median /
+    trimmed-mean) run shard-local, row-geometry defenses (Krum family)
+    all-gather full rows — every lane matches unsharded."""
+    u = 10
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(mixed_cases(u, dim, 8))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    mesh = make_sweep_mesh(8, model_shards=4)    # ("data", "model") 2x4
+    sh = SweepEngine(loss, spec, eval_fn=_eval_fn,
+                     plan=ExecutionPlan(mesh=mesh)).run(params, batches)
+    _assert_lanes_match(sh, un)
+
+
+@needs_8_devices
+def test_model_sharded_ghost_column_padding():
+    """D % (M * TILE_D) != 0 — every toy D is, since D < TILE_D — pads the
+    column axis with ghost zeros; the padded width and per-shard block must
+    follow the M * TILE_D contract and no real coordinate may move."""
+    u = 6
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(mixed_cases(u, dim, 6))
+    m = 4
+    eng = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(4, model_shards=m)))
+    eng.run(params, batches)     # builds self._ms
+    assert eng._ms is not None
+    assert eng._ms.d == dim and dim % (m * TILE_D) != 0
+    assert eng._ms.d_pad == m * TILE_D          # one tile per shard
+    assert eng._ms.d_loc == TILE_D
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    _assert_lanes_match(eng.run(params, batches), un)
+
+
+@needs_8_devices
+def test_model_sharded_strict_numerics_bitwise():
+    """strict_numerics + model sharding: full rows are all-gathered and the
+    unsharded reduction replayed — trajectories are bit-identical."""
+    u = 8
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(mixed_cases(u, dim, 6))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        strict_numerics=True)).run(params, batches)
+    sh = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(8, model_shards=4),
+        strict_numerics=True)).run(params, batches)
+    np.testing.assert_array_equal(sh.loss, un.loss)
+    np.testing.assert_array_equal(sh.grad_norm, un.grad_norm)
+    for k in un.metrics:
+        np.testing.assert_array_equal(sh.metrics[k], un.metrics[k])
+    for sleaf, uleaf in zip(jax.tree_util.tree_leaves(sh.params),
+                            jax.tree_util.tree_leaves(un.params)):
+        np.testing.assert_array_equal(np.asarray(sleaf), np.asarray(uleaf))
+
+
+@needs_8_devices
+def test_model_sharded_three_axis_mesh_composition():
+    """The full 3-D ("data", "workers", "model") 2x2x2 mesh: lane sharding,
+    worker-axis psum combine, and model-axis column blocks compose in one
+    shard_mapped scan and reproduce the unsharded trajectories — as does
+    the ("workers", "model") mesh and the switch dispatch reference."""
+    u = 8
+    loss, params, dim, batches = worker_problem(u)
+    spec = SweepSpec.build(mixed_cases(u, dim, 6))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    full = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(8, worker_shards=2, model_shards=2))
+    ).run(params, batches)
+    _assert_lanes_match(full, un)
+    wm = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(8, worker_shards=4, model_shards=2))
+    ).run(params, batches)
+    _assert_lanes_match(wm, un)
+    sw = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(8, worker_shards=2, model_shards=2),
+        grouped_dispatch=False)).run(params, batches)
+    _assert_lanes_match(sw, un)
+
+
+@needs_8_devices
+def test_model_sharded_composes_with_chunking(tmp_path):
+    """Model sharding x chunked execution x checkpoint/resume: the chunked
+    model-sharded run matches the monolithic unsharded run, and a second
+    engine resuming from its checkpoints reproduces it bit-identically."""
+    u = 8
+    loss, params, dim, batches = worker_problem(u, rounds=6)
+    spec = SweepSpec.build(mixed_cases(u, dim, 6))
+    un = SweepEngine(loss, spec, eval_fn=_eval_fn).run(params, batches)
+    mesh = make_sweep_mesh(8, model_shards=2)
+    plan = ExecutionPlan(mesh=mesh, chunk_rounds=2,
+                         checkpoint_dir=str(tmp_path / "ck"))
+    ch = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=plan
+                     ).run(params, batches)
+    _assert_lanes_match(ch, un)
+    # The full run checkpointed every interior chunk boundary; a resuming
+    # engine restores the LAST one, replays only the final chunk, and must
+    # land bitwise on the uninterrupted result.
+    res = SweepEngine(loss, spec, eval_fn=_eval_fn, plan=plan
+                      ).run(params, batches, resume=True)
+    np.testing.assert_array_equal(res.loss, ch.loss)
+    np.testing.assert_array_equal(res.grad_norm, ch.grad_norm)
+    for sleaf, uleaf in zip(jax.tree_util.tree_leaves(res.params),
+                            jax.tree_util.tree_leaves(ch.params)):
+        np.testing.assert_array_equal(np.asarray(sleaf), np.asarray(uleaf))
+
+
+def test_model_plan_validation_runs_everywhere():
+    """Tier-1 (single-device) coverage: the plan rejects model_shards
+    without a matching mesh, and a degenerate model_shards=1 plan is the
+    plain engine (no _ModelShards machinery built)."""
+    u = 4
+    loss, params, dim, batches = worker_problem(u, rounds=2)
+    spec = SweepSpec.build(analog_cases(u, dim, 3))
+    with pytest.raises(ValueError, match="model_shards"):
+        ExecutionPlan(model_shards=2)
+    with pytest.raises(ValueError, match="model_shards"):
+        ExecutionPlan(model_shards=2, flat_state=False)
+    eng = SweepEngine(loss, spec, plan=ExecutionPlan(
+        mesh=make_sweep_mesh(1)))
+    un = SweepEngine(loss, spec).run(params, batches)
+    assert eng._ms is None and eng.plan.model_shards == 1
+    np.testing.assert_allclose(eng.run(params, batches).loss, un.loss,
+                               rtol=1e-6, atol=1e-7)

@@ -1,0 +1,135 @@
+"""Markov token-stream corpus (data/text.py): the LM sweep lane's input.
+
+Pins the generator's contracts — determinism in the seed, token-range and
+shape invariants, per-round independence of `stack_token_rounds` — and the
+composition with the federated pipeline: tokens dealt through
+`FederatedSampler` (including the PR-8 Dirichlet label-skew split over
+first-token classes) round-trip into the [R, U*B, S] layout
+`per_worker_grads` consumes.
+"""
+import numpy as np
+import pytest
+
+from repro.data import FederatedSampler, TokenBatcher
+from repro.data.text import (
+    make_markov_tables,
+    sample_tokens,
+    stack_token_rounds,
+)
+
+
+def test_markov_tables_deterministic_and_in_range():
+    a = make_markov_tables(vocab=97, seed=3)
+    b = make_markov_tables(vocab=97, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (97, 16)
+    assert a.min() >= 0 and a.max() < 97
+    c = make_markov_tables(vocab=97, seed=4)
+    assert not np.array_equal(a, c)
+    assert make_markov_tables(vocab=97, seed=3, branch=5).shape == (97, 5)
+
+
+def test_markov_tables_zipf_prior_skews_successors():
+    """The Zipf(1.1) successor prior must actually skew the tables: low
+    token ids (head of the prior) appear as successors far more often than
+    a uniform draw would allow."""
+    succ = make_markov_tables(vocab=512, seed=0)
+    head_share = np.mean(succ < 16)
+    assert head_share > 0.25          # uniform would give 16/512 = 0.03
+
+
+@pytest.mark.parametrize("n_seqs,seq_len,vocab", [(4, 32, 64), (1, 1, 2),
+                                                  (8, 129, 1000)])
+def test_sample_tokens_shape_dtype_range(n_seqs, seq_len, vocab):
+    toks = sample_tokens(n_seqs, seq_len, vocab, seed=1)
+    assert toks.shape == (n_seqs, seq_len)
+    assert toks.dtype == np.int32
+    assert toks.min() >= 0 and toks.max() < vocab
+
+
+def test_sample_tokens_deterministic_in_seed():
+    a = sample_tokens(6, 40, 128, seed=7)
+    np.testing.assert_array_equal(a, sample_tokens(6, 40, 128, seed=7))
+    assert not np.array_equal(a, sample_tokens(6, 40, 128, seed=8))
+
+
+def test_sample_tokens_follow_the_tables():
+    """Transitions overwhelmingly land in the sampled token's successor row
+    (only the 10% restarts escape it) — the planted structure an LM can
+    actually learn."""
+    vocab, seed = 64, 5
+    succ = make_markov_tables(vocab, seed)
+    toks = sample_tokens(16, 200, vocab, seed=seed)
+    cur, nxt = toks[:, :-1].ravel(), toks[:, 1:].ravel()
+    in_table = np.array([n in succ[c] for c, n in zip(cur, nxt)])
+    assert in_table.mean() > 0.8
+
+
+def test_stack_token_rounds_layout_and_per_round_independence():
+    r, n, s, v = 5, 6, 20, 128
+    stack = stack_token_rounds(r, n, s, v, seed=3)
+    assert stack.shape == (r, n, s) and stack.dtype == np.int32
+    # Round t is exactly sample_tokens at seed + t ...
+    for t in range(r):
+        np.testing.assert_array_equal(stack[t],
+                                      sample_tokens(n, s, v, seed=3 + t))
+    # ... so consecutive rounds are genuinely different draws.
+    assert not np.array_equal(stack[0], stack[1])
+
+
+def test_token_batcher_over_markov_stream():
+    """TokenBatcher + sample_tokens: the train-step input layout ([B, S+1]
+    under the "tokens" key), fresh batch per step."""
+    bt = TokenBatcher(lambda b, s: sample_tokens(b, s, 64, seed=0),
+                      global_batch=4, seq_len=16)
+    first = next(bt)
+    assert set(first) == {"tokens"} and first["tokens"].shape == (4, 17)
+    assert bt.step == 1
+
+
+def test_federated_sampler_over_tokens_round_trip():
+    """Tokens dealt as per-worker shards through FederatedSampler come back
+    in worker-major order: batch.reshape(U, B, S) recovers each worker's
+    own sequences (the per_worker_grads layout), and a same-seed sampler
+    replays the identical stream."""
+    u, bpw, s, v = 4, 3, 12, 64
+    pool = sample_tokens(40, s, v, seed=2)
+    labels = pool[:, 0].astype(np.int64)
+    shards = {i: (pool[i * 10:(i + 1) * 10], labels[i * 10:(i + 1) * 10])
+              for i in range(u)}
+    smp = FederatedSampler(shards, batch_per_worker=bpw, seed=9)
+    batch = smp.next_round()
+    assert batch["x"].shape == (u * bpw, s)
+    by_worker = batch["x"].reshape(u, bpw, s)
+    for i in range(u):
+        pool_i = {tuple(row) for row in shards[i][0]}
+        for row in by_worker[i]:
+            assert tuple(row) in pool_i
+    replay = FederatedSampler(shards, batch_per_worker=bpw, seed=9)
+    np.testing.assert_array_equal(replay.next_round()["x"], batch["x"])
+
+
+def test_dirichlet_split_composes_with_token_stream():
+    """PR-8 composition: a Dirichlet label-skew split over first-token
+    classes feeds the same stacked [R, U*B, S] layout the sweep engine
+    consumes, deterministically."""
+    u, bpw, s, v, rounds = 4, 2, 10, 16, 3
+    pool = sample_tokens(64, s, v, seed=1)
+    labels = pool[:, 0].astype(np.int64)
+    smp = FederatedSampler.dirichlet(pool, labels, num_workers=u, alpha=0.5,
+                                     batch_per_worker=bpw, seed=11)
+    stack = smp.stack_rounds(rounds)
+    assert stack["x"].shape == (rounds, u * bpw, s)
+    assert stack["x"].min() >= 0 and stack["x"].max() < v
+    replay = FederatedSampler.dirichlet(pool, labels, num_workers=u,
+                                        alpha=0.5, batch_per_worker=bpw,
+                                        seed=11)
+    np.testing.assert_array_equal(replay.stack_rounds(rounds)["x"],
+                                  stack["x"])
+    # alpha -> 0 concentrates: some worker's shard must be label-skewed
+    # away from the global first-token distribution.
+    skew = FederatedSampler.dirichlet(pool, labels, num_workers=u,
+                                      alpha=0.05, batch_per_worker=bpw,
+                                      seed=11)
+    sizes = sorted(len(x) for x, _ in skew.shards.values())
+    assert sizes[0] < sizes[-1]
